@@ -1,0 +1,91 @@
+"""Benchmark orchestrator: one entry per paper table/figure + roofline.
+
+    PYTHONPATH=src python -m benchmarks.run               # quick profile
+    PYTHONPATH=src python -m benchmarks.run --full        # paper-length runs
+    PYTHONPATH=src python -m benchmarks.run --only fig3a,roofline
+
+Prints CSV rows ``bench,series,metric,value`` and writes per-benchmark
+JSON to benchmarks/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def _bench_fig3a(full):
+    from benchmarks import accuracy_cycles
+    return accuracy_cycles.main(cycles=50 if full else 16)
+
+
+def _bench_fig3b(full):
+    from benchmarks import quant_sweep
+    return quant_sweep.main(cycles=7 if full else 5)
+
+
+def _bench_fig3c(full):
+    from benchmarks import snr_sweep
+    return snr_sweep.main(cycles=10 if full else 6)
+
+
+def _bench_fig3d(full):
+    from benchmarks import fading
+    return fading.main(cycles=20 if full else 12)
+
+
+def _bench_table2(full):
+    from benchmarks import table2
+    return table2.main(cycles=20 if full else 12)
+
+
+def _bench_roofline(full):
+    from benchmarks import roofline
+    return roofline.main()
+
+
+def _bench_extensions(full):
+    from benchmarks import extensions
+    return extensions.main(full)
+
+
+BENCHES = {
+    "fig3a": _bench_fig3a,
+    "fig3b": _bench_fig3b,
+    "fig3c": _bench_fig3c,
+    "fig3d": _bench_fig3d,
+    "table2": _bench_table2,
+    "roofline": _bench_roofline,
+    "extensions": _bench_extensions,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-length cycle counts")
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args()
+    names = [n for n in args.only.split(",") if n] or list(BENCHES)
+
+    failures = []
+    for name in names:
+        t0 = time.time()
+        print(f"# --- {name} ---", flush=True)
+        try:
+            for row in BENCHES[name](args.full):
+                print(row, flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failures:
+        print(f"# FAILED: {','.join(failures)}", flush=True)
+        sys.exit(1)
+    print("# all benchmarks OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

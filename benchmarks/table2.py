@@ -1,0 +1,147 @@
+"""Table II — total bits / accuracy / reconstruction error / computation
+energy / communication energy / total energy for Central, FL Q8, SL.
+
+Paper claims validated (relative — dataset is reduced, see common.py):
+  privacy ordering: recon_err(SL) >> recon_err(FL) >> recon_err(CL)
+  user-compute ordering: comp(SL) << comp(FL); comp(CL) = 0
+  comm ordering: comm(SL) >> comm(CL) >> comm(FL)
+  bits ordering: bits(SL) >> bits(CL) >> bits(FL)
+
+Accounting notes (EXPERIMENTS.md §Repro):
+  * paper's 0.72 Mbit FL entry = exactly ONE 8-bit upload of the 89,673
+    params; we report both per-cycle and total-run payloads.
+  * paper's 2580.48 Mbit SL entry = 720k samples x 112 floats x 16 bit x 2
+    (up + down) = one epoch; our figure scales with the reduced corpus.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from benchmarks.common import (CFG, N_TRAIN, train_cl, train_fl, train_sl)
+from repro.core import energy as EN
+from repro.core import privacy as PRIV
+from repro.configs.base import WirelessConfig
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+PAPER_N_TRAIN = 1_440_000       # 90% of the halved 1.6M corpus
+
+
+def _norm(tokens: np.ndarray) -> np.ndarray:
+    return tokens.astype(np.float32) / float(CFG.vocab_size)
+
+
+def run(cycles: int = 20, fl_cycles: int = 7, seed: int = 0) -> dict:
+    wcl = WirelessConfig(mode="cl", snr_db=20.0)
+    wfl = WirelessConfig(mode="fl", quant_bits=8, snr_db=20.0)
+    wsl = WirelessConfig(mode="sl", quant_bits=16, snr_db=20.0)
+
+    cl = train_cl(cycles=cycles, wcfg=wcl, seed=seed, capture=True)
+    fl = train_fl(cycles=fl_cycles, wcfg=wfl, seed=seed, capture=True)
+    sl = train_sl(cycles=max(cycles, 35), wcfg=wsl, seed=seed, capture=True)
+
+    key = jax.random.PRNGKey(seed + 11)
+
+    # ---- privacy (Eq. 12): adversary reconstructs normalized raw input
+    # CL: the received data IS the observation (direct read)
+    err_cl = PRIV.direct_error(_norm(cl.captures["received"][:4096]),
+                               _norm(cl.captures["original"][:4096]))
+    # FL: adversary decoder from received per-user weight-delta uploads.
+    # The paper's autoencoder protocol is underspecified, so BOTH
+    # readings are evaluated (EXPERIMENTS.md §Repro privacy note):
+    #   A. dataset-statistic reconstruction — target = the user-shard
+    #      mean token vector (aggregate leakage; near-deterministic
+    #      target, so the error is epsilon-small)
+    #   B. per-sample reconstruction — the same observation paired with
+    #      individual samples of that user's shard (the protocol the SL
+    #      and CL numbers use)
+    deltas = np.concatenate(fl.captures["deltas"], axis=0)
+    targets = np.concatenate(fl.captures["targets"], axis=0)
+    # fixed random projection: 89k-dim uploads -> 1024-dim adversary input
+    rngp = np.random.default_rng(0)
+    proj = rngp.standard_normal((deltas.shape[1], 1024)).astype(np.float32)
+    proj /= np.sqrt(deltas.shape[1])
+    err_fl_stat = PRIV.reconstruction_error(
+        key, deltas @ proj, _norm(targets), steps=600)
+    # protocol B: pair each (user, cycle) delta with individual samples
+    from repro.data.sentiment import partition_users
+    from benchmarks.common import corpus
+    (xtr, _), _ = corpus()
+    shards = partition_users(xtr, np.zeros(len(xtr), np.int32), 3)
+    obs_b, tgt_b = [], []
+    per = 64
+    n_cycles = len(fl.captures["deltas"])
+    for c in range(n_cycles):
+        for u in range(3):
+            idx = rngp.integers(0, len(shards[u][0]), per)
+            obs_b.append(np.repeat(
+                (fl.captures["deltas"][c][u] @ proj)[None], per, axis=0))
+            tgt_b.append(shards[u][0][idx])
+    err_fl = PRIV.reconstruction_error(
+        key, np.concatenate(obs_b), _norm(np.concatenate(tgt_b)),
+        steps=600)
+    # SL: adversary decoder from received compressed smashed activations
+    obs = np.concatenate(sl.captures["smashed"], axis=0)
+    orig = np.concatenate(sl.captures["original"], axis=0)
+    n = min(len(obs.reshape(len(obs), -1)), 20_000)
+    err_sl = PRIV.reconstruction_error(
+        key, obs.reshape(len(obs), -1)[:n], _norm(orig)[:n], steps=600)
+
+    # ---- energy
+    scale = PAPER_N_TRAIN / N_TRAIN            # corpus-reduction factor
+    rows = {}
+    for name, res, wcfg, err in (("central", cl, wcl, err_cl),
+                                 ("fl_q8", fl, wfl, err_fl),
+                                 ("sl_early_cut", sl, wsl, err_sl)):
+        comp_j = EN.comp_energy_j(res.user_flops, "edge")
+        comm_j = EN.comm_energy_j(res.total_bits, wcfg)
+        if name == "fl_q8":
+            rows.setdefault("fl_q8_extra", {})[
+                "recon_error_statistic"] = float(err_fl_stat)
+        rows[name] = {
+            "total_bits_M": res.total_bits / 1e6,
+            "total_bits_M_paper_scale": res.total_bits * scale / 1e6,
+            "accuracy": res.final_accuracy,
+            "recon_error": float(err),
+            "comp_energy_j": comp_j,
+            "comm_energy_j": comm_j,
+            "total_energy_j": comp_j + comm_j,
+            "co2_kg": EN.co2_kg(comp_j + comm_j),
+        }
+    return rows
+
+
+def main(cycles: int = 20, seed: int = 0) -> list[str]:
+    rows = run(cycles=cycles, seed=seed)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "table2.json"), "w") as f:
+        json.dump(rows, f, indent=1)
+    out = []
+    for name, r in rows.items():
+        for k, v in r.items():
+            out.append(f"table2,{name},{k},{v:.6g}")
+    # the paper's qualitative claims; FL privacy depends on the attack
+    # protocol (see run() docstring) — both reported
+    out.append(f"table2,claim,privacy_sl_gt_cl,"
+               f"{rows['sl_early_cut']['recon_error'] > rows['central']['recon_error']}")
+    out.append(f"table2,claim,privacy_sl_gt_fl_statistic_protocol,"
+               f"{rows['sl_early_cut']['recon_error'] > rows['fl_q8_extra']['recon_error_statistic']}")
+    out.append(f"table2,claim,privacy_sl_gt_fl_per_sample_protocol,"
+               f"{rows['sl_early_cut']['recon_error'] > rows['fl_q8']['recon_error']}")
+    out.append(f"table2,claim,privacy_fl_gt_cl_per_sample,"
+               f"{rows['fl_q8']['recon_error'] > rows['central']['recon_error']}")
+    out.append(f"table2,claim,comp_sl_lt_fl,"
+               f"{rows['sl_early_cut']['comp_energy_j'] < rows['fl_q8']['comp_energy_j']}")
+    out.append(f"table2,claim,comm_sl_gt_fl,"
+               f"{rows['sl_early_cut']['comm_energy_j'] > rows['fl_q8']['comm_energy_j']}")
+    out.append(f"table2,claim,bits_sl_gt_cl_gt_fl,"
+               f"{rows['sl_early_cut']['total_bits_M'] > rows['central']['total_bits_M'] > rows['fl_q8']['total_bits_M']}")
+    return out
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

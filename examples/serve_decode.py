@@ -1,0 +1,26 @@
+"""Serve a reduced assigned architecture with batched decode requests —
+the inference-side driver the decode_32k / long_500k dry-run shapes lower.
+
+    PYTHONPATH=src python examples/serve_decode.py [--arch qwen1.5-0.5b]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    args = ap.parse_args()
+    res = serve.main(["--arch", args.arch, "--reduced", "--batch", "4",
+                      "--prompt-len", "16", "--new-tokens", "16"])
+    assert res["generated"].shape == (4, 16)
+    print("serve OK")
+
+
+if __name__ == "__main__":
+    main()

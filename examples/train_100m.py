@@ -1,0 +1,74 @@
+"""End-to-end driver: train a ~100M-parameter dense transformer for a few
+hundred steps on synthetic LM data, asserting the loss drops.
+
+This exercises the full production path — config, model, optimizer,
+gradient accumulation, checkpointing — at a scale a CPU can finish.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 200]
+"""
+import argparse
+import dataclasses
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.ckpt import save_checkpoint, latest_step, \
+    restore_checkpoint
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import synthetic_lm_batches
+from repro.runtime.train_step import init_train_state, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
+    args = ap.parse_args()
+
+    # ~100M params: 12 layers x d_model 512 over the qwen1.5 family
+    base = get_arch("qwen1.5-0.5b")
+    cfg = dataclasses.replace(
+        base, n_layers=12, d_model=512, n_heads=8, n_kv_heads=8,
+        head_dim=64, d_ff=2048, vocab_size=32_000, dtype=jnp.float32,
+        remat=False, attn_chunk=128)
+    n_params = (cfg.vocab_size * cfg.d_model
+                + cfg.n_layers * (4 * cfg.d_model * cfg.d_model
+                                  + 3 * cfg.d_model * cfg.d_ff))
+    print(f"config: {cfg.n_layers}L d{cfg.d_model} ~{n_params / 1e6:.0f}M params")
+
+    shape = ShapeConfig("e2e", args.seq, args.batch, "train",
+                        microbatch=args.batch)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, None, "adamw")
+    step = jax.jit(make_train_step(cfg, shape, None, optimizer="adamw",
+                                   lr=3e-4))
+
+    batches = synthetic_lm_batches(cfg, args.batch, args.seq, seed=0)
+    losses = []
+    t0 = time.time()
+    for i in range(args.steps):
+        state, metrics = step(state, next(batches), jax.random.PRNGKey(i))
+        if i % 20 == 0 or i == args.steps - 1:
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            print(f"step {i:4d}  loss {loss:.4f}  "
+                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
+            assert np.isfinite(loss)
+
+    save_checkpoint(args.ckpt_dir, args.steps, state.trainable)
+    first, last = losses[0], losses[-1]
+    print(f"loss {first:.3f} -> {last:.3f}")
+    assert last < first - 0.5, "expected the LM loss to drop"
+    print("end-to-end train OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Config dataclasses + registry for architectures, input shapes, and the
+paper-technique (wireless SL/FL/CL) knobs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax.numpy as jnp
+
+_REGISTRY: dict[str, "ArchConfig"] = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | vlm | audio | tiny
+    citation: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0            # 0 -> d_model // n_heads
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    shared_expert: bool = False
+    moe_chunk: int = 0           # token-chunked dispatch (0 = auto 16k)
+    # SSM / hybrid
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    attn_every: int = 0          # hybrid: shared attn block every k ssm blocks
+    slstm_every: int = 0         # xlstm: one sLSTM per this many mLSTM blocks
+    # attention flavour
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    rope_fraction: float = 1.0   # chatglm applies RoPE to half the head dim
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    parallel_block: bool = False # command-r style parallel attn+mlp
+    # long context
+    sliding_window: int = 0      # 0 = full attention (train); decode long ctx
+    # enc-dec
+    enc_layers: int = 0          # >0 => encoder-decoder (seamless)
+    # multimodal frontends (stubbed per assignment)
+    frontend: str = ""           # "" | "vision" | "audio"
+    n_frontend_tokens: int = 0
+    # numerics
+    dtype: Any = jnp.bfloat16
+    param_dtype: Any = jnp.float32
+    # grad-accumulation microbatch SIZE for training (0 = one sample per
+    # data shard). Large-d_model archs set 8 to halve remat residuals;
+    # see EXPERIMENTS.md §Perf A2/B3 for the collective/memory trade.
+    microbatch_size: int = 0
+    remat: bool = True
+    # attention chunking for train/prefill (memory-bounded softmax)
+    attn_chunk: int = 512
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    @property
+    def expert_ff(self) -> int:
+        return self.moe_d_ff or self.d_ff
+
+    def reduced(self) -> "ArchConfig":
+        """Smoke-test variant: <=2 layers, d_model<=512, <=4 experts."""
+        d = min(self.d_model, 256)
+        heads = min(self.n_heads, 4)
+        kv = min(self.n_kv_heads, heads)
+        return dataclasses.replace(
+            self,
+            n_layers=2, d_model=d, n_heads=heads, n_kv_heads=kv,
+            head_dim=d // heads,
+            d_ff=min(self.d_ff, 512) if self.d_ff else 0,
+            moe_d_ff=min(self.moe_d_ff, 256) if self.moe_d_ff else 0,
+            vocab_size=min(self.vocab_size, 1024),
+            n_experts=min(self.n_experts, 4) if self.n_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            attn_every=min(self.attn_every, 1) if self.attn_every else 0,
+            slstm_every=min(self.slstm_every, 2) if self.slstm_every else 0,
+            enc_layers=2 if self.enc_layers else 0,
+            n_frontend_tokens=min(self.n_frontend_tokens, 16) if self.n_frontend_tokens else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=min(self.ssm_head_dim, 32),
+            attn_chunk=64,
+            dtype=jnp.float32,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+    microbatch: int = 0          # 0 = auto
+
+
+SHAPES: dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class WirelessConfig:
+    """Paper Table I knobs (the paper's technique, first-class)."""
+    mode: str = "cl"             # cl | fl | sl
+    snr_db: float = 20.0
+    fading: bool = True
+    quant_bits: int = 8
+    split_layer: int = 2         # SL cut point (user-side layer count)
+    compress_factor: int = 4     # semantic encoder compression
+    grad_clip: float = 0.5       # tau
+    local_steps: int = 5         # J (FL)
+    n_users: int = 3             # N (FL)
+    comm_cycles: int = 7         # K (FL) / 50 for SL-CL
+    bandwidth_hz: float = 100e3  # B
+    tx_power_w: float = 1e-3     # P
+    perfect_channel: bool = False
+    # beyond-paper: link-layer ARQ — redraw deep fades (|f|^2 < min) up
+    # to `attempts` times; 1 = paper-faithful no-ARQ
+    arq_attempts: int = 1
+    arq_min_f2: float = 0.25
+    # beyond-paper: server aggregation — "mean" (paper FedAvg, Eq. 3) or
+    # "median" (coordinate-wise; robust to a single user's deep-fade
+    # MSB flips at zero extra bits)
+    aggregate: str = "mean"
+
+
+def register(cfg: ArchConfig) -> ArchConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_arch(name: str) -> ArchConfig:
+    import repro.configs  # noqa: F401  (populates registry)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> list[str]:
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,2 @@
+from repro.core import channel, quantization, split, federated, centralized
+from repro.core import semantic, energy, privacy

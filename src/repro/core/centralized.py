@@ -1,0 +1,23 @@
+"""Centralized learning baseline: users transmit RAW data to the server
+over the channel (the paper's CL); the server trains normally. Bit errors
+corrupt token ids directly — this is why CL degrades under fading
+(paper Fig. 3d) while FL's structured quantized weights degrade gracefully.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import channel as CH
+
+
+def upload_batch(key, batch: dict, vocab_size: int, wcfg) -> tuple[dict, int]:
+    """Send raw tokens through the channel. Labels ride a control channel
+    (1 bit; errors there are ignored as in the paper). Returns
+    (received batch, payload bits)."""
+    if wcfg.perfect_channel:
+        return batch, 0
+    n_bits = max(1, (vocab_size - 1).bit_length())
+    tokens = CH.transmit_tokens(key, batch["tokens"], vocab_size,
+                                wcfg.snr_db, wcfg.fading)
+    bits = batch["tokens"].size * n_bits + batch["labels"].size
+    return dict(batch, tokens=tokens), bits

@@ -1,0 +1,176 @@
+"""Wireless channel: Rayleigh fading + AWGN over BPSK (paper Eq. 10).
+
+Physical chain (Alg. 1/2): quantize -> encode bits -> BPSK modulate ->
+z_hat = f*z + n -> coherent demod -> decode bits -> dequantize.
+
+TPU adaptation (DESIGN.md §5): with BPSK, coherent detection, and a known
+fading coefficient f, each *bit* is flipped independently with probability
+
+    p = Q( sqrt(2 |f|^2 SNR) ),   Q(x) = 0.5 erfc(x / sqrt 2)
+
+so the whole modulate/fade/demodulate chain is *exactly* equivalent to
+XOR-ing the quantized codewords with Bernoulli(p) bit noise — a fully
+vectorized VPU-friendly formulation (no per-bit Python loop). The Pallas
+kernel `kernels/quant_channel` fuses this with blockwise quantization.
+
+Rayleigh fading: f = sqrt(e/2)*(g1 + i g2) with g ~ N(0,1) => |f|^2 ~
+Exp(1) (unit mean). The paper draws one f per transmission ("uniformly
+affects all transmitted signals").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import erfc
+
+from repro.core import quantization as Q
+
+
+def snr_linear(snr_db) -> jax.Array:
+    return 10.0 ** (jnp.asarray(snr_db, jnp.float32) / 10.0)
+
+
+def rayleigh_gain(key) -> jax.Array:
+    """|f|^2 with E[|f|^2] = 1 (one draw per transmission)."""
+    u = jax.random.uniform(key, (), jnp.float32, 1e-12, 1.0)
+    return -jnp.log(u)
+
+
+def rayleigh_gain_arq(key, attempts: int, min_f2: float):
+    """Outage-aware ARQ (beyond-paper): redraw the fade up to `attempts`
+    times until |f|^2 >= min_f2 (the receiver NACKs deep fades — what a
+    real link-layer does). Returns (|f|^2 used, transmissions used).
+    Under per-tensor Rayleigh draws, the occasional |f|^2 << 1 deep fade
+    flips weight MSBs and is what collapses FL below ~15 dB
+    (EXPERIMENTS.md §Repro fig3c note)."""
+    u = jax.random.uniform(key, (attempts,), jnp.float32, 1e-12, 1.0)
+    f2s = -jnp.log(u)
+    ok = f2s >= min_f2
+    first = jnp.argmax(ok)                       # first passing draw
+    idx = jnp.where(ok.any(), first, attempts - 1)
+    n_tx = jnp.where(ok.any(), first + 1, attempts)
+    return f2s[idx], n_tx
+
+
+def bpsk_bit_error_prob(snr_db, f2) -> jax.Array:
+    """p = Q(sqrt(2 |f|^2 SNR)) for coherent BPSK."""
+    arg = jnp.sqrt(2.0 * f2 * snr_linear(snr_db))
+    return 0.5 * erfc(arg / jnp.sqrt(2.0))
+
+
+def flip_bits(key, codewords: jax.Array, n_bits: int, p) -> jax.Array:
+    """XOR codewords (uint32, values < 2^n_bits) with iid Bernoulli(p) bits."""
+    flips = jnp.zeros_like(codewords)
+    keys = jax.random.split(key, n_bits)
+    for b in range(n_bits):
+        mask = jax.random.bernoulli(keys[b], p, codewords.shape)
+        flips = flips | (mask.astype(jnp.uint32) << b)
+    return codewords ^ flips
+
+
+def transmit_quantized(key, x: jax.Array, bits: int, snr_db: float,
+                       fading: bool = True, perfect: bool = False,
+                       arq_attempts: int = 1, arq_min_f2: float = 0.25):
+    """Full chain on one tensor. Returns (x_hat, diag dict). With
+    arq_attempts > 1, deep fades are re-drawn (link-layer ARQ) and the
+    diag carries the transmission count for energy accounting."""
+    q, s = Q.quantize(x, bits)
+    if perfect:
+        return Q.dequantize(q, s, x.dtype), {"f2": jnp.float32(1.0),
+                                             "ber": jnp.float32(0.0),
+                                             "n_tx": jnp.int32(1)}
+    kf, kb = jax.random.split(key)
+    if not fading:
+        f2, n_tx = jnp.float32(1.0), jnp.int32(1)
+    elif arq_attempts > 1:
+        f2, n_tx = rayleigh_gain_arq(kf, arq_attempts, arq_min_f2)
+    else:
+        f2, n_tx = rayleigh_gain(kf), jnp.int32(1)
+    p = bpsk_bit_error_prob(snr_db, f2)
+    code = Q.quantize_offset(q, bits)
+    code = flip_bits(kb, code, bits, p)
+    q_hat = Q.unquantize_offset(code, bits)
+    return Q.dequantize(q_hat, s, x.dtype), {"f2": f2, "ber": p,
+                                             "n_tx": n_tx}
+
+
+def transmit_tokens(key, tokens: jax.Array, vocab_size: int, snr_db: float,
+                    fading: bool = True) -> jax.Array:
+    """CL uplink: raw token ids cross the channel as fixed-width codewords
+    (the paper's CL transmits raw data; bit errors corrupt tokens).
+
+    One Rayleigh draw per ROW (= one packet per tweet): a bulk upload far
+    exceeds the channel coherence time, so a single fade for the whole
+    dataset would make the corruption all-or-nothing."""
+    n_bits = max(1, (int(vocab_size) - 1).bit_length())
+    kf, kb = jax.random.split(key)
+    if fading:
+        n_rows = tokens.shape[0] if tokens.ndim > 1 else 1
+        u = jax.random.uniform(kf, (n_rows,), jnp.float32, 1e-12, 1.0)
+        f2 = -jnp.log(u)
+        if tokens.ndim > 1:
+            f2 = f2.reshape((n_rows,) + (1,) * (tokens.ndim - 1))
+    else:
+        f2 = jnp.float32(1.0)
+    p = bpsk_bit_error_prob(snr_db, f2)
+    code = flip_bits(kb, tokens.astype(jnp.uint32), n_bits, p)
+    return jnp.minimum(code, vocab_size - 1).astype(tokens.dtype)
+
+
+# --------------------------------------------------------------- SL link
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def channel_crossing(x, key, bits, snr_db, fading, grad_clip, perfect):
+    """The SL radio boundary (Alg. 2): the forward activation AND the
+    backward gradient both traverse quantize->BPSK->Rayleigh+AWGN.
+    The gradient is norm-clipped to `grad_clip` (tau) before transmission.
+    """
+    y, _ = transmit_quantized(key, x, bits, snr_db, fading, perfect)
+    return y
+
+
+def _cc_fwd(x, key, bits, snr_db, fading, grad_clip, perfect):
+    return channel_crossing(x, key, bits, snr_db, fading, grad_clip, perfect), key
+
+
+def _cc_bwd(bits, snr_db, fading, grad_clip, perfect, key, g):
+    from repro.optim.clip import clip_array_by_norm
+    g = clip_array_by_norm(g, grad_clip)
+    g_hat, _ = transmit_quantized(jax.random.fold_in(key, 1), g, bits,
+                                  snr_db, fading, perfect)
+    # receiver-side re-clip: a deep Rayleigh fade flips high-order bits
+    # and can blow the received norm to tau*sqrt(N); the receiver knows
+    # tau, so clipping again on arrival bounds the impulse (without it,
+    # LR-scaled training destabilizes — EXPERIMENTS.md §Repro)
+    return clip_array_by_norm(g_hat, grad_clip), None
+
+
+channel_crossing.defvjp(_cc_fwd, _cc_bwd)
+
+
+def transmit_pytree(key, tree, bits, snr_db, fading=True, perfect=False,
+                    use_kernel: bool = False):
+    """Quantize+channel every leaf (FL weight upload, Alg. 1). One fading
+    draw per leaf (one packet per tensor). Returns (tree_hat, total_bits).
+
+    use_kernel=True routes each leaf through the fused Pallas wire
+    (kernels/quant_channel) — the TPU deploy path; on CPU it runs in
+    interpret mode (same math, per-block scales instead of per-tensor)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    total_bits = 0
+    if use_kernel and not perfect:
+        from repro.kernels.quant_channel.ops import transmit as k_transmit
+        for k, leaf in zip(keys, leaves):
+            out.append(k_transmit(k, leaf, bits=bits, snr_db=snr_db,
+                                  fading=fading))
+            total_bits += Q.payload_bits(leaf, bits)
+    else:
+        for k, leaf in zip(keys, leaves):
+            y, _ = transmit_quantized(k, leaf, bits, snr_db, fading,
+                                      perfect)
+            out.append(y)
+            total_bits += Q.payload_bits(leaf, bits)
+    return jax.tree.unflatten(treedef, out), total_bits

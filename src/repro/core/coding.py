@@ -1,0 +1,92 @@
+"""Channel coding — beyond-paper extension #1.
+
+The paper transmits uncoded BPSK; its future-work section asks for
+better communication efficiency. A Hamming(7,4) code corrects every
+single-bit error per 7-bit block at a 7/4 bandwidth cost, which beats
+uncoded transmission whenever the raw BER is above ~1e-3 (i.e. low SNR
+or deep Rayleigh fades — exactly the regime where Fig. 3c collapses).
+
+Everything is vectorized table lookups: 4-bit nibbles -> 16 codewords,
+7-bit received words -> syndrome-corrected nibbles. No bit loops.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel as CH
+from repro.core import quantization as Q
+
+# generator for systematic Hamming(7,4): data bits d3..d0, parity p2..p0
+_G_ROWS = np.array([
+    [1, 0, 0, 0, 0, 1, 1],
+    [0, 1, 0, 0, 1, 0, 1],
+    [0, 0, 1, 0, 1, 1, 0],
+    [0, 0, 0, 1, 1, 1, 1],
+], np.uint8)
+
+
+@functools.lru_cache(maxsize=1)
+def _tables():
+    enc = np.zeros(16, np.uint8)
+    for d in range(16):
+        bits = np.array([(d >> i) & 1 for i in range(4)], np.uint8)
+        cw = bits @ _G_ROWS % 2
+        enc[d] = int("".join(map(str, cw[::-1])), 2)
+    # decode: for each 7-bit word, the nibble of the nearest codeword
+    dec = np.zeros(128, np.uint8)
+    cw_bits = np.unpackbits(enc[:, None], axis=1, count=8)[:, 1:]
+    for w in range(128):
+        wb = np.array([(w >> i) & 1 for i in range(6, -1, -1)], np.uint8)
+        dists = (cw_bits ^ wb).sum(1)
+        dec[w] = int(np.argmin(dists))
+    return jnp.asarray(enc, jnp.uint32), jnp.asarray(dec, jnp.uint32)
+
+
+def hamming_encode(codewords: jax.Array, bits: int) -> tuple[jax.Array, int]:
+    """Pack b-bit codewords into ceil(b/4) Hamming(7,4) blocks.
+    Returns (coded uint32 array [..., n_blocks], coded bits per word)."""
+    enc, _ = _tables()
+    n_blk = -(-bits // 4)
+    nibbles = jnp.stack([(codewords >> (4 * i)) & 0xF
+                         for i in range(n_blk)], axis=-1)
+    return enc[nibbles], n_blk * 7
+
+
+def hamming_decode(blocks: jax.Array, bits: int) -> jax.Array:
+    _, dec = _tables()
+    n_blk = blocks.shape[-1]
+    nibbles = dec[blocks & 0x7F]
+    out = jnp.zeros(blocks.shape[:-1], jnp.uint32)
+    for i in range(n_blk):
+        out = out | (nibbles[..., i] << (4 * i))
+    return out & jnp.uint32(2 ** bits - 1)
+
+
+def transmit_quantized_coded(key, x: jax.Array, bits: int, snr_db: float,
+                             fading: bool = True):
+    """Quantize -> Hamming(7,4) -> BPSK/Rayleigh channel -> correct ->
+    dequantize. Returns (x_hat, payload_bits) — payload includes the
+    7/4 parity overhead (energy accounting stays honest)."""
+    q, s = Q.quantize(x, bits)
+    code = Q.quantize_offset(q, bits)
+    blocks, coded_bits = hamming_encode(code, bits)
+    kf, kb = jax.random.split(key)
+    f2 = CH.rayleigh_gain(kf) if fading else jnp.float32(1.0)
+    p = CH.bpsk_bit_error_prob(snr_db, f2)
+    blocks = CH.flip_bits(kb, blocks, 7, p)
+    code_hat = hamming_decode(blocks, bits)
+    q_hat = Q.unquantize_offset(code_hat, bits)
+    return Q.dequantize(q_hat, s, x.dtype), int(x.size) * coded_bits
+
+
+def block_error_prob(p_bit, corrected: bool = True):
+    """P(7-bit block decodes wrong): uncorrected = 1-(1-p)^7;
+    Hamming corrects single errors: 1 - (1-p)^7 - 7 p (1-p)^6."""
+    q = (1.0 - p_bit) ** 7
+    if not corrected:
+        return 1.0 - q
+    return 1.0 - q - 7.0 * p_bit * (1.0 - p_bit) ** 6

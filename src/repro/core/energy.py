@@ -1,0 +1,76 @@
+"""Energy + CO2 accounting (paper Sec. II-D, Table II).
+
+Communication: Shannon-Hartley (Eq. 11): C = B log2(1 + |f|^2 SNR);
+energy-per-bit = P / C; comm energy = payload_bits * P / C. The expected
+capacity under Rayleigh fading is E_f[C], estimated by Monte-Carlo draws
+of |f|^2 ~ Exp(1).
+
+Computation: the container has no power rail (the paper measured with
+Eco2AI on real hardware), so computational energy = FLOPs x J/FLOP for
+the executing device class. Constants documented in DESIGN.md §5:
+  MCU/edge-CPU class (the paper's user device): ~1 nJ/FLOP
+  TPU v5e:  197 TFLOP/s @ ~200 W  => ~1 pJ/FLOP
+CO2: Eco2AI methodology — energy(kWh) x grid intensity 0.475 kgCO2/kWh.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+J_PER_FLOP_EDGE = 1e-9
+J_PER_FLOP_TPU = 1.0e-12
+CO2_KG_PER_KWH = 0.475
+
+
+def snr_linear(snr_db: float) -> float:
+    return 10.0 ** (snr_db / 10.0)
+
+
+def channel_capacity(bandwidth_hz: float, snr_db: float, fading: bool = True,
+                     n_mc: int = 10_000, seed: int = 0) -> float:
+    """E[C] in bits/s (Eq. 11), Monte-Carlo over Rayleigh |f|^2 ~ Exp(1)."""
+    snr = snr_linear(snr_db)
+    if not fading:
+        return bandwidth_hz * np.log2(1.0 + snr)
+    rng = np.random.default_rng(seed)
+    f2 = rng.exponential(1.0, n_mc)
+    return float(bandwidth_hz * np.mean(np.log2(1.0 + f2 * snr)))
+
+
+def comm_energy_j(payload_bits: float, wcfg) -> float:
+    """payload_bits * P / C  (J)."""
+    cap = channel_capacity(wcfg.bandwidth_hz, wcfg.snr_db, wcfg.fading)
+    return float(payload_bits) * wcfg.tx_power_w / cap
+
+
+def comm_time_s(payload_bits: float, wcfg) -> float:
+    cap = channel_capacity(wcfg.bandwidth_hz, wcfg.snr_db, wcfg.fading)
+    return float(payload_bits) / cap
+
+
+def comp_energy_j(flops: float, device: str = "edge") -> float:
+    per = J_PER_FLOP_EDGE if device == "edge" else J_PER_FLOP_TPU
+    return float(flops) * per
+
+
+def co2_kg(energy_j: float) -> float:
+    return energy_j / 3.6e6 * CO2_KG_PER_KWH
+
+
+@dataclasses.dataclass
+class EnergyReport:
+    total_bits: float = 0.0
+    comp_flops_user: float = 0.0
+    comp_flops_server: float = 0.0
+
+    def summary(self, wcfg, device: str = "edge") -> dict:
+        comp = comp_energy_j(self.comp_flops_user, device)
+        comm = comm_energy_j(self.total_bits, wcfg)
+        return {
+            "total_bits": self.total_bits,
+            "comp_energy_j": comp,
+            "comm_energy_j": comm,
+            "total_energy_j": comp + comm,
+            "co2_kg": co2_kg(comp + comm),
+        }

@@ -1,0 +1,84 @@
+"""Privacy evaluation (paper Sec. II-E / Eq. 12): an adversary trained
+WITH access to raw inputs (the paper's strong-adversary assumption) tries
+to reconstruct the normalized raw input from what actually crossed the
+radio:
+
+  CL -> the received (bit-error-corrupted) raw tokens            (trivial)
+  FL -> the received quantized weight DELTA of a user's local update
+        (gradient/update-inversion setting, one sample per update)
+  SL -> the received compressed smashed activations
+
+Error = mean squared error on min-max-normalized inputs (Eq. 12). The
+paper reports SL ~4x FL and ~18x CL.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import Spec, init_params
+from repro.optim import adamw
+
+
+def normalize_tokens(tokens: jax.Array, vocab: int) -> jax.Array:
+    """Paper: 'normalization of the data is applied'."""
+    return tokens.astype(jnp.float32) / float(vocab)
+
+
+def _mlp_specs(d_in: int, d_hidden: int, d_out: int) -> dict:
+    return {
+        "w1": Spec((d_in, d_hidden), (None, None), init="fan_in"),
+        "b1": Spec((d_hidden,), (None,), init="zeros"),
+        "w2": Spec((d_hidden, d_hidden), (None, None), init="fan_in"),
+        "b2": Spec((d_hidden,), (None,), init="zeros"),
+        "w3": Spec((d_hidden, d_out), (None, None), init="fan_in"),
+        "b3": Spec((d_out,), (None,), init="zeros"),
+    }
+
+
+def _mlp(p, x):
+    h = jax.nn.relu(x @ p["w1"] + p["b1"])
+    h = jax.nn.relu(h @ p["w2"] + p["b2"])
+    return h @ p["w3"] + p["b3"]
+
+
+def reconstruction_error(key, observations: np.ndarray, targets: np.ndarray,
+                         d_hidden: int = 256, steps: int = 400,
+                         batch: int = 256, lr: float = 1e-3,
+                         test_frac: float = 0.2) -> float:
+    """Train the adversary decoder obs -> target; return held-out MSE
+    (Eq. 12). observations [N, d_obs], targets [N, d_x] both np arrays."""
+    obs = jnp.asarray(observations.reshape(len(observations), -1), jnp.float32)
+    tgt = jnp.asarray(targets.reshape(len(targets), -1), jnp.float32)
+    n_test = max(1, int(len(obs) * test_frac))
+    obs_tr, obs_te = obs[:-n_test], obs[-n_test:]
+    tgt_tr, tgt_te = tgt[:-n_test], tgt[-n_test:]
+
+    kinit, kdata = jax.random.split(key)
+    params = init_params(kinit, _mlp_specs(obs.shape[-1], d_hidden, tgt.shape[-1]))
+    opt_init, opt_update = adamw(weight_decay=0.0)
+    state = opt_init(params)
+
+    @jax.jit
+    def step(params, state, ob, tg):
+        def loss(p):
+            return jnp.mean(jnp.square(_mlp(p, ob) - tg))
+        l, g = jax.value_and_grad(loss)(params)
+        params, state = opt_update(g, state, params, lr)
+        return params, state, l
+
+    n = len(obs_tr)
+    for i in range(steps):
+        idx = jax.random.randint(jax.random.fold_in(kdata, i), (min(batch, n),), 0, n)
+        params, state, _ = step(params, state, obs_tr[idx], tgt_tr[idx])
+
+    pred = _mlp(params, obs_te)
+    return float(jnp.mean(jnp.square(pred - tgt_te)))
+
+
+def direct_error(received_norm: np.ndarray, targets_norm: np.ndarray) -> float:
+    """CL case: the adversary just reads the received raw data."""
+    return float(np.mean(np.square(received_norm - targets_norm)))

@@ -1,0 +1,68 @@
+"""b-bit symmetric quantization, paper Eq. (1)-(2):
+
+    S = max|W| / (2^{b-1} - 1)         (scale)
+    Q = round(W / S)                   (levels)
+    W_hat = Q * S                      (dequantize)
+
+The paper's formula shows ceil; round-to-nearest is the standard
+implementation (ceil would bias every weight upward) — noted in
+EXPERIMENTS.md. Scales are per-tensor (paper) with a per-block option used
+by the Pallas kernel (TPU adaptation: block scales live in VMEM beside the
+tile). Quantization is exposed with a straight-through-estimator custom
+VJP so it can sit inside a differentiated forward pass (SL link).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def qmax(bits: int) -> int:
+    return 2 ** (bits - 1) - 1
+
+
+def scale_for(x: jax.Array, bits: int) -> jax.Array:
+    return jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax(bits)
+
+
+def quantize(x: jax.Array, bits: int, scale: jax.Array | None = None):
+    """-> (q int32 in [-qmax, qmax], scale)."""
+    s = scale_for(x, bits) if scale is None else scale
+    q = jnp.clip(jnp.round(x / s), -qmax(bits), qmax(bits)).astype(jnp.int32)
+    return q, s
+
+
+def dequantize(q: jax.Array, scale: jax.Array, dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_offset(q: jax.Array, bits: int) -> jax.Array:
+    """Map signed levels to unsigned codewords [0, 2^b) for bit transport."""
+    return (q + qmax(bits)).astype(jnp.uint32)
+
+
+def unquantize_offset(u: jax.Array, bits: int) -> jax.Array:
+    # received codewords can exceed the signed range after bit errors: clip
+    return jnp.clip(u.astype(jnp.int32) - qmax(bits), -qmax(bits), qmax(bits))
+
+
+@jax.custom_vjp
+def quantize_ste(x: jax.Array, bits: int):
+    q, s = quantize(x, bits)
+    return dequantize(q, s, x.dtype)
+
+
+def _q_fwd(x, bits):
+    return quantize_ste(x, bits), None
+
+
+def _q_bwd(_, g):
+    return g, None
+
+
+quantize_ste.defvjp(_q_fwd, _q_bwd)
+
+
+def payload_bits(x: jax.Array, bits: int) -> int:
+    """Transmitted payload size of a tensor at b-bit quantization."""
+    return int(x.size) * bits

@@ -1,0 +1,37 @@
+"""Semantic compression codec at the SL split point (paper Sec. III-A2:
+"A compression encoder factoring by four is adopted"). The encoder lives
+user-side (before the radio), the decoder server-side.
+
+Identity warm start: enc/dec initialize as the (truncated) identity pair,
+so at step 0 the codec passes the first d/factor channels through
+unchanged instead of scrambling the smashed data with a random
+projection. A random-init codec stretches the tiny model's SGD plateau
+past the paper's cycle budget (EXPERIMENTS.md §Repro deviations); the
+warm start leaves the *trained* codec free to rotate into whatever basis
+helps, and is the standard autoencoder initialization trick."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.models.layers import linear_specs, linear
+from repro.nn import Spec
+
+
+def codec_specs(d: int, factor: int) -> dict:
+    c = max(1, d // factor)
+    return {
+        "enc": {"w": Spec((d, c), ("embed", None), init="eye"),
+                "b": Spec((c,), (None,), init="zeros")},
+        "dec": {"w": Spec((c, d), (None, "embed"), init="eye"),
+                "b": Spec((d,), (None,), init="zeros")},
+    }
+
+
+def encode(codec: dict, x: jax.Array) -> jax.Array:
+    return linear(codec["enc"], x)
+
+
+def decode(codec: dict, z: jax.Array) -> jax.Array:
+    return linear(codec["dec"], z)

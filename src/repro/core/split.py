@@ -1,0 +1,168 @@
+"""Split learning (paper Alg. 2) as a first-class, architecture-agnostic
+feature: any layered model is cut at `wcfg.split_layer`; the user-side
+activation is semantically compressed (x4), crosses the wireless channel
+(forward AND backward — the gradient is tau-clipped and re-quantized on
+the way down, exactly Alg. 2 lines 11-17), and the server side finishes
+the pass. The split unit is a layer for dense/MoE/VLM stacks, a
+super-block for xLSTM/hybrid stacks, and the encoder/decoder boundary for
+enc-dec models (the canonical SL cut)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import semantic
+from repro.core.channel import channel_crossing
+from repro.models import layers as L
+from repro.models import transformer, xlstm, hybrid, encdec, lstm_tiny
+from repro.nn import init_params
+
+
+def tree_slice(tree, lo, hi):
+    return jax.tree.map(lambda a: a[lo:hi], tree)
+
+
+def codec_specs(cfg, wcfg):
+    d = lstm_tiny.CONV_F if cfg.family == "tiny" else cfg.d_model
+    return semantic.codec_specs(d, wcfg.compress_factor)
+
+
+def init_codec(key, cfg, wcfg):
+    return init_params(key, codec_specs(cfg, wcfg))
+
+
+def _link(codec, x, wcfg, key):
+    z = semantic.encode(codec, x)
+    z = channel_crossing(z, key, wcfg.quant_bits, wcfg.snr_db, wcfg.fading,
+                         wcfg.grad_clip, wcfg.perfect_channel)
+    return semantic.decode(codec, z)
+
+
+# ----------------------------------------------------------- per family
+def _split_transformer(params, codec, batch, cfg, wcfg, key, window):
+    x = transformer.embed_inputs(params, batch, cfg)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    l = min(wcfg.split_layer, cfg.n_layers - 1)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = transformer.apply_block(lp, x, cfg, positions, True, window)
+        return (x, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    zero = jnp.zeros((), jnp.float32)
+    (x, aux), _ = jax.lax.scan(body, (x, zero), tree_slice(params["layers"], 0, l))
+    x = _link(codec, x, wcfg, key)
+    (x, aux), _ = jax.lax.scan(body, (x, aux),
+                               tree_slice(params["layers"], l, cfg.n_layers))
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    return L.unembed(params["embed"], x), {"aux_loss": aux / cfg.n_layers}
+
+
+def _split_outer_scan(params, codec, batch, cfg, wcfg, key, window, mod):
+    """xLSTM / hybrid: cut after the first super-block (the stacked outer
+    scan dim). Implemented by running the family forward on two sliced
+    param trees."""
+    # Slice every stacked tree that has the outer super-block dim.
+    outer_key = "mlstm" if mod is xlstm else "mamba"
+    n_outer = jax.tree.leaves(params[outer_key])[0].shape[0]
+    cut = max(1, min(wcfg.split_layer, n_outer - 1))
+
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg.dtype)
+    x = _run_superblocks(mod, params, x, cfg, window, 0, cut)
+    x = _link(codec, x, wcfg, key)
+    x = _run_superblocks(mod, params, x, cfg, window, cut, n_outer)
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    return L.unembed(params["embed"], x), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def _run_superblocks(mod, params, x, cfg, window, lo, hi):
+    if mod is xlstm:
+        def inner(x, mp):
+            return xlstm.apply_mlstm(mp, x, cfg), None
+
+        def super_block(x, sp):
+            mstack, slp = sp
+            x, _ = jax.lax.scan(inner, x, mstack)
+            if slp is not None:
+                x = xlstm.apply_slstm(slp, x, cfg)
+            return x, None
+
+        body = jax.checkpoint(super_block) if cfg.remat else super_block
+        slstm = params.get("slstm")
+        xs = (tree_slice(params["mlstm"], lo, hi),
+              tree_slice(slstm, lo, hi) if slstm is not None else None)
+        x, _ = jax.lax.scan(lambda c, sp: body(c, sp), x, xs)
+        return x
+    # hybrid
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    from repro.models.mamba2 import apply_mamba_block
+
+    def inner(x, mp):
+        return apply_mamba_block(mp, x, cfg), None
+
+    def super_block(x, mstack):
+        x, _ = jax.lax.scan(inner, x, mstack)
+        return hybrid._shared_block(params, x, cfg, positions, window), None
+
+    body = jax.checkpoint(super_block) if cfg.remat else super_block
+    x, _ = jax.lax.scan(lambda c, m: body(c, m), x,
+                        tree_slice(params["mamba"], lo, hi))
+    n_super, every, tail = hybrid.layout(cfg)
+    if tail and hi >= n_super:
+        tb = (jax.checkpoint(lambda c, m: (apply_mamba_block(m, c, cfg), None))
+              if cfg.remat else lambda c, m: (apply_mamba_block(m, c, cfg), None))
+        x, _ = jax.lax.scan(tb, x, params["tail"])
+    return x
+
+
+def _split_encdec(params, codec, batch, cfg, wcfg, key, window):
+    """Enc-dec: the encoder output IS the smashed data (canonical SL cut;
+    for seamless the user device runs the speech encoder)."""
+    enc_out = encdec.encode(params, batch["frames"], cfg)
+    enc_out = _link(codec, enc_out, wcfg, key)
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg.dtype)
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        x = x + L.attention_train(lp["self_attn"], h, cfg, pos, True, window)
+        h = L.apply_norm(lp["ln_x"], x, cfg.norm)
+        kv = encdec.enc_kv(lp["cross_attn"], enc_out, cfg)
+        x = x + encdec.cross_attention(lp["cross_attn"], h, kv, cfg)
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        return x + L.apply_mlp(lp["mlp"], h), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    return L.unembed(params["embed"], x), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def _split_tiny(params, codec, batch, cfg, wcfg, key, window):
+    smashed = lstm_tiny.user_forward(params, batch["tokens"])
+    smashed = _link(codec, smashed, wcfg, key)
+    return lstm_tiny.server_forward(params, smashed), \
+        {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def split_forward(params, codec, batch, cfg, wcfg, key, window: int = 0):
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        return _split_transformer(params, codec, batch, cfg, wcfg, key, window)
+    if fam == "ssm":
+        x, aux = _split_outer_scan(params, codec, batch, cfg, wcfg, key,
+                                   window, xlstm)
+        return x, aux
+    if fam == "hybrid":
+        return _split_outer_scan(params, codec, batch, cfg, wcfg, key,
+                                 window, hybrid)
+    if fam == "audio":
+        return _split_encdec(params, codec, batch, cfg, wcfg, key, window)
+    if fam == "tiny":
+        return _split_tiny(params, codec, batch, cfg, wcfg, key, window)
+    raise ValueError(fam)

@@ -1,0 +1,2 @@
+from repro.data.sentiment import SentimentConfig, make_dataset, make_splits
+from repro.data.pipeline import batches, sharded_batches

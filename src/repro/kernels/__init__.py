@@ -1,0 +1,1 @@
+from repro.kernels import quant_channel, lstm_cell, decode_attention

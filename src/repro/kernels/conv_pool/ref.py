@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: identical math to models/lstm_tiny.user_forward's
+conv+relu+pool stage (post-embedding)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_pool_ref(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    B, T, E = x.shape
+    K, _, F = w.shape
+    T_out = T - K + 1
+    out = sum(x[:, k:T_out + k].astype(jnp.float32)
+              @ w[k].astype(jnp.float32) for k in range(K))
+    out = jax.nn.relu(out + b.astype(jnp.float32))
+    P = T_out // 2
+    pooled = jnp.max(out[:, :2 * P].reshape(B, P, 2, F), axis=2)
+    return pooled.astype(x.dtype)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle: models/layers.decode_attention_jnp reshaped to the
+kernel's [B, Hkv, G, hd] layout."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import decode_attention_jnp
+
+
+def decode_attention_ref(q, k, v, length, window: int = 0):
+    B, Hkv, G, hd = q.shape
+    out = decode_attention_jnp(q.reshape(B, Hkv * G, hd), k, v, length,
+                               window=window)
+    return out.reshape(B, Hkv, G, hd).astype(jnp.float32)

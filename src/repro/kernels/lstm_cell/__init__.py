@@ -1,0 +1,3 @@
+from repro.kernels.lstm_cell.ops import lstm_layer
+from repro.kernels.lstm_cell.kernel import lstm_final_state
+from repro.kernels.lstm_cell.ref import lstm_final_state_ref

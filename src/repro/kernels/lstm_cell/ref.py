@@ -1,0 +1,23 @@
+"""Pure-jnp oracle: lax.scan LSTM identical to models/lstm_tiny.lstm_scan."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_final_state_ref(xw: jax.Array, wh: jax.Array):
+    B, T, H4 = xw.shape
+    H = H4 // 4
+
+    def cell(carry, xt):
+        h, c = carry
+        gates = xt + h @ wh
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    h0 = jnp.zeros((B, H), jnp.float32)
+    (h, c), _ = jax.lax.scan(cell, (h0, h0),
+                             xw.astype(jnp.float32).swapaxes(0, 1))
+    return h, c

@@ -1,0 +1,3 @@
+from repro.kernels.quant_channel.ops import transmit
+from repro.kernels.quant_channel.kernel import quant_channel_2d
+from repro.kernels.quant_channel.ref import quant_channel_ref

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the quant_channel kernel: identical blockwise math
+(same hash, same scales) with no Pallas."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_channel.kernel import (BLOCK_M, BLOCK_N, _GOLDEN,
+                                                _finalize)
+
+
+def quant_channel_ref(x: jax.Array, rand: jax.Array, p: jax.Array,
+                      bits: int) -> jax.Array:
+    M, N = x.shape
+    bm, bn = min(BLOCK_M, M), min(BLOCK_N, N)
+    qmax = float(2 ** (bits - 1) - 1)
+    xb = x.reshape(M // bm, bm, N // bn, bn).transpose(0, 2, 1, 3)
+    rb = rand.reshape(M // bm, bm, N // bn, bn).transpose(0, 2, 1, 3)
+
+    amax = jnp.maximum(jnp.max(jnp.abs(xb), axis=(-2, -1), keepdims=True), 1e-12)
+    scale = amax / qmax
+    q = jnp.clip(jnp.round(xb / scale), -qmax, qmax).astype(jnp.int32)
+    code = (q + jnp.int32(qmax)).astype(jnp.uint32)
+
+    thresh = (p[0] * 4294967296.0).astype(jnp.uint32)
+    flips = jnp.zeros_like(code)
+    for b in range(bits):
+        salt = ((b + 1) * _GOLDEN) & 0xFFFFFFFF
+        r = _finalize(rb ^ jnp.uint32(salt))
+        flips = flips | (jnp.where(r < thresh, jnp.uint32(1), jnp.uint32(0)) << b)
+    code = code ^ flips
+
+    q_hat = jnp.clip(code.astype(jnp.int32) - jnp.int32(qmax), -qmax, qmax)
+    out = (q_hat.astype(jnp.float32) * scale).astype(x.dtype)
+    return out.transpose(0, 2, 1, 3).reshape(M, N)

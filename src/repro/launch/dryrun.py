@@ -1,0 +1,202 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) on 512 placeholder host devices; record memory_analysis,
+cost_analysis, and the collective-op byte census for §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Results land in benchmarks/results/dryrun/<arch>_<shape>_<mesh>[_tag].json
+(one file per combo, written incrementally so a crash loses nothing).
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_arch, ASSIGNED
+from repro.configs.base import WirelessConfig
+from repro.launch.mesh import make_production_mesh
+from repro.models import api as M
+from repro.nn import tree_shardings, axes_tree, named_sharding, use_mesh
+from repro.optim.adamw import AdamWState
+from repro.runtime.train_step import (TrainState, make_train_step,
+                                      make_prefill_step, trainable_axes)
+from repro.runtime.serve_step import make_decode_step, cache_specs
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "benchmarks", "results", "dryrun")
+
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+
+
+def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
+               mode: str = "cl", out_dir: str = RESULTS_DIR,
+               tag: str = "", microbatch: int = 0) -> dict:
+    import dataclasses
+    cfg = get_arch(arch)
+    shape_cfg = SHAPES[shape_name]
+    if microbatch:
+        shape_cfg = dataclasses.replace(shape_cfg, microbatch=microbatch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    record: dict = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "mode": mode, "tag": tag,
+    }
+    t0 = time.time()
+    try:
+        with use_mesh(mesh):
+            if shape_cfg.kind in ("train", "prefill"):
+                lowered = _lower_train_or_prefill(cfg, shape_cfg, mesh, mode)
+            else:
+                lowered = _lower_decode(cfg, shape_cfg, mesh)
+            t1 = time.time()
+            compiled = lowered.compile()
+            t2 = time.time()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            record["lower_s"] = round(t1 - t0, 2)
+            record["compile_s"] = round(t2 - t1, 2)
+            record["memory"] = {
+                k: getattr(mem, k, None) for k in
+                ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes")}
+            record["xla_cost_flops"] = cost.get("flops", 0.0)
+            record["xla_bytes_accessed"] = cost.get("bytes accessed", 0.0)
+            hlo = compiled.as_text()
+            census = hlo_analyze(hlo)
+            record["flops"] = census["dot_flops"]          # trip-count-scaled
+            record["collectives"] = census["collective_bytes"]
+            record["collective_bytes"] = census["total_collective_bytes"]
+            record["hlo_lines"] = hlo.count("\n")
+            record["ok"] = True
+    except Exception as e:  # noqa: BLE001 - record and continue
+        record["ok"] = False
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+    os.makedirs(out_dir, exist_ok=True)
+    fname = f"{arch}_{shape_name}_{record['mesh']}" + (f"_{tag}" if tag else "")
+    with open(os.path.join(out_dir, fname.replace("/", "-") + ".json"), "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def _key_sds():
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _train_state_sds_and_shardings(cfg, wcfg, mesh, optimizer="adamw"):
+    from repro.runtime.train_step import init_train_state
+    sds = jax.eval_shape(
+        lambda k: init_train_state(k, cfg, wcfg, optimizer), _key_sds())
+    tax = trainable_axes(cfg, wcfg)
+    if optimizer == "adamw":
+        opt_ax = AdamWState(tax, tax, ())
+    else:
+        from repro.optim.sgd import SGDState
+        opt_ax = SGDState(tax, ())
+    state_ax = TrainState(tax, opt_ax, ())
+    shardings = _axes_to_shardings(sds, state_ax, mesh)
+    return sds, shardings
+
+
+def _axes_to_shardings(sds_tree, axes_tree_, mesh):
+    def is_axes_leaf(a):
+        return a == () or (isinstance(a, tuple) and all(
+            isinstance(e, (str, type(None))) for e in a))
+
+    return jax.tree.map(
+        lambda ax, sds: named_sharding(sds.shape, ax, mesh),
+        axes_tree_, sds_tree, is_leaf=is_axes_leaf)
+
+
+def _lower_train_or_prefill(cfg, shape_cfg, mesh, mode):
+    wcfg = (WirelessConfig(mode=mode, perfect_channel=(mode == "cl"))
+            if mode != "cl" else None)
+    batch_sds = M.input_specs(cfg, shape_cfg)
+    batch_ax = M.input_axes(cfg, shape_cfg)
+    batch_sh = _axes_to_shardings(batch_sds, batch_ax, mesh)
+    n_data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+
+    if shape_cfg.kind == "train":
+        state_sds, state_sh = _train_state_sds_and_shardings(cfg, wcfg, mesh)
+        step = make_train_step(cfg, shape_cfg, wcfg, n_data_shards=n_data)
+        fn = jax.jit(step,
+                     in_shardings=(state_sh, batch_sh, None),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))
+        return fn.lower(state_sds, batch_sds, _key_sds())
+
+    # prefill: forward only on trainable params
+    from repro.runtime.train_step import init_train_state
+    state_sds, state_sh = _train_state_sds_and_shardings(cfg, wcfg, mesh)
+    step = make_prefill_step(cfg, shape_cfg, wcfg)
+    fn = jax.jit(step, in_shardings=(state_sh.trainable, batch_sh, None))
+    return fn.lower(state_sds.trainable, batch_sds, _key_sds())
+
+
+def _lower_decode(cfg, shape_cfg, mesh):
+    from repro.nn import init_params, shapes_tree
+    spec_tree = M.param_specs(cfg)
+    params_sds = shapes_tree(spec_tree)
+    params_ax = axes_tree(spec_tree)
+    params_sh = _axes_to_shardings(params_sds, params_ax, mesh)
+
+    cache_sds, cache_ax = cache_specs(cfg, shape_cfg)
+    cache_sh = _axes_to_shardings(cache_sds, cache_ax, mesh)
+
+    tok_sds = jax.ShapeDtypeStruct((shape_cfg.global_batch, 1), jnp.int32)
+    tok_sh = named_sharding(tok_sds.shape, ("batch", None), mesh)
+    idx_sds = jax.ShapeDtypeStruct((), jnp.int32)
+
+    step = make_decode_step(cfg, shape_cfg)
+    fn = jax.jit(step,
+                 in_shardings=(params_sh, cache_sh, tok_sh, None),
+                 out_shardings=(None, cache_sh),
+                 donate_argnums=(1,))
+    return fn.lower(params_sds, cache_sds, tok_sds, idx_sds)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--mode", default="cl", choices=["cl", "sl"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--microbatch", type=int, default=0,
+                    help="microbatch SIZE override (0 = auto)")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else ASSIGNED
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]
+
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = dryrun_one(arch, shape, mp, mode=args.mode,
+                               out_dir=args.out, tag=args.tag,
+                               microbatch=args.microbatch)
+                status = "OK " if r.get("ok") else "FAIL"
+                print(f"[{status}] {arch:24s} {shape:12s} {r['mesh']:8s} "
+                      f"compile={r.get('compile_s', '-')}s "
+                      f"flops={r.get('flops', 0):.3e} "
+                      f"err={r.get('error', '')[:120]}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,221 @@
+"""Post-SPMD HLO text analysis for the roofline.
+
+XLA's `compiled.cost_analysis()` counts each while-loop (scan) body ONCE,
+which undercounts models that scan over layers/microbatches by orders of
+magnitude. This module parses the optimized HLO, builds the computation
+call graph, resolves while-loop trip counts from their condition
+computations, and propagates multiplicities so that:
+
+  * dot/conv FLOPs      = 2 * prod(result dims) * prod(contracting dims)
+  * collective bytes    = result bytes of all-reduce / all-gather /
+                          reduce-scatter / all-to-all / collective-permute
+
+are each scaled by how many times their computation actually executes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_OPCODE_RE = re.compile(r"([a-z][\w\-]*)\(")
+_SHAPE_RE = re.compile(r"([a-z]\d*[a-z]*\d*m?\d*f?n?)\[([0-9,]*)\]")
+_CALL_ATTR = re.compile(r"(?:condition|body|calls|to_apply|branch_computations)="
+                        r"({[^}]*}|%?[\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str
+
+
+def _shape_elems_bytes(type_str: str):
+    total_b = 0
+    dims_list = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total_b += n * _DTYPE_BYTES[dt]
+        dims_list.append((dt, n))
+    return total_b, dims_list
+
+
+def parse_computations(hlo: str) -> dict[str, list[Op]]:
+    comps: dict[str, list[Op]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{") and "->" in stripped:
+            # computation header: [ENTRY] %name (params...) -> type {
+            hdr = stripped
+            if hdr.startswith("ENTRY"):
+                hdr = hdr[len("ENTRY"):].strip()
+            name = hdr.split(" ", 1)[0].split("(", 1)[0].lstrip("%")
+            if name:
+                cur = name
+                comps[cur] = []
+                continue
+        if cur is None:
+            continue
+        if stripped == "}":
+            cur = None
+            continue
+        if stripped.startswith("ROOT "):
+            stripped = stripped[5:]
+        if not stripped.startswith("%") or " = " not in stripped:
+            continue
+        name, rhs = stripped.split(" = ", 1)
+        m = _OPCODE_RE.search(rhs)
+        if not m:
+            continue
+        comps[cur].append(Op(name.lstrip("%"), rhs[:m.start()].strip(),
+                             m.group(1), rhs[m.end():]))
+    return comps
+
+
+def _entry_name(hlo: str, comps) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", hlo, re.M)
+    if m and m.group(1) in comps:
+        return m.group(1)
+    # fallback: computation never referenced by others
+    referenced = set()
+    for ops in comps.values():
+        for op in ops:
+            for attr in _CALL_ATTR.findall(op.rest):
+                for name in re.findall(r"%?([\w\.\-]+)", attr):
+                    referenced.add(name)
+    for name in comps:
+        if name not in referenced:
+            return name
+    return next(iter(comps))
+
+
+def _trip_count(cond_ops: list[Op]) -> int:
+    """Scan-style conditions compare the induction var with a constant."""
+    consts = {}
+    for op in cond_ops:
+        if op.opcode == "constant":
+            val = re.match(r"\s*(\d+)\)", op.rest)
+            if val:
+                consts[op.name] = int(val.group(1))
+    for op in cond_ops:
+        if op.opcode == "compare":
+            operands = re.findall(r"%([\w\.\-]+)", op.rest)
+            for o in operands:
+                if o in consts:
+                    return max(1, consts[o])
+    if len(consts) == 1:
+        return max(1, next(iter(consts.values())))
+    return 1
+
+
+def _callees(op: Op) -> list[tuple[str, str]]:
+    out = []
+    for attr in _CALL_ATTR.findall(op.rest):
+        role = "body" if "body=" + attr in op.rest else "other"
+        for name in re.findall(r"%?([\w\.\-]+)", attr):
+            out.append((name, op.opcode))
+    return out
+
+
+def multiplicities(hlo: str, comps=None) -> dict[str, float]:
+    comps = comps or parse_computations(hlo)
+    entry = _entry_name(hlo, comps)
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # topological-ish propagation: iterate until fixpoint (call graph is a DAG)
+    for _ in range(64):
+        changed = False
+        new = defaultdict(float)
+        new[entry] = 1.0
+        for cname, ops in comps.items():
+            m = mult.get(cname, 0.0)
+            if m == 0.0:
+                continue
+            for op in ops:
+                if op.opcode == "while":
+                    body = cond = None
+                    bm = re.search(r"body=%?([\w\.\-]+)", op.rest)
+                    cm = re.search(r"condition=%?([\w\.\-]+)", op.rest)
+                    if bm:
+                        body = bm.group(1)
+                    if cm:
+                        cond = cm.group(1)
+                    trips = _trip_count(comps.get(cond, [])) if cond else 1
+                    if body in comps:
+                        new[body] += m * trips
+                    if cond in comps:
+                        new[cond] += m * (trips + 1)
+                else:
+                    for callee, _ in _callees(op):
+                        if callee in comps:
+                            new[callee] += m
+        if dict(new) != dict(mult):
+            mult = new
+            changed = True
+        if not changed:
+            break
+    return dict(mult)
+
+
+def _dot_flops(op: Op, symbols: dict[str, str]) -> float:
+    out_b, out_dims = _shape_elems_bytes(op.type_str)
+    out_elems = 1
+    for _, n in out_dims:
+        out_elems *= n
+    # contracting size: product of lhs contracting dims
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.rest)
+    operands = re.findall(r"%([\w\.\-]+)", op.rest.split("),")[0] + ")")
+    k = 1
+    if m and operands:
+        lhs = symbols.get(operands[0])
+        if lhs:
+            _, dims = _shape_elems_bytes(lhs)
+            # dims is [(dtype, total)], need per-dim: reparse
+            mm = _SHAPE_RE.search(lhs)
+            if mm and mm.group(2):
+                sizes = [int(d) for d in mm.group(2).split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(sizes):
+                        k *= sizes[int(ci)]
+    return 2.0 * out_elems * k
+
+
+def analyze(hlo: str) -> dict:
+    comps = parse_computations(hlo)
+    mult = multiplicities(hlo, comps)
+    flops = 0.0
+    coll: dict[str, float] = defaultdict(float)
+    for cname, ops in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        symbols = {op.name: op.type_str for op in ops}
+        for op in ops:
+            if op.opcode in ("dot", "convolution"):
+                flops += m * _dot_flops(op, symbols)
+            elif op.opcode.rstrip("-start") in COLLECTIVES or \
+                    any(op.opcode.startswith(c) for c in COLLECTIVES):
+                b, _ = _shape_elems_bytes(op.type_str)
+                kind = next(c for c in COLLECTIVES if op.opcode.startswith(c))
+                coll[kind] += m * b
+    return {"dot_flops": flops,
+            "collective_bytes": dict(coll),
+            "total_collective_bytes": float(sum(coll.values())),
+            "n_computations": len(comps)}

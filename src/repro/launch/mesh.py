@@ -1,0 +1,31 @@
+"""Production mesh factory. A FUNCTION (not module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before first jax init, everything else sees 1 CPU device."""
+from __future__ import annotations
+
+import math
+
+import jax
+
+# TPU v5e hardware constants (roofline §EXPERIMENTS.md)
+PEAK_FLOPS_BF16 = 197e12          # per chip
+HBM_BW = 819e9                    # bytes/s per chip
+ICI_BW = 50e9                     # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run via "
+            "launch/dryrun.py which sets xla_force_host_platform_device_count")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Tiny mesh for CI-style tests (4 host devices)."""
+    n = math.prod(shape)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

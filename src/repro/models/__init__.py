@@ -1,0 +1,2 @@
+from repro.models.api import (get_model, param_specs, param_axes,
+                              input_specs, input_axes, lm_loss, ModelApi)

@@ -1,0 +1,164 @@
+"""Encoder-decoder transformer (SeamlessM4T-style backbone)
+[arXiv:2308.11596]. The speech frontend (mel + conv feature extractor) is
+a stub per the assignment: `batch["frames"]` carries precomputed frame
+embeddings [B, S_src, d_model]. Encoder is bidirectional; decoder has
+causal self-attention + cross-attention to the encoder output."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import stack_specs, constrain
+from repro.models import layers as L
+
+
+def src_len(cfg, tgt_len: int) -> int:
+    return max(cfg.attn_chunk, tgt_len // 4)
+
+
+# ------------------------------------------------------------- specs
+def enc_block_specs(cfg) -> dict:
+    return {
+        "ln1": L.norm_specs(cfg.d_model, cfg.norm),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.norm_specs(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def dec_block_specs(cfg) -> dict:
+    return {
+        "ln1": L.norm_specs(cfg.d_model, cfg.norm),
+        "self_attn": L.attention_specs(cfg),
+        "ln_x": L.norm_specs(cfg.d_model, cfg.norm),
+        "cross_attn": L.attention_specs(cfg),
+        "ln2": L.norm_specs(cfg.d_model, cfg.norm),
+        "mlp": L.mlp_specs(cfg),
+    }
+
+
+def model_specs(cfg) -> dict:
+    return {
+        "embed": L.embed_specs(cfg.vocab_size, cfg.d_model),
+        "enc": stack_specs(enc_block_specs(cfg), cfg.enc_layers),
+        "dec": stack_specs(dec_block_specs(cfg), cfg.n_layers),
+        "ln_enc": L.norm_specs(cfg.d_model, cfg.norm),
+        "ln_f": L.norm_specs(cfg.d_model, cfg.norm),
+    }
+
+
+# ------------------------------------------------------------- cross-attn
+def cross_attention(p, x, enc_kv, cfg):
+    """x [B,Sq,d]; enc_kv = (k, v) [B,S_src,Hkv,hd] precomputed."""
+    B, Sq, _ = x.shape
+    hd = cfg.hd
+    q = L.linear(p["wq"], x).reshape(B, Sq, cfg.n_heads, hd)
+    q = constrain(q, "batch", "seq", "heads", None)
+    k, v = enc_kv
+    out = L.chunked_attention(q, k, v, cfg, causal=False)
+    out = out.reshape(B, Sq, cfg.n_heads * hd)
+    return constrain(L.linear(p["wo"], out), "batch", "seq", "act_embed")
+
+
+def enc_kv(p, enc_out, cfg):
+    B, S, _ = enc_out.shape
+    hd = cfg.hd
+    k = L.linear(p["wk"], enc_out).reshape(B, S, cfg.n_kv_heads, hd)
+    v = L.linear(p["wv"], enc_out).reshape(B, S, cfg.n_kv_heads, hd)
+    return (constrain(k, "batch", "seq", "kv_heads", None),
+            constrain(v, "batch", "seq", "kv_heads", None))
+
+
+# ------------------------------------------------------------- forward
+def encode(params, frames, cfg):
+    x = constrain(frames.astype(cfg.dtype), "batch", "seq", "act_embed")
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        x = x + L.attention_train(lp["attn"], h, cfg, pos, causal=False)
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        return x + L.apply_mlp(lp["mlp"], h), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return L.apply_norm(params["ln_enc"], x, cfg.norm)
+
+
+def forward(params: dict, batch: dict, cfg, window: int = 0) -> tuple:
+    enc_out = encode(params, batch["frames"], cfg)
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg.dtype)
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        x = x + L.attention_train(lp["self_attn"], h, cfg, pos, True, window)
+        h = L.apply_norm(lp["ln_x"], x, cfg.norm)
+        kv = enc_kv(lp["cross_attn"], enc_out, cfg)
+        x = x + cross_attention(lp["cross_attn"], h, kv, cfg)
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        return x + L.apply_mlp(lp["mlp"], h), None
+
+    body = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    return L.unembed(params["embed"], x), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+# ------------------------------------------------------------- decode
+def cache_shapes(cfg, batch: int, seq_len: int):
+    hd = cfg.hd
+    s_src = src_len(cfg, seq_len)
+    self_kv = (cfg.n_layers, batch, cfg.n_kv_heads, seq_len, hd)
+    cross = (cfg.n_layers, batch, s_src, cfg.n_kv_heads, hd)
+    ax = ("layers", "batch", "kv_heads", "kv_seq", None)
+    ax_x = ("layers", "batch", "kv_seq", "kv_heads", None)
+    return {"k": (self_kv, ax, cfg.dtype), "v": (self_kv, ax, cfg.dtype),
+            "xk": (cross, ax_x, cfg.dtype), "xv": (cross, ax_x, cfg.dtype)}
+
+
+def init_cache(cfg, batch: int, seq_len: int) -> dict:
+    return {k: jnp.zeros(sh, dt)
+            for k, (sh, ax, dt) in cache_shapes(cfg, batch, seq_len).items()}
+
+
+def prefill_cross(params, frames, cfg, cache):
+    """Run the encoder once and fill the cross-attention KV cache."""
+    enc_out = encode(params, frames, cfg)
+
+    def body(_, lp):
+        k, v = enc_kv(lp["cross_attn"], enc_out, cfg)
+        return None, (k, v)
+
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec"])
+    return dict(cache, xk=xk.astype(cfg.dtype), xv=xv.astype(cfg.dtype))
+
+
+def decode_step(params, cache, token, index, cfg, window: int = 0):
+    x = L.embed_lookup(params["embed"], token, cfg.dtype)
+    B = x.shape[0]
+    hd = cfg.hd
+
+    def body(x, lp_kv):
+        lp, ck, cv, xk, xv = lp_kv
+        h = L.apply_norm(lp["ln1"], x, cfg.norm)
+        attn, ck, cv = L.attention_decode(lp["self_attn"], h, cfg, ck, cv,
+                                          index, window)
+        x = x + attn
+        h = L.apply_norm(lp["ln_x"], x, cfg.norm)
+        q = L.linear(lp["cross_attn"]["wq"], h).reshape(B, cfg.n_heads, hd)
+        out = L.decode_attention_jnp(q, xk.swapaxes(1, 2), xv.swapaxes(1, 2),
+                                     xk.shape[1])
+        x = x + L.linear(lp["cross_attn"]["wo"],
+                         out.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype))
+        h = L.apply_norm(lp["ln2"], x, cfg.norm)
+        return x + L.apply_mlp(lp["mlp"], h), (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x)
+    return logits, dict(cache, k=ks, v=vs)

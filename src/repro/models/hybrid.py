@@ -1,0 +1,127 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a single SHARED
+attention+MLP block applied every `attn_every` SSM blocks
+[arXiv:2411.15242]. The shared block has one parameter copy (closed over,
+not scanned); each application has its own KV-cache slot at decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import stack_specs, constrain
+from repro.models import layers as L
+from repro.models.mamba2 import (mamba_specs, apply_mamba_block,
+                                 apply_mamba_decode, mamba_cache_shapes)
+
+
+def layout(cfg):
+    every = cfg.attn_every or cfg.n_layers
+    n_super = cfg.n_layers // every
+    tail = cfg.n_layers - n_super * every
+    return n_super, every, tail
+
+
+def model_specs(cfg) -> dict:
+    n_super, every, tail = layout(cfg)
+    s = {
+        "embed": L.embed_specs(cfg.vocab_size, cfg.d_model),
+        "mamba": stack_specs(stack_specs(mamba_specs(cfg), every, "inner"),
+                             n_super),
+        "shared_ln": L.norm_specs(cfg.d_model, cfg.norm),
+        "shared_attn": L.attention_specs(cfg),
+        "shared_ln2": L.norm_specs(cfg.d_model, cfg.norm),
+        "shared_mlp": L.mlp_specs(cfg),
+        "ln_f": L.norm_specs(cfg.d_model, cfg.norm),
+    }
+    if tail:
+        s["tail"] = stack_specs(mamba_specs(cfg), tail)
+    return s
+
+
+def _shared_block(params, x, cfg, positions, window):
+    h = L.apply_norm(params["shared_ln"], x, cfg.norm)
+    x = x + L.attention_train(params["shared_attn"], h, cfg, positions,
+                              True, window)
+    h = L.apply_norm(params["shared_ln2"], x, cfg.norm)
+    return x + L.apply_mlp(params["shared_mlp"], h)
+
+
+def forward(params: dict, batch: dict, cfg, window: int = 0) -> tuple:
+    x = L.embed_lookup(params["embed"], batch["tokens"], cfg.dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def inner(x, mp):
+        return apply_mamba_block(mp, x, cfg), None
+
+    def super_block(x, mstack):
+        x, _ = jax.lax.scan(inner, x, mstack)
+        return _shared_block(params, x, cfg, positions, window), None
+
+    body = jax.checkpoint(super_block) if cfg.remat else super_block
+    x, _ = jax.lax.scan(lambda c, m: body(c, m), x, params["mamba"])
+    if "tail" in params:
+        tb = (jax.checkpoint(lambda c, m: (apply_mamba_block(m, c, cfg), None))
+              if cfg.remat else lambda c, m: (apply_mamba_block(m, c, cfg), None))
+        x, _ = jax.lax.scan(tb, x, params["tail"])
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    return L.unembed(params["embed"], x), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+# ------------------------------------------------------------- decode
+def cache_shapes(cfg, batch: int, seq_len: int):
+    n_super, every, tail = layout(cfg)
+    m = mamba_cache_shapes(cfg, n_super * every + tail, batch)
+    hd = cfg.hd
+    kv = (n_super, batch, cfg.n_kv_heads, seq_len, hd)
+    m["attn_k"] = (kv, ("layers", "batch", "kv_heads", "kv_seq", None), cfg.dtype)
+    m["attn_v"] = (kv, ("layers", "batch", "kv_heads", "kv_seq", None), cfg.dtype)
+    return m
+
+
+def init_cache(cfg, batch: int, seq_len: int) -> dict:
+    return {k: jnp.zeros(sh, dt)
+            for k, (sh, ax, dt) in cache_shapes(cfg, batch, seq_len).items()}
+
+
+def decode_step(params, cache, token, index, cfg, window: int = 0):
+    x = L.embed_lookup(params["embed"], token, cfg.dtype)
+    n_super, every, tail = layout(cfg)
+
+    ssm = cache["ssm"]
+    conv = cache["conv"]
+    ssm_main = ssm[: n_super * every].reshape(n_super, every, *ssm.shape[1:])
+    conv_main = conv[: n_super * every].reshape(n_super, every, *conv.shape[1:])
+
+    def inner(x, mp_state):
+        mp, s, c = mp_state
+        x, s, c = apply_mamba_decode(mp, x, cfg, s, c)
+        return x, (s, c)
+
+    def super_block(x, sp):
+        mstack, s, c, ck, cv = sp
+        x, (s, c) = jax.lax.scan(inner, x, (mstack, s, c))
+        h = L.apply_norm(params["shared_ln"], x, cfg.norm)
+        attn, ck, cv = L.attention_decode(params["shared_attn"], h, cfg,
+                                          ck, cv, index, window)
+        x = x + attn
+        h = L.apply_norm(params["shared_ln2"], x, cfg.norm)
+        x = x + L.apply_mlp(params["shared_mlp"], h)
+        return x, (s, c, ck, cv)
+
+    x, (s_m, c_m, ck, cv) = jax.lax.scan(
+        lambda carry, sp: super_block(carry, sp), x,
+        (params["mamba"], ssm_main, conv_main, cache["attn_k"], cache["attn_v"]))
+
+    new_ssm = s_m.reshape(-1, *ssm.shape[1:])
+    new_conv = c_m.reshape(-1, *conv.shape[1:])
+    if tail:
+        x, (s_t, c_t) = jax.lax.scan(
+            inner, x, (params["tail"], ssm[n_super * every:],
+                       conv[n_super * every:]))
+        new_ssm = jnp.concatenate([new_ssm, s_t], axis=0)
+        new_conv = jnp.concatenate([new_conv, c_t], axis=0)
+
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    logits = L.unembed(params["embed"], x)
+    return logits, {"ssm": new_ssm, "conv": new_conv,
+                    "attn_k": ck, "attn_v": cv}

@@ -1,0 +1,108 @@
+"""The paper's exact 89,673-parameter sentiment model (Section III-A):
+
+    Embedding(10,001 -> 8)  -> Conv1D(32 filters, k=3, valid) + ReLU
+    -> MaxPool1D(2) -> LSTM(32) -> Dense(16, ReLU, L2) -> Dense(1, sigmoid)
+
+Parameter count: 10,001*8 + (8*3*32+32) + 4*32*(8+32+1)... = 89,673 with
+vocab 10,001 (10k most-frequent words + OOV/pad), matching the paper.
+The model is layered so the SL split point (after conv+pool, paper Sec.
+III-A2) is a first-class boundary: `user_forward` / `server_forward`.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import Spec
+from repro.models.layers import linear_specs, linear
+
+EMBED = 8
+CONV_F = 32
+CONV_K = 3
+LSTM_H = 32
+DENSE = 16
+
+
+def model_specs(cfg=None, compress_factor: int = 0) -> dict:
+    vocab = 10_001 if cfg is None else cfg.vocab_size
+    s = {
+        "embed": Spec((vocab, EMBED), ("vocab", "embed"), init="embed", scale=0.05),
+        "conv_w": Spec((CONV_K, EMBED, CONV_F), ("conv", None, None), init="fan_in"),
+        "conv_b": Spec((CONV_F,), (None,), init="zeros"),
+        # LSTM weights: input + recurrent for 4 gates (i, f, g, o)
+        "lstm_wx": Spec((CONV_F, 4 * LSTM_H), (None, None), init="fan_in"),
+        "lstm_wh": Spec((LSTM_H, 4 * LSTM_H), (None, None), init="fan_in"),
+        "lstm_b": Spec((4 * LSTM_H,), (None,), init="lstm_forget1"),
+        "dense": linear_specs(LSTM_H, DENSE, (None, None), bias=True),
+        "out": linear_specs(DENSE, 1, (None, None), bias=True),
+    }
+    if compress_factor:
+        c = CONV_F // compress_factor
+        # identity warm start (see core/semantic.py docstring)
+        s["sem_enc"] = {"w": Spec((CONV_F, c), (None, None), init="eye"),
+                        "b": Spec((c,), (None,), init="zeros")}
+        s["sem_dec"] = {"w": Spec((c, CONV_F), (None, None), init="eye"),
+                        "b": Spec((CONV_F,), (None,), init="zeros")}
+    return s
+
+
+def n_params() -> int:
+    import math
+    return sum(math.prod(sp.shape) for sp in
+               jax.tree.leaves(model_specs(), is_leaf=lambda x: isinstance(x, Spec)))
+
+
+# ------------------------------------------------- user side (split point)
+def user_forward(params: dict, tokens: jax.Array) -> jax.Array:
+    """Embedding -> Conv1D(valid) + ReLU -> MaxPool(2). The paper's
+    user-side partition. Returns smashed data [B, T', CONV_F]."""
+    x = jnp.take(params["embed"], tokens, axis=0)            # [B,S,8]
+    w, b = params["conv_w"], params["conv_b"]
+    S = tokens.shape[1]
+    out = sum(x[:, i:S - CONV_K + 1 + i] @ w[i] for i in range(CONV_K)) + b
+    out = jax.nn.relu(out)                                    # [B,S-2,32]
+    T = out.shape[1] - out.shape[1] % 2
+    pooled = jnp.max(out[:, :T].reshape(out.shape[0], T // 2, 2, CONV_F), axis=2)
+    return pooled
+
+
+def lstm_scan(params: dict, x: jax.Array) -> jax.Array:
+    """x [B,T,F] -> final hidden state [B,H]. Uses the fused-gate cell
+    (same math as kernels/lstm_cell)."""
+    B = x.shape[0]
+
+    def cell(carry, xt):
+        h, c = carry
+        gates = xt @ params["lstm_wx"] + h @ params["lstm_wh"] + params["lstm_b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        c = jax.nn.sigmoid(f) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    h0 = jnp.zeros((B, LSTM_H), x.dtype)
+    (h, _), _ = jax.lax.scan(cell, (h0, h0), x.swapaxes(0, 1))
+    return h
+
+
+def server_forward(params: dict, smashed: jax.Array) -> jax.Array:
+    """LSTM -> Dense(16, ReLU) -> Dense(1). Returns logits [B, 1]."""
+    h = lstm_scan(params, smashed)
+    h = jax.nn.relu(linear(params["dense"], h))
+    return linear(params["out"], h)
+
+
+def forward(params: dict, batch: dict, cfg=None, window: int = 0):
+    logits = server_forward(params, user_forward(params, batch["tokens"]))
+    return logits, {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Binary cross-entropy on sigmoid logits."""
+    z = logits[:, 0].astype(jnp.float32)
+    y = labels.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(z, 0) - z * y + jnp.log1p(jnp.exp(-jnp.abs(z))))
+
+
+def accuracy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    return jnp.mean(((logits[:, 0] > 0).astype(jnp.int32) == labels)
+                    .astype(jnp.float32))

@@ -1,0 +1,164 @@
+"""Mamba2 (SSD) block — chunkwise-parallel training scan + O(1) decode.
+
+TPU adaptation: the chunked SSD algorithm maps the recurrence onto MXU
+matmuls (intra-chunk [Q,Q] score matrices + inter-chunk state scan), the
+same blocking the Mamba2 paper uses for GPUs but expressed as einsums that
+XLA tiles for the MXU. State layout h: [B, n_heads, head_dim, d_state].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import Spec, constrain
+from repro.models.layers import linear_specs, linear, norm_specs, apply_norm
+
+CONV_K = 4
+CHUNK = 128
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    return d_inner, nh, cfg.ssm_state
+
+
+def mamba_specs(cfg) -> dict:
+    d = cfg.d_model
+    d_inner, nh, ds = ssm_dims(cfg)
+    return {
+        "ln": norm_specs(d, cfg.norm),
+        "wz": linear_specs(d, d_inner, ("embed", "mlp")),
+        "wx": linear_specs(d, d_inner, ("embed", "mlp")),
+        "wB": linear_specs(d, ds, ("embed", None)),
+        "wC": linear_specs(d, ds, ("embed", None)),
+        "wdt": linear_specs(d, nh, ("embed", None), bias=True),
+        "conv_w": Spec((CONV_K, d_inner + 2 * ds), ("conv", "mlp"),
+                       init="uniform", scale=0.5),
+        "A_log": Spec((nh,), (None,), init="zeros"),
+        "D": Spec((nh,), (None,), init="ones"),
+        "ln_gate": norm_specs(d_inner, "rmsnorm"),
+        "wo": linear_specs(d_inner, d, ("mlp", "embed")),
+    }
+
+
+def _causal_depthwise_conv(u: jax.Array, w: jax.Array) -> jax.Array:
+    """u [B,S,ch], w [K,ch] -> causal depthwise conv, silu-activated."""
+    K = w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1]] * w[i][None, None] for i in range(K))
+    return jax.nn.silu(out)
+
+
+def _proj(p, x, cfg):
+    d_inner, nh, ds = ssm_dims(cfg)
+    z = linear(p["wz"], x)
+    xin = linear(p["wx"], x)
+    B_ = linear(p["wB"], x)
+    C_ = linear(p["wC"], x)
+    dt = jax.nn.softplus(linear(p["wdt"], x).astype(jnp.float32))
+    return z, xin, B_, C_, dt
+
+
+def ssd_chunked(xh, B_, C_, dt, A_log, D):
+    """Chunkwise SSD. xh [B,S,nh,hd]; B_/C_ [B,S,ds]; dt [B,S,nh] fp32.
+    Returns y [B,S,nh,hd]."""
+    Bsz, S, nh, hd = xh.shape
+    ds = B_.shape[-1]
+    Q = min(CHUNK, S)
+    assert S % Q == 0, (S, Q)
+    nc = S // Q
+    A = -jnp.exp(A_log.astype(jnp.float32))                     # [nh], negative
+    alog = dt * A[None, None]                                   # [B,S,nh]
+
+    xc = xh.reshape(Bsz, nc, Q, nh, hd)
+    Bc = B_.reshape(Bsz, nc, Q, ds).astype(jnp.float32)
+    Cc = C_.reshape(Bsz, nc, Q, ds).astype(jnp.float32)
+    dtc = dt.reshape(Bsz, nc, Q, nh)
+    ac = alog.reshape(Bsz, nc, Q, nh)
+    cum = jnp.cumsum(ac, axis=2)                                # inclusive
+    xf = xc.astype(jnp.float32)
+
+    # ---- intra-chunk: y[i] = sum_{j<=i} exp(cum_i - cum_j) (C_i.B_j) dt_j x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # [B,nc,Q(i),Q(j),nh]
+    mask = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+    seg = jnp.where(mask[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)                                        # [B,nc,i,j,nh]
+    CB = jnp.einsum("bcid,bcjd->bcij", Cc, Bc)                  # [B,nc,i,j]
+    scores = CB[..., None] * decay * dtc[:, :, None, :, :]      # [B,nc,i,j,nh]
+    y_intra = jnp.einsum("bcijh,bcjhd->bcihd", scores, xf)
+
+    # ---- chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j  x_j (x) B_j
+    dlast = jnp.exp(cum[:, :, -1:, :] - cum) * dtc              # [B,nc,Q,nh]
+    state = jnp.einsum("bcjh,bcjhd,bcjs->bchds", dlast, xf, Bc)  # [B,nc,nh,hd,ds]
+    a_chunk = jnp.exp(cum[:, :, -1])                            # [B,nc,nh]
+
+    # ---- inter-chunk scan over nc
+    def step(h, inp):
+        a_c, s_c = inp                                          # [B,nh], [B,nh,hd,ds]
+        h_new = a_c[..., None, None] * h + s_c
+        return h_new, h                                          # emit PREVIOUS state
+
+    h0 = jnp.zeros((Bsz, nh, hd, ds), jnp.float32)
+    _, h_prev = jax.lax.scan(step, h0,
+                             (a_chunk.swapaxes(0, 1), state.swapaxes(0, 1)))
+    h_prev = h_prev.swapaxes(0, 1)                              # [B,nc,nh,hd,ds]
+
+    y_inter = jnp.einsum("bcis,bchds->bcihd", Cc, h_prev) * \
+        jnp.exp(cum)[..., None].transpose(0, 1, 2, 3, 4)        # [B,nc,Q,nh,hd]
+    y = y_intra + y_inter + D.astype(jnp.float32)[None, None, None, :, None] * xf
+    return y.reshape(Bsz, S, nh, hd).astype(xh.dtype)
+
+
+def apply_mamba_block(p: dict, x: jax.Array, cfg) -> jax.Array:
+    """Full-sequence training/prefill pass. x [B,S,d]."""
+    d_inner, nh, ds = ssm_dims(cfg)
+    h = apply_norm(p["ln"], x, cfg.norm)
+    z, xin, B_, C_, dt = _proj(p, h, cfg)
+    u = jnp.concatenate([xin, B_, C_], axis=-1)
+    u = _causal_depthwise_conv(u, p["conv_w"].astype(u.dtype))
+    xin, B_, C_ = jnp.split(u, [d_inner, d_inner + ds], axis=-1)
+    xh = constrain(xin.reshape(*xin.shape[:2], nh, cfg.ssm_head_dim),
+                   "batch", "seq", "heads", None)
+    y = ssd_chunked(xh, B_, C_, dt, p["A_log"], p["D"])
+    y = y.reshape(*x.shape[:2], d_inner) * jax.nn.silu(z)
+    y = apply_norm(p["ln_gate"], y, "rmsnorm")
+    return constrain(x + linear(p["wo"], y), "batch", "seq", "act_embed")
+
+
+# ------------------------------------------------------------- decode
+def mamba_cache_shapes(cfg, n_layers, batch):
+    d_inner, nh, ds = ssm_dims(cfg)
+    return {
+        "ssm": ((n_layers, batch, nh, cfg.ssm_head_dim, ds),
+                ("layers", "batch", "heads", None, None), jnp.float32),
+        "conv": ((n_layers, batch, CONV_K - 1, d_inner + 2 * ds),
+                 ("layers", "batch", None, "mlp"), jnp.float32),
+    }
+
+
+def apply_mamba_decode(p: dict, x: jax.Array, cfg, ssm_state, conv_state):
+    """x [B,1,d]. ssm_state [B,nh,hd,ds]; conv_state [B,K-1,ch].
+    Returns (y [B,1,d], ssm_state, conv_state)."""
+    d_inner, nh, ds = ssm_dims(cfg)
+    hd = cfg.ssm_head_dim
+    h = apply_norm(p["ln"], x, cfg.norm)
+    z, xin, B_, C_, dt = _proj(p, h, cfg)
+    u = jnp.concatenate([xin, B_, C_], axis=-1)[:, 0]            # [B,ch]
+    w = p["conv_w"].astype(u.dtype)
+    hist = jnp.concatenate([conv_state.astype(u.dtype), u[:, None]], axis=1)
+    conv_out = jax.nn.silu(jnp.einsum("bkc,kc->bc", hist, w))
+    new_conv = hist[:, 1:]
+    xin, B_, C_ = jnp.split(conv_out, [d_inner, d_inner + ds], axis=-1)
+    xh = xin.reshape(-1, nh, hd).astype(jnp.float32)
+    Bf = B_.astype(jnp.float32)
+    Cf = C_.astype(jnp.float32)
+    dt1 = dt[:, 0]                                               # [B,nh]
+    a = jnp.exp(dt1 * -jnp.exp(p["A_log"].astype(jnp.float32))[None])
+    upd = jnp.einsum("bh,bhd,bs->bhds", dt1, xh, Bf)
+    new_ssm = a[..., None, None] * ssm_state + upd
+    y = jnp.einsum("bs,bhds->bhd", Cf, new_ssm) + \
+        p["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    y = apply_norm(p["ln_gate"], y, "rmsnorm")
+    return x + linear(p["wo"], y), new_ssm, new_conv.astype(conv_state.dtype)

@@ -1,0 +1,248 @@
+"""xLSTM blocks (sLSTM + mLSTM) [arXiv:2405.04517].
+
+Layout: super-blocks of (slstm_every-1) mLSTM blocks followed by one sLSTM
+block, scanned over super-blocks so HLO depth is O(1). Both cell types are
+exponentially-gated with the max-stabilizer; the recurrences run as
+`lax.scan` over time (baseline — §Perf iterates a chunkwise-parallel mLSTM).
+Decode carries (C, n, m) / (c, n, m, h) states — O(1) per token, so the
+`long_500k` shape is native (no attention, no KV cache).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import Spec, constrain, stack_specs
+from repro.models.layers import (linear_specs, linear, norm_specs,
+                                 apply_norm, embed_specs, embed_lookup,
+                                 unembed)
+
+
+def _dims(cfg):
+    nh = cfg.n_heads
+    hd = cfg.d_model // nh
+    return nh, hd
+
+
+# ------------------------------------------------------------- mLSTM
+def mlstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    nh, hd = _dims(cfg)
+    return {
+        "ln": norm_specs(d, cfg.norm),
+        "wq": linear_specs(d, d, ("embed", "qkv")),
+        "wk": linear_specs(d, d, ("embed", "qkv")),
+        "wv": linear_specs(d, d, ("embed", "qkv")),
+        "wi": linear_specs(d, nh, ("embed", None), bias=True),
+        "wf": linear_specs(d, nh, ("embed", None), bias=True),
+        "wo_gate": linear_specs(d, d, ("embed", "qkv")),
+        "wo": linear_specs(d, d, ("qkv", "embed")),
+    }
+
+
+def _mlstm_gates(p, h, cfg):
+    nh, hd = _dims(cfg)
+    B, S, _ = h.shape
+    q = linear(p["wq"], h).reshape(B, S, nh, hd) / math.sqrt(hd)
+    k = linear(p["wk"], h).reshape(B, S, nh, hd) / math.sqrt(hd)
+    v = linear(p["wv"], h).reshape(B, S, nh, hd)
+    it = linear(p["wi"], h).astype(jnp.float32)           # [B,S,nh]
+    ft = jax.nn.log_sigmoid(linear(p["wf"], h).astype(jnp.float32))
+    og = jax.nn.sigmoid(linear(p["wo_gate"], h))
+    return q, k, v, it, ft, og
+
+
+def mlstm_cell(state, inp):
+    """One timestep. state: (C [B,nh,hd,hd], n [B,nh,hd], m [B,nh])."""
+    C, n, m = state
+    q, k, v, it, ft = inp
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", vf, kf)
+    n = f_p[..., None] * n + i_p[..., None] * kf
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n, qf)), 1.0)
+    y = jnp.einsum("bhde,bhe->bhd", C, qf) / denom[..., None]
+    return (C, n, m_new), y
+
+
+def apply_mlstm(p: dict, x: jax.Array, cfg) -> jax.Array:
+    nh, hd = _dims(cfg)
+    B, S, d = x.shape
+    h = apply_norm(p["ln"], x, cfg.norm)
+    q, k, v, it, ft, og = _mlstm_gates(p, h, cfg)
+
+    def step(st, inp):
+        st, y = mlstm_cell(st, inp)
+        return st, y
+
+    st0 = (jnp.zeros((B, nh, hd, hd), jnp.float32),
+           jnp.zeros((B, nh, hd), jnp.float32),
+           jnp.full((B, nh), -jnp.inf, jnp.float32))
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          it.swapaxes(0, 1), ft.swapaxes(0, 1))
+    _, ys = jax.lax.scan(step, st0, xs)                    # [S,B,nh,hd]
+    y = ys.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype) * og
+    return constrain(x + linear(p["wo"], y), "batch", "seq", "act_embed")
+
+
+# ------------------------------------------------------------- sLSTM
+def slstm_specs(cfg) -> dict:
+    d = cfg.d_model
+    nh, hd = _dims(cfg)
+    return {
+        "ln": norm_specs(d, cfg.norm),
+        "wx": linear_specs(d, 4 * d, ("embed", "qkv"), bias=True),
+        "r": Spec((nh, hd, 4 * hd), ("heads", None, None), init="fan_in"),
+        "wo": linear_specs(d, d, ("qkv", "embed")),
+    }
+
+
+def slstm_cell(p, state, xt, cfg):
+    """state: (c [B,nh,hd], n, m [B,nh,hd], h [B,nh,hd]); xt [B,4d]."""
+    nh, hd = _dims(cfg)
+    c, n, m, h = state
+    rec = jnp.einsum("bhd,hde->bhe", h, p["r"].astype(jnp.float32))
+    z = xt.reshape(-1, nh, 4 * hd).astype(jnp.float32) + rec
+    it, ft, zt, ot = jnp.split(z, 4, axis=-1)              # each [B,nh,hd]
+    ft = jax.nn.log_sigmoid(ft)
+    m_new = jnp.maximum(ft + m, it)
+    i_p = jnp.exp(it - m_new)
+    f_p = jnp.exp(ft + m - m_new)
+    c = f_p * c + i_p * jnp.tanh(zt)
+    n = f_p * n + i_p
+    h_new = jax.nn.sigmoid(ot) * c / jnp.maximum(n, 1.0)
+    return (c, n, m_new, h_new), h_new
+
+
+def apply_slstm(p: dict, x: jax.Array, cfg) -> jax.Array:
+    nh, hd = _dims(cfg)
+    B, S, d = x.shape
+    hin = apply_norm(p["ln"], x, cfg.norm)
+    xproj = linear(p["wx"], hin).astype(jnp.float32)       # [B,S,4d]
+
+    def step(st, xt):
+        return slstm_cell(p, st, xt, cfg)
+
+    z = jnp.zeros((B, nh, hd), jnp.float32)
+    st0 = (z, z, jnp.full((B, nh, hd), -jnp.inf, jnp.float32), z)
+    _, hs = jax.lax.scan(step, st0, xproj.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    return constrain(x + linear(p["wo"], y), "batch", "seq", "act_embed")
+
+
+# ------------------------------------------------------------- model
+def super_block_layout(cfg):
+    """n_layers split into super-blocks of (per-1) mLSTM + 1 sLSTM."""
+    per = cfg.slstm_every or cfg.n_layers
+    assert cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per, per - 1 if cfg.slstm_every else per
+
+
+def model_specs(cfg) -> dict:
+    n_super, n_m = super_block_layout(cfg)
+    s = {
+        "embed": embed_specs(cfg.vocab_size, cfg.d_model),
+        "mlstm": stack_specs(stack_specs(mlstm_specs(cfg), n_m, "inner"),
+                             n_super),
+        "ln_f": norm_specs(cfg.d_model, cfg.norm),
+    }
+    if cfg.slstm_every:
+        s["slstm"] = stack_specs(slstm_specs(cfg), n_super)
+    return s
+
+
+def forward(params: dict, batch: dict, cfg, window: int = 0) -> tuple:
+    x = embed_lookup(params["embed"], batch["tokens"], cfg.dtype)
+
+    def inner(x, mp):
+        return apply_mlstm(mp, x, cfg), None
+
+    def super_block(x, sp):
+        mstack, slp = sp
+        x, _ = jax.lax.scan(inner, x, mstack)
+        if slp is not None:
+            x = apply_slstm(slp, x, cfg)
+        return x, None
+
+    body = super_block
+    if cfg.remat:
+        body = jax.checkpoint(super_block)
+    slstm = params.get("slstm")
+    x, _ = jax.lax.scan(lambda c, sp: body(c, sp), x,
+                        (params["mlstm"], slstm))
+    x = apply_norm(params["ln_f"], x, cfg.norm)
+    return unembed(params["embed"], x), {"aux_loss": jnp.zeros((), jnp.float32)}
+
+
+# ------------------------------------------------------------- decode
+def cache_shapes(cfg, batch: int, seq_len: int):
+    nh, hd = _dims(cfg)
+    n_super, n_m = super_block_layout(cfg)
+    sh = {
+        "mC": ((n_super, n_m, batch, nh, hd, hd),
+               ("layers", None, "batch", "heads", None, None), jnp.float32),
+        "mn": ((n_super, n_m, batch, nh, hd),
+               ("layers", None, "batch", "heads", None), jnp.float32),
+        "mm": ((n_super, n_m, batch, nh),
+               ("layers", None, "batch", "heads"), jnp.float32),
+    }
+    if cfg.slstm_every:
+        for nm in ("sc", "sn", "sm", "sh"):
+            sh[nm] = ((n_super, batch, nh, hd),
+                      ("layers", "batch", "heads", None), jnp.float32)
+    return sh
+
+
+def init_cache(cfg, batch: int, seq_len: int) -> dict:
+    out = {}
+    for name, (shape, axes, dtype) in cache_shapes(cfg, batch, seq_len).items():
+        fill = -jnp.inf if name in ("mm", "sm") else 0.0
+        out[name] = jnp.full(shape, fill, dtype)
+    return out
+
+
+def decode_step(params, cache, token, index, cfg, window: int = 0):
+    x = embed_lookup(params["embed"], token, cfg.dtype)    # [B,1,d]
+    nh, hd = _dims(cfg)
+    B = x.shape[0]
+
+    def inner(x, mp_state):
+        mp, C, n, m = mp_state
+        h = apply_norm(mp["ln"], x, cfg.norm)
+        q, k, v, it, ft, og = _mlstm_gates(mp, h, cfg)
+        (C, n, m), y = mlstm_cell((C, n, m),
+                                  (q[:, 0], k[:, 0], v[:, 0], it[:, 0], ft[:, 0]))
+        y = y.reshape(B, 1, -1).astype(x.dtype) * og
+        x = x + linear(mp["wo"], y)
+        return x, (C, n, m)
+
+    def super_block(x, sp):
+        mstack, slp, mC, mn, mm, sst = sp
+        x, (mC, mn, mm) = jax.lax.scan(inner, x, (mstack, mC, mn, mm))
+        if slp is not None:
+            sc, sn, sm, sh = sst
+            hin = apply_norm(slp["ln"], x, cfg.norm)
+            xproj = linear(slp["wx"], hin).astype(jnp.float32)[:, 0]
+            (sc, sn, sm, sh), hs = slstm_cell(slp, (sc, sn, sm, sh), xproj, cfg)
+            y = hs.reshape(B, 1, -1).astype(x.dtype)
+            x = x + linear(slp["wo"], y)
+            sst = (sc, sn, sm, sh)
+        return x, (mC, mn, mm, sst)
+
+    slstm = params.get("slstm")
+    sstates = ((cache["sc"], cache["sn"], cache["sm"], cache["sh"])
+               if cfg.slstm_every else None)
+    xs = (params["mlstm"], slstm, cache["mC"], cache["mn"], cache["mm"], sstates)
+    x, (mC, mn, mm, sst) = jax.lax.scan(
+        lambda c, sp: super_block(c, sp), x, xs)
+    x = apply_norm(params["ln_f"], x, cfg.norm)
+    logits = unembed(params["embed"], x)
+    new_cache = {"mC": mC, "mn": mn, "mm": mm}
+    if cfg.slstm_every:
+        new_cache.update(sc=sst[0], sn=sst[1], sm=sst[2], sh=sst[3])
+    return logits, new_cache

@@ -1,0 +1,5 @@
+from repro.nn.core import (Spec, init_params, axes_tree, shapes_tree,
+                           stack_specs, count_params, tree_cast, is_spec)
+from repro.nn.sharding import (use_mesh, constrain, named_sharding,
+                               resolve_spec, tree_shardings, current_mesh,
+                               constrain_tree, DEFAULT_RULES)

@@ -1,0 +1,105 @@
+"""Minimal functional module system.
+
+Models declare a tree of :class:`Spec` leaves (shape + logical axes +
+initializer). ``init_params`` materializes the tree; ``axes_tree`` extracts
+the logical-axis tree consumed by the sharding resolver. No flax — params
+are plain pytrees of jnp arrays, apply functions are pure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Spec:
+    """Declaration of one parameter leaf."""
+
+    shape: tuple
+    axes: tuple  # logical axis name (str) or None per dim
+    init: str = "fan_in"  # fan_in | normal | zeros | ones | uniform | embed
+    dtype: Any = jnp.float32
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key, spec: Spec) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init == "normal":
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "embed":
+        return (spec.scale * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    if spec.init == "uniform":
+        lim = spec.scale
+        return jax.random.uniform(key, spec.shape, spec.dtype, -lim, lim)
+    if spec.init == "eye":
+        # (truncated) identity — codec warm start: decode(encode(x))
+        # starts as an exact projection onto the first min(d_in, d_out)
+        # channels instead of a random rank-reducing map.
+        assert len(spec.shape) == 2
+        return (spec.scale * jnp.eye(*spec.shape, dtype=spec.dtype))
+    if spec.init == "lstm_forget1":
+        # Keras LSTM unit_forget_bias: zeros except the forget-gate
+        # quarter (gate order i, f, g, o), which is 1.0.
+        b = jnp.zeros(spec.shape, spec.dtype)
+        h = spec.shape[-1] // 4
+        return b.at[..., h:2 * h].set(1.0)
+    if spec.init == "fan_in":
+        fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[0], 1)
+        # For stacked (layers, in, out) specs fan-in is the second-to-last dim.
+        if len(spec.shape) >= 3:
+            fan_in = spec.shape[-2]
+        std = spec.scale / math.sqrt(fan_in)
+        return (std * jax.random.normal(key, spec.shape)).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, Spec)
+
+
+def init_params(key, specs: PyTree) -> PyTree:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(k, s) for k, s in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def axes_tree(specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def shapes_tree(specs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                        specs, is_leaf=is_spec)
+
+
+def stack_specs(specs: PyTree, n: int, axis_name: str = "layers") -> PyTree:
+    """Prepend a stacked-layers dim to every spec (for lax.scan over layers)."""
+
+    def f(s: Spec) -> Spec:
+        return Spec((n,) + s.shape, (axis_name,) + s.axes, s.init, s.dtype, s.scale)
+
+    return jax.tree.map(f, specs, is_leaf=is_spec)
+
+
+def count_params(tree: PyTree) -> int:
+    sizes = [math.prod(s.shape) for s in jax.tree.leaves(tree, is_leaf=is_spec)] \
+        if any(is_spec(l) for l in jax.tree.leaves(tree, is_leaf=is_spec)) \
+        else [x.size for x in jax.tree.leaves(tree)]
+    return int(sum(sizes))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)

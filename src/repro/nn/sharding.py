@@ -1,0 +1,162 @@
+"""Logical-axis -> mesh-axis resolution (MaxText-style logical_axis_rules).
+
+A *rule set* is an ordered list of (logical_name, mesh_axes) pairs where
+mesh_axes is a mesh-axis name, a tuple of them, or None. Resolution walks a
+tensor's logical axes; for each, the first rule whose mesh axes (a) all
+exist in the mesh, (b) are not yet taken by another dim of this tensor, and
+(c) whose combined size divides the dim, wins. Non-divisible or exhausted
+axes degrade to replication instead of erroring — this is what lets the
+same model code lower for a 4-device test mesh and the 512-chip pod mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Default rules. Order matters: earlier rules are preferred.
+DEFAULT_RULES: list[tuple[str, Any]] = [
+    ("batch", ("pod", "data")),
+    ("vocab", "model"),
+    ("embed", "data"),          # fsdp sharding for the param embed dim
+    ("heads", "model"),
+    ("kv_heads", "model"),
+    ("qkv", "model"),
+    ("mlp", "model"),
+    ("experts", "model"),
+    ("expert_mlp", None),
+    ("kv_seq", ("model",)),     # decode cache sequence sharding
+    ("long_seq", ("data", "model")),
+    ("act_embed", None),
+    ("seq", None),
+    ("layers", None),
+    ("conv", None),
+    ("state", None),
+]
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: list[tuple[str, Any]] = list(DEFAULT_RULES)
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh], rules: Optional[Sequence] = None):
+    old = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    if rules is not None:
+        _CTX.rules = list(rules)
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _CTX.mesh, _CTX.rules = old
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _rule_for(name: str, rules) -> Any:
+    for k, v in rules:
+        if k == name:
+            return v
+    return None
+
+
+def resolve_spec(shape: Sequence[int], axes: Sequence[Optional[str]],
+                 mesh: Mesh, rules=None) -> P:
+    rules = rules if rules is not None else _CTX.rules
+    taken: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        if name is None:
+            parts.append(None)
+            continue
+        want = _rule_for(name, rules)
+        if want is None:
+            parts.append(None)
+            continue
+        cand = (want,) if isinstance(want, str) else tuple(want)
+        # keep the longest usable prefix of the candidate axes
+        chosen = []
+        size = 1
+        for ax in cand:
+            if ax not in mesh.shape or ax in taken:
+                continue
+            if dim % (size * mesh.shape[ax]) != 0:
+                continue
+            chosen.append(ax)
+            size *= mesh.shape[ax]
+        if chosen:
+            taken.update(chosen)
+            parts.append(tuple(chosen) if len(chosen) > 1 else chosen[0])
+        else:
+            parts.append(None)
+    # strip trailing Nones for cleanliness
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def named_sharding(shape, axes, mesh: Optional[Mesh] = None, rules=None) -> Optional[NamedSharding]:
+    mesh = mesh or _CTX.mesh
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve_spec(shape, axes, mesh, rules))
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a mesh."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return x
+    spec = resolve_spec(x.shape, axes, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_tree(tree, axes_tree):
+    """with_sharding_constraint over a pytree by logical-axes tree; no-op
+    without a mesh. Used to pin the gradient-accumulator carry of the
+    microbatch scan to the parameter sharding (otherwise XLA replicates
+    the carry and all-reduces full gradients every microbatch —
+    EXPERIMENTS.md §Perf-1)."""
+    mesh = _CTX.mesh
+    if mesh is None:
+        return tree
+
+    def is_axes_leaf(a):
+        return a == () or (isinstance(a, tuple) and all(
+            isinstance(e, (str, type(None))) for e in a))
+
+    def f(axes, x):
+        spec = resolve_spec(x.shape, axes, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(f, axes_tree, tree, is_leaf=is_axes_leaf)
+
+
+def tree_shardings(shapes_tree, axes_tree, mesh: Optional[Mesh] = None, rules=None):
+    """Map a (ShapeDtypeStruct tree, axes tree) -> NamedSharding tree."""
+    mesh = mesh or _CTX.mesh
+
+    def is_axes_leaf(a):
+        return isinstance(a, tuple) and all(isinstance(e, (str, type(None))) for e in a)
+
+    # traverse by the axes tree (whose leaves are tuples of axis names) and
+    # pick the matching ShapeDtypeStruct positionally from the shapes tree.
+    return jax.tree.map(
+        lambda axes, sds: named_sharding(sds.shape, axes, mesh, rules),
+        axes_tree, shapes_tree, is_leaf=is_axes_leaf)

@@ -1,0 +1,4 @@
+from repro.optim.sgd import sgd_momentum, SGDState
+from repro.optim.adamw import adamw, AdamWState
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.schedule import step_decay, constant

@@ -1,0 +1,38 @@
+"""AdamW for the scaled (assigned-architecture) configs."""
+from __future__ import annotations
+
+from typing import NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    step: jax.Array
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    def init(params):
+        z = lambda p: jnp.zeros_like(p)
+        return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params),
+                          jnp.zeros((), jnp.int32))
+
+    def update(grads, state: AdamWState, params, lr):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda n, g: b2 * n + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(w, m, n):
+            mhat = m / bc1
+            nhat = n / bc2
+            return w - lr * (mhat / (jnp.sqrt(nhat) + eps) + weight_decay * w)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(mu, nu, step)
+
+    return init, update

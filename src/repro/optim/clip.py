@@ -1,0 +1,23 @@
+"""Gradient clipping (paper: global-norm clip at tau=0.5, Alg. 2)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), norm
+
+
+def clip_array_by_norm(x: jax.Array, max_norm: float) -> jax.Array:
+    """Per-tensor norm clip, used on the smashed-data gradient in SL."""
+    norm = jnp.sqrt(jnp.sum(jnp.square(x.astype(jnp.float32))))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return (x * scale).astype(x.dtype)

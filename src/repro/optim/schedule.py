@@ -1,0 +1,17 @@
+"""LR schedules. The paper reduces the LR by 10% every 5 epochs."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def step_decay(base_lr: float, decay: float = 0.9, every: int = 5):
+    """lr = base * decay**(epoch // every); `epoch` may be a traced int."""
+
+    def lr(epoch):
+        return base_lr * decay ** (epoch // every)
+
+    return lr
+
+
+def constant(base_lr: float):
+    return lambda step: jnp.asarray(base_lr)

@@ -1,0 +1,33 @@
+"""SGD with momentum, exactly the paper's update rule (Eq. 13-14):
+
+    v_{t+1} = mu * v_t + eta * grad
+    w_{t+1} = w_t - v_{t+1}
+
+Note the learning rate multiplies the *gradient* inside the velocity (the
+Keras/paper convention), not the velocity outside.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Any
+
+import jax
+import jax.numpy as jnp
+
+
+class SGDState(NamedTuple):
+    velocity: Any
+    step: jax.Array
+
+
+def sgd_momentum(momentum: float = 0.9):
+    def init(params):
+        return SGDState(jax.tree.map(jnp.zeros_like, params),
+                        jnp.zeros((), jnp.int32))
+
+    def update(grads, state: SGDState, params, lr):
+        v = jax.tree.map(lambda v, g: momentum * v + lr * g,
+                         state.velocity, grads)
+        new_params = jax.tree.map(lambda w, v: w - v, params, v)
+        return new_params, SGDState(v, state.step + 1)
+
+    return init, update

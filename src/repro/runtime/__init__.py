@@ -1,0 +1,4 @@
+from repro.runtime.train_step import (TrainState, make_train_step,
+                                      make_prefill_step, init_train_state,
+                                      window_for, auto_microbatch)
+from repro.runtime.serve_step import make_decode_step

@@ -1,0 +1,112 @@
+"""Federated-learning runtimes (paper Alg. 1).
+
+`fl_round_tiny`  — the paper's exact setting: N=3 users, J local epochs,
+vmapped local training, quantized weight upload through the channel,
+FedAvg, broadcast. Used by the reproduction experiments.
+
+`make_fl_train_step` — the production mapping for the assigned
+architectures: each user is one slice of the `pod` mesh axis. Params carry
+a leading user axis sharded over `pod`; J local steps run pod-local (no
+cross-pod collectives appear in the HLO for the local phase), then the
+quantized, channel-corrupted updates are FedAvg'd with a single cross-pod
+mean — the only `pod`-axis collective in the program. A DiLoCo-style
+local-SGD schedule with a lossy physical channel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as CH
+from repro.core import federated as FED
+from repro.models import api as M
+from repro.models import lstm_tiny
+from repro.optim import sgd_momentum
+from repro.runtime.train_step import _loss, TrainState
+
+
+# --------------------------------------------------------------- tiny (paper)
+def make_local_step_tiny(cfg, wcfg, lr, momentum: float = 0.9,
+                         prox_mu: float = 0.0, anchor=None):
+    """Local SGD step; with prox_mu > 0 it becomes FedProx (Li et al.
+    2020): grad += mu * (w - w_broadcast), pulling heterogeneous users
+    back toward the cycle's anchor — the standard fix for the non-IID
+    drift the extension study measures (benchmarks/extensions.py)."""
+    _, opt_update = sgd_momentum(momentum)
+
+    def local_step(state: TrainState, batch_key):
+        batch, key = batch_key
+        grad_fn = jax.value_and_grad(_loss, has_aux=True)
+        (_, metrics), g = grad_fn(state.trainable, batch, cfg, None, key, 0)
+        if prox_mu and anchor is not None:
+            g = jax.tree.map(
+                lambda gi, wi, ai: gi + prox_mu * (wi - ai),
+                g, state.trainable, anchor)
+        trainable, opt_state = opt_update(g, state.opt_state,
+                                          state.trainable, lr)
+        return TrainState(trainable, opt_state, state.step + 1), metrics
+
+    return local_step
+
+
+def fl_round_tiny(key, user_states, user_batches, cfg, wcfg, lr):
+    """One communication cycle k. user_batches leaves [N, J, ...]."""
+    local_step = make_local_step_tiny(cfg, wcfg, lr)
+    n_users = wcfg.n_users
+    j = jax.tree.leaves(user_batches)[0].shape[1]
+    keys = jax.random.split(key, n_users * j).reshape(n_users, j, 2)
+    kch = jax.random.fold_in(key, 999)
+
+    states, metrics = FED.local_steps_vmapped(
+        local_step, user_states, (user_batches, keys))
+
+    # quantize + channel + FedAvg the MODEL params (Eq. 1-3)
+    user_params = states.trainable["model"]
+    avg, bits = FED.fedavg_through_channel(kch, user_params, wcfg)
+    new_trainable = dict(states.trainable, model=avg)
+    return TrainState(new_trainable, states.opt_state, states.step), \
+        metrics, bits
+
+
+# --------------------------------------------------------- production (pod)
+def make_fl_train_step(cfg, shape_cfg, wcfg, n_users: int = 2,
+                       lr: float = 3e-4):
+    """FL step for the assigned archs on the multi-pod mesh. State trees
+    carry a leading [n_users] axis (logical axis "users" -> mesh "pod").
+    batch: [n_users, local_batch, S]."""
+    _, opt_update = sgd_momentum(0.9)
+
+    def local_steps(state, batch, key):
+        def one(state, batch, key):
+            def body(st, j):
+                grad_fn = jax.value_and_grad(_loss, has_aux=True)
+                (_, m), g = grad_fn(st.trainable, batch, cfg, None,
+                                    jax.random.fold_in(key, j), 0)
+                tr, opt = opt_update(g, st.opt_state, st.trainable, lr)
+                return TrainState(tr, opt, st.step + 1), m
+            return jax.lax.scan(body, state, jnp.arange(wcfg.local_steps))
+        return jax.vmap(one)(state, batch,
+                             jax.random.split(key, n_users))
+
+    def fl_step(state: TrainState, batch: dict, key: jax.Array):
+        state, metrics = local_steps(state, batch, key)
+        # ---- quantized channel sync (the only cross-user collective)
+        def sync_leaf(path_i, leaf):
+            k = jax.random.fold_in(key, path_i)
+            def per_user(u, x):
+                y, _ = CH.transmit_quantized(
+                    jax.random.fold_in(k, u), x, wcfg.quant_bits,
+                    wcfg.snr_db, wcfg.fading, wcfg.perfect_channel)
+                return y
+            received = jax.vmap(per_user)(jnp.arange(n_users), leaf)
+            avg = jnp.mean(received, axis=0)
+            return jnp.broadcast_to(avg, leaf.shape)
+
+        leaves, treedef = jax.tree.flatten(state.trainable["model"])
+        synced = [sync_leaf(i, l) for i, l in enumerate(leaves)]
+        model = jax.tree.unflatten(treedef, synced)
+        trainable = dict(state.trainable, model=model)
+        return TrainState(trainable, state.opt_state, state.step), \
+            jax.tree.map(lambda m: m.mean(), metrics)
+
+    return fl_step

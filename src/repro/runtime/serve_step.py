@@ -1,0 +1,29 @@
+"""Decode (serving) step: ONE new token against a seq_len KV/state cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api as M
+from repro.runtime.train_step import window_for
+
+
+def make_decode_step(cfg, shape_cfg):
+    model = M.get_model(cfg)
+    window = window_for(cfg, shape_cfg)
+
+    def decode_step(params, cache, token, index):
+        logits, cache = model.decode_step(params, cache, token, index, cfg,
+                                          window)
+        return logits, cache
+
+    return decode_step
+
+
+def cache_specs(cfg, shape_cfg):
+    """(ShapeDtypeStruct tree, logical-axes tree) for the decode cache."""
+    model = M.get_model(cfg)
+    shapes = model.cache_shapes(cfg, shape_cfg.global_batch, shape_cfg.seq_len)
+    sds = {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, ax, dt) in shapes.items()}
+    axes = {k: ax for k, (sh, ax, dt) in shapes.items()}
+    return sds, axes

@@ -1,0 +1,153 @@
+"""Split-learning runtime as an explicit two-party protocol (Alg. 2).
+
+`split_forward` (core/split.py) fuses the whole SL cycle into one XLA
+program — right for benchmarking. THIS module is the deployment shape:
+user and server are separate parties exchanging explicit byte-counted
+messages, so the radio boundary is a real serialization point.
+
+    session = SLSession(cfg, wcfg, key)
+    for batch in data:
+        up = session.user_uplink(batch["tokens"], key)       # USER device
+        down = session.server_step(up, batch["labels"], key) # SERVER
+        session.user_downlink(down)                          # USER device
+
+Each leg quantizes, crosses the Rayleigh/AWGN channel, and accounts its
+payload bits. Works for the paper's tiny model (conv+pool user-side) —
+the scaled architectures use the fused path (runtime/train_step.py with
+wcfg.mode == "sl"), which the multi-pod dry-run lowers with the pod axis
+as the user/server boundary.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import channel as CH
+from repro.core import quantization as Q
+from repro.core import semantic
+from repro.core.split import init_codec
+from repro.models import lstm_tiny
+from repro.nn import init_params
+from repro.optim import sgd_momentum
+from repro.optim.clip import clip_array_by_norm
+
+
+@dataclasses.dataclass
+class Message:
+    """One radio transmission: quantized payload + metadata the receiver
+    needs (scale rides the control channel, as in the paper)."""
+    payload: jax.Array          # dequantized-at-receiver tensor
+    bits: int                   # payload size on the wire
+
+
+class SLSession:
+    """One user + one server for the paper's tiny model."""
+
+    def __init__(self, cfg, wcfg, key, lr: float = 0.1,
+                 momentum: float = 0.9):
+        self.cfg, self.wcfg = cfg, wcfg
+        ku, kc = jax.random.split(key)
+        params = init_params(ku, lstm_tiny.model_specs(
+            cfg, wcfg.compress_factor))
+        codec = {"enc": params.pop("sem_enc"), "dec": params.pop("sem_dec")}
+        # partition: user owns embed/conv + the semantic encoder;
+        # server owns LSTM/dense/out + the semantic decoder.
+        self.user_params = {k: params[k] for k in
+                            ("embed", "conv_w", "conv_b")}
+        self.user_codec = {"enc": codec["enc"]}
+        self.server_params = {k: v for k, v in params.items()
+                              if k not in self.user_params}
+        self.server_codec = {"dec": codec["dec"]}
+        self.lr, self.momentum = lr, momentum
+        opt_init, self._opt_update = sgd_momentum(momentum)
+        self._user_opt = opt_init({"p": self.user_params,
+                                   "c": self.user_codec})
+        self._server_opt = opt_init({"p": self.server_params,
+                                     "c": self.server_codec})
+        self._cached_smashed = None
+        self.total_bits = 0
+        self._jit_user_fwd = jax.jit(self._user_fwd)
+        self._jit_server = jax.jit(self._server_step_core)
+        self._jit_user_bwd = jax.jit(self._user_bwd)
+
+    # ------------------------------------------------------------- user
+    def _user_fwd(self, user_params, user_codec, tokens):
+        smashed = lstm_tiny.user_forward(user_params, tokens)
+        return smashed, semantic.encode(user_codec, smashed)
+
+    def user_uplink(self, tokens, key) -> Message:
+        """USER: forward through the local partition, compress, transmit."""
+        smashed, z = self._jit_user_fwd(self.user_params, self.user_codec,
+                                        tokens)
+        self._cached_smashed = (tokens, smashed, z)
+        w = self.wcfg
+        y, _ = CH.transmit_quantized(key, z, w.quant_bits, w.snr_db,
+                                     w.fading, w.perfect_channel)
+        bits = Q.payload_bits(z, w.quant_bits)
+        self.total_bits += bits
+        return Message(y, bits)
+
+    # ----------------------------------------------------------- server
+    def _server_step_core(self, server_params, server_codec, opt, z_hat,
+                          labels):
+        def loss_fn(sp, sc, z):
+            smashed_hat = semantic.decode(sc, z)
+            logits = lstm_tiny.server_forward(sp, smashed_hat)
+            return lstm_tiny.bce_loss(logits, labels)
+
+        loss, (grads_p, grads_c, grad_z) = jax.value_and_grad(
+            loss_fn, argnums=(0, 1, 2))(server_params, server_codec, z_hat)
+        tree, opt = self._opt_update({"p": grads_p, "c": grads_c}, opt,
+                                     {"p": server_params, "c": server_codec},
+                                     self.lr)
+        grad_z = clip_array_by_norm(grad_z, self.wcfg.grad_clip)
+        return tree["p"], tree["c"], opt, grad_z, loss
+
+    def server_step(self, up: Message, labels, key) -> Message:
+        """SERVER: decompress, finish forward, update server weights,
+        transmit the tau-clipped activation gradient back (Alg. 2
+        lines 9-14)."""
+        (self.server_params, self.server_codec, self._server_opt,
+         grad_z, self.last_loss) = self._jit_server(
+            self.server_params, self.server_codec, self._server_opt,
+            up.payload, labels)
+        w = self.wcfg
+        g_hat, _ = CH.transmit_quantized(key, grad_z, w.quant_bits,
+                                         w.snr_db, w.fading,
+                                         w.perfect_channel)
+        bits = Q.payload_bits(grad_z, w.quant_bits)
+        self.total_bits += bits
+        return Message(g_hat, bits)
+
+    # ------------------------------------------------------ user (bwd)
+    def _user_bwd(self, user_params, user_codec, opt, tokens, g_z):
+        def z_of(up, uc):
+            smashed = lstm_tiny.user_forward(up, tokens)
+            return semantic.encode(uc, smashed)
+
+        _, vjp = jax.vjp(z_of, user_params, user_codec)
+        g_p, g_c = vjp(g_z)
+        g_p = jax.tree.map(lambda g: clip_array_by_norm(
+            g, self.wcfg.grad_clip), g_p)
+        tree, opt = self._opt_update({"p": g_p, "c": g_c}, opt,
+                                     {"p": user_params, "c": user_codec},
+                                     self.lr)
+        return tree["p"], tree["c"], opt
+
+    def user_downlink(self, down: Message) -> None:
+        """USER: receive the gradient, backprop the local partition."""
+        tokens, _, _ = self._cached_smashed
+        (self.user_params, self.user_codec, self._user_opt) = \
+            self._jit_user_bwd(self.user_params, self.user_codec,
+                               self._user_opt, tokens, down.payload)
+
+    # ----------------------------------------------------------- infer
+    def predict(self, tokens, key) -> jax.Array:
+        """Full inference pass through the deployed split (radio included)."""
+        up = self.user_uplink(tokens, key)
+        self.total_bits -= up.bits          # inference not counted as train
+        smashed_hat = semantic.decode(self.server_codec, up.payload)
+        return lstm_tiny.server_forward(self.server_params, smashed_hat)

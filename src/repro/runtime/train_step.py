@@ -1,0 +1,154 @@
+"""Step builders: training (with gradient accumulation over microbatches)
+and prefill. The wireless mode (cl / sl) is woven in here — SL routes the
+forward through the split+channel link; CL can corrupt the raw uplink
+tokens. FL wraps these in runtime/fl_runtime.py."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.split import split_forward, init_codec, codec_specs
+from repro.core import centralized
+from repro.models import api as M
+from repro.models import lstm_tiny
+from repro.nn import (init_params, axes_tree, tree_shardings, shapes_tree,
+                      constrain, constrain_tree)
+from repro.optim import adamw, sgd_momentum
+
+MOE_AUX_COEF = 0.01
+
+
+class TrainState(NamedTuple):
+    trainable: Any          # {"model": params, "codec": codec-or-{}}
+    opt_state: Any
+    step: jax.Array
+
+
+def window_for(cfg, shape_cfg) -> int:
+    """long_500k needs sub-quadratic attention: attention families run a
+    sliding window (DESIGN.md §3); SSM/hybrid are natively O(1)-state."""
+    if shape_cfg.name == "long_500k" and cfg.family in ("dense", "moe",
+                                                        "vlm", "audio"):
+        return 8192
+    return 0
+
+
+def auto_microbatch(cfg, shape_cfg, n_data_shards: int = 16) -> int:
+    """Number of grad-accumulation microbatches (1 sample/data-shard per
+    micro-step keeps the 100B+ configs inside 16 GB HBM). Shape override
+    wins, then the arch's microbatch_size, then the 1/shard default."""
+    if shape_cfg.microbatch:
+        return shape_cfg.global_batch // shape_cfg.microbatch
+    if cfg.microbatch_size and shape_cfg.global_batch > cfg.microbatch_size:
+        return shape_cfg.global_batch // cfg.microbatch_size
+    return max(1, shape_cfg.global_batch // n_data_shards)
+
+
+def _forward(trainable, batch, cfg, wcfg, key, window):
+    if wcfg is not None and wcfg.mode == "sl":
+        return split_forward(trainable["model"], trainable["codec"], batch,
+                             cfg, wcfg, key, window)
+    model = M.get_model(cfg)
+    return model.forward(trainable["model"], batch, cfg, window)
+
+
+def _loss(trainable, batch, cfg, wcfg, key, window):
+    logits, aux = _forward(trainable, batch, cfg, wcfg, key, window)
+    if cfg.family == "tiny":
+        loss = lstm_tiny.bce_loss(logits, batch["labels"])
+        metrics = {"loss": loss,
+                   "accuracy": lstm_tiny.accuracy(logits, batch["labels"])}
+    else:
+        loss = M.lm_loss(logits, batch, cfg)
+        metrics = {"loss": loss}
+    total = loss + MOE_AUX_COEF * aux["aux_loss"]
+    metrics["aux_loss"] = aux["aux_loss"]
+    return total, metrics
+
+
+def init_train_state(key, cfg, wcfg=None, optimizer: str = "adamw",
+                     momentum: float = 0.9) -> TrainState:
+    kp, kc = jax.random.split(key)
+    params = init_params(kp, M.param_specs(cfg))
+    codec = (init_codec(kc, cfg, wcfg)
+             if (wcfg is not None and wcfg.mode == "sl") else {})
+    trainable = {"model": params, "codec": codec}
+    opt_init, _ = (adamw() if optimizer == "adamw"
+                   else sgd_momentum(momentum))
+    return TrainState(trainable, opt_init(trainable), jnp.zeros((), jnp.int32))
+
+
+def trainable_axes(cfg, wcfg=None):
+    ax = {"model": M.param_axes(cfg)}
+    ax["codec"] = (axes_tree(codec_specs(cfg, wcfg))
+                   if (wcfg is not None and wcfg.mode == "sl") else {})
+    return ax
+
+
+def make_train_step(cfg, shape_cfg, wcfg=None, optimizer: str = "adamw",
+                    lr: float = 3e-4, momentum: float = 0.9,
+                    n_data_shards: int = 16):
+    """Returns train_step(state, batch, key) -> (state, metrics). Gradient
+    accumulation: lax.scan over microbatches, fp32 accumulators."""
+    window = window_for(cfg, shape_cfg)
+    n_micro = auto_microbatch(cfg, shape_cfg, n_data_shards)
+    _, opt_update = (adamw() if optimizer == "adamw"
+                     else sgd_momentum(momentum))
+    tax = trainable_axes(cfg, wcfg)     # grad-accumulator sharding (§Perf-1)
+
+    def train_step(state: TrainState, batch: dict, key: jax.Array):
+        if wcfg is not None and wcfg.mode == "cl" and not wcfg.perfect_channel \
+                and cfg.family == "tiny":
+            batch, _ = centralized.upload_batch(key, batch, cfg.vocab_size, wcfg)
+
+        def micro(i, batch):
+            return jax.tree.map(
+                lambda a: a.reshape((n_micro, a.shape[0] // n_micro)
+                                    + a.shape[1:])[i], batch)
+
+        grad_fn = jax.value_and_grad(_loss, has_aux=True)
+
+        def accum(carry, i):
+            g_acc, m_acc = carry
+            mb = micro(i, batch)
+            (_, metrics), g = grad_fn(state.trainable, mb, cfg, wcfg,
+                                      jax.random.fold_in(key, i), window)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32),
+                                 g_acc, g)
+            # pin the accumulator to the parameter sharding: the per-
+            # microbatch gradient contribution then reduce-scatters
+            # instead of all-reducing a replicated carry (§Perf-1)
+            g_acc = constrain_tree(g_acc, tax)
+            m_acc = jax.tree.map(lambda a, b: a + b, m_acc, metrics)
+            return (g_acc, m_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                          state.trainable)
+        m0 = {"loss": jnp.zeros((), jnp.float32),
+              "accuracy": jnp.zeros((), jnp.float32),
+              "aux_loss": jnp.zeros((), jnp.float32)}
+        if cfg.family != "tiny":
+            m0.pop("accuracy")
+        (grads, metrics), _ = jax.lax.scan(accum, (g0, m0),
+                                           jnp.arange(n_micro))
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        metrics = jax.tree.map(lambda m: m / n_micro, metrics)
+        trainable, opt_state = opt_update(grads, state.opt_state,
+                                          state.trainable, lr)
+        return TrainState(trainable, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, shape_cfg, wcfg=None):
+    """Inference prefill: full forward, returns last-token logits."""
+    window = window_for(cfg, shape_cfg)
+
+    def prefill(trainable, batch, key):
+        logits, _ = _forward(trainable, batch, cfg, wcfg, key, window)
+        return logits[:, -1]
+
+    return prefill

@@ -1,0 +1,159 @@
+"""Channel + quantization unit/property tests (paper Eq. 1-2, 10-11)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import channel as CH
+from repro.core import quantization as Q
+from repro.core import energy as EN
+from repro.configs.base import WirelessConfig
+
+HS = settings(max_examples=20, deadline=None)
+
+
+# ----------------------------------------------------------- quantization
+@HS
+@given(bits=st.integers(2, 16), seed=st.integers(0, 2 ** 16),
+       scale=st.floats(1e-3, 1e3))
+def test_quant_roundtrip_error_bound(bits, seed, scale):
+    """Eq. 1-2: |x - deq(quant(x))| <= S/2 elementwise."""
+    x = scale * jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    q, s = Q.quantize(x, bits)
+    x_hat = Q.dequantize(q, s)
+    assert float(jnp.max(jnp.abs(x - x_hat))) <= float(s) / 2 + 1e-7 * scale
+
+
+@HS
+@given(bits=st.integers(2, 16), seed=st.integers(0, 2 ** 16))
+def test_quant_offset_codewords_roundtrip(bits, seed):
+    """signed levels <-> unsigned codewords is a bijection in range."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (128,))
+    q, _ = Q.quantize(x, bits)
+    code = Q.quantize_offset(q, bits)
+    assert int(code.max()) < 2 ** bits
+    q2 = Q.unquantize_offset(code, bits)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(q2))
+
+
+def test_quantize_ste_gradient_is_identity():
+    g = jax.grad(lambda x: jnp.sum(Q.quantize_ste(x, 8) * 3.0))(
+        jnp.ones((5,)))
+    np.testing.assert_allclose(np.asarray(g), 3.0)
+
+
+def test_payload_bits():
+    x = jnp.zeros((89_673,))
+    assert Q.payload_bits(x, 8) == 717_384   # paper: 0.72 Mbit
+
+
+# ---------------------------------------------------------------- channel
+def test_bpsk_ber_analytic_values():
+    """Q(sqrt(2 SNR)): at 0 dB -> ~0.0786, at 10 dB -> ~3.9e-6."""
+    assert abs(float(CH.bpsk_bit_error_prob(0.0, 1.0)) - 0.0786) < 1e-3
+    assert float(CH.bpsk_bit_error_prob(10.0, 1.0)) < 1e-5
+    assert float(CH.bpsk_bit_error_prob(-100.0, 1.0)) == pytest.approx(
+        0.5, abs=1e-3)
+
+
+def test_rayleigh_gain_unit_mean():
+    keys = jax.random.split(jax.random.PRNGKey(0), 20_000)
+    gains = jax.vmap(CH.rayleigh_gain)(keys)
+    assert abs(float(gains.mean()) - 1.0) < 0.03     # E|f|^2 = 1
+    # exponential distribution: P(g > 1) = 1/e
+    assert abs(float((gains > 1.0).mean()) - np.exp(-1)) < 0.02
+
+
+@HS
+@given(n_bits=st.integers(1, 16), seed=st.integers(0, 2 ** 16))
+def test_flip_bits_zero_p_identity(n_bits, seed):
+    c = jax.random.bits(jax.random.PRNGKey(seed), (64,), jnp.uint32) \
+        & jnp.uint32(2 ** n_bits - 1)
+    out = CH.flip_bits(jax.random.PRNGKey(seed + 1), c, n_bits, 0.0)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(out))
+
+
+def test_flip_bits_statistics():
+    """Each bit plane flips with probability p independently."""
+    n = 200_000
+    c = jnp.zeros((n,), jnp.uint32)
+    out = CH.flip_bits(jax.random.PRNGKey(0), c, 8, 0.1)
+    for b in range(8):
+        rate = float(((out >> b) & 1).mean())
+        assert abs(rate - 0.1) < 0.01
+
+
+def test_transmit_quantized_perfect_channel():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    y, diag = CH.transmit_quantized(jax.random.PRNGKey(1), x, 8, 0.0,
+                                    perfect=True)
+    q, s = Q.quantize(x, 8)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(Q.dequantize(q, s)))
+
+
+def test_transmit_high_snr_no_errors():
+    x = jax.random.normal(jax.random.PRNGKey(0), (256,))
+    y, diag = CH.transmit_quantized(jax.random.PRNGKey(1), x, 8, 60.0,
+                                    fading=False)
+    assert float(jnp.max(jnp.abs(y - x))) <= float(
+        Q.scale_for(x, 8)) / 2 + 1e-6
+
+
+def test_transmit_tokens_corrupts_at_low_snr():
+    toks = jnp.ones((1000,), jnp.int32) * 500
+    rx = CH.transmit_tokens(jax.random.PRNGKey(0), toks, 10_001, -10.0,
+                            fading=False)
+    assert int((rx != toks).sum()) > 500          # heavy corruption
+    assert int(rx.max()) <= 10_000                # clipped to vocab
+
+
+def test_channel_crossing_gradient_is_clipped_and_quantized():
+    """The SL backward leg (Alg. 2): gradient norm after the crossing is
+    <= tau (+quantization slack)."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+    tau = 0.5
+
+    def f(x):
+        y = CH.channel_crossing(x, jax.random.PRNGKey(1), 16, 60.0, False,
+                                tau, False)
+        return jnp.sum(y * jnp.arange(32, dtype=jnp.float32))
+
+    g = jax.grad(f)(x)
+    gnorm = float(jnp.linalg.norm(g))
+    assert gnorm <= tau * 1.01
+
+
+def test_transmit_pytree_counts_bits():
+    tree = {"a": jnp.zeros((10, 10)), "b": jnp.zeros((7,))}
+    _, bits = CH.transmit_pytree(jax.random.PRNGKey(0), tree, 8, 20.0)
+    assert bits == (100 + 7) * 8
+
+
+# ------------------------------------------------------------------ energy
+def test_capacity_monotone_in_snr():
+    caps = [EN.channel_capacity(100e3, s, fading=False)
+            for s in (0.0, 10.0, 20.0, 30.0)]
+    assert all(a < b for a, b in zip(caps, caps[1:]))
+    # Shannon-Hartley closed form, no fading: C = B log2(1+SNR)
+    assert caps[1] == pytest.approx(100e3 * np.log2(11.0), rel=1e-6)
+
+
+def test_fading_capacity_below_awgn():
+    """Jensen: E[log(1+gX)] < log(1+gE[X]) — Rayleigh costs capacity."""
+    c_fade = EN.channel_capacity(100e3, 20.0, fading=True)
+    c_awgn = EN.channel_capacity(100e3, 20.0, fading=False)
+    assert c_fade < c_awgn
+
+
+def test_comm_energy_linear_in_payload():
+    w = WirelessConfig()
+    e1 = EN.comm_energy_j(1e6, w)
+    e2 = EN.comm_energy_j(2e6, w)
+    assert e2 == pytest.approx(2 * e1, rel=1e-9)
+
+
+def test_co2_conversion():
+    # 1 kWh = 3.6e6 J -> 0.475 kg
+    assert EN.co2_kg(3.6e6) == pytest.approx(0.475)

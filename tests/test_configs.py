@@ -1,0 +1,88 @@
+"""Assigned-architecture configs must match the assignment sheet exactly,
+and every config must carry its citation."""
+import pytest
+
+from repro.configs import ASSIGNED, get_arch, list_archs, SHAPES
+
+# (layers, d_model, heads, kv_heads, d_ff, vocab) from the assignment
+EXPECTED = {
+    "stablelm-12b": (40, 5120, 32, 8, 13824, 100352),
+    "command-r-plus-104b": (64, 12288, 96, 8, 33792, 256000),
+    "internvl2-76b": (80, 8192, 64, 8, 28672, 128256),
+    "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    "xlstm-350m": (24, 1024, 4, 4, 0, 50304),
+    "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151936),
+    "seamless-m4t-medium": (12, 1024, 16, 16, 4096, 256206),
+    "chatglm3-6b": (28, 4096, 32, 2, 13696, 65024),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+}
+
+FAMILY = {
+    "stablelm-12b": "dense", "command-r-plus-104b": "dense",
+    "internvl2-76b": "vlm", "zamba2-1.2b": "hybrid",
+    "xlstm-350m": "ssm", "qwen1.5-0.5b": "dense",
+    "seamless-m4t-medium": "audio", "chatglm3-6b": "dense",
+    "llama4-scout-17b-a16e": "moe", "qwen3-moe-235b-a22b": "moe",
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_config_matches_assignment(arch):
+    cfg = get_arch(arch)
+    L, d, h, kv, ff, v = EXPECTED[arch]
+    assert cfg.n_layers == L
+    assert cfg.d_model == d
+    assert cfg.n_heads == h
+    assert cfg.n_kv_heads == kv
+    assert cfg.d_ff == ff
+    # sharding-motivated vocab padding (to a multiple of 128) is allowed
+    # when documented in the config (seamless: 256206 -> 256256)
+    assert v <= cfg.vocab_size <= v + 127 and (
+        cfg.vocab_size == v or cfg.vocab_size % 128 == 0)
+    assert cfg.family == FAMILY[arch]
+    assert cfg.citation, "every config cites its source"
+
+
+def test_moe_details():
+    q = get_arch("qwen3-moe-235b-a22b")
+    assert q.n_experts == 128 and q.top_k == 8
+    l = get_arch("llama4-scout-17b-a16e")
+    assert l.n_experts == 16 and l.top_k == 1
+
+
+def test_ssm_details():
+    z = get_arch("zamba2-1.2b")
+    assert z.ssm_state == 64
+    x = get_arch("xlstm-350m")
+    assert x.family == "ssm"
+
+
+def test_special_flags():
+    assert get_arch("qwen1.5-0.5b").qkv_bias          # QKV bias
+    assert get_arch("chatglm3-6b").rope_fraction == 0.5   # RoPE 2d
+    assert get_arch("command-r-plus-104b").qkv_bias is False
+    assert get_arch("seamless-m4t-medium").enc_layers > 0  # enc-dec
+    assert get_arch("internvl2-76b").frontend == "vision"
+
+
+def test_shapes_assignment():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_reduced_variants_are_small():
+    for arch in ASSIGNED:
+        r = get_arch(arch).reduced()
+        assert r.n_layers <= 2 and r.d_model <= 512
+        assert (r.n_experts or 0) <= 4
+
+
+def test_registry_has_paper_model():
+    assert "paper-tinylstm" in list_archs()
+    assert get_arch("paper-tinylstm").family == "tiny"

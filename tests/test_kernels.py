@@ -1,0 +1,213 @@
+"""Per-kernel allclose tests vs. the pure-jnp ref.py oracles, with
+hypothesis shape/dtype/parameter sweeps (assignment deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.quant_channel.kernel import quant_channel_2d
+from repro.kernels.quant_channel.ref import quant_channel_ref
+from repro.kernels.quant_channel import ops as qc_ops
+from repro.kernels.lstm_cell.kernel import lstm_final_state
+from repro.kernels.lstm_cell.ref import lstm_final_state_ref
+from repro.kernels.lstm_cell import ops as lstm_ops
+from repro.kernels.decode_attention import ops as da_ops
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.conv_pool.ops import user_conv_pool
+from repro.kernels.conv_pool.ref import conv_pool_ref
+from repro.core import channel as CH
+
+HS = settings(max_examples=12, deadline=None)
+
+
+# ------------------------------------------------------------ quant_channel
+@HS
+@given(m=st.sampled_from([8, 128, 256]),
+       n=st.sampled_from([128, 512, 1024]),
+       bits=st.sampled_from([4, 8, 16]),
+       p=st.floats(0.0, 0.2),
+       seed=st.integers(0, 2 ** 16))
+def test_quant_channel_matches_ref(m, n, bits, p, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kr = jax.random.split(key)
+    x = jax.random.normal(kx, (m, n), jnp.float32)
+    rand = jax.random.bits(kr, (m, n), jnp.uint32)
+    pj = jnp.asarray([p], jnp.float32)
+    out = quant_channel_2d(x, rand, pj, bits, interpret=True)
+    ref = quant_channel_ref(x, rand, pj, bits)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_quant_channel_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (128, 512), dtype)
+    rand = jax.random.bits(key, (128, 512), jnp.uint32)
+    p = jnp.asarray([0.01], jnp.float32)
+    out = quant_channel_2d(x.astype(jnp.float32), rand, p, 8)
+    ref = quant_channel_ref(x.astype(jnp.float32), rand, p, 8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+
+def test_quant_channel_noiseless_is_quantization():
+    """p=0: the kernel must reduce to pure blockwise quantization with
+    error bounded by scale/2 per element."""
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (128, 512), jnp.float32)
+    rand = jax.random.bits(key, (128, 512), jnp.uint32)
+    out = quant_channel_2d(x, rand, jnp.asarray([0.0], jnp.float32), 8)
+    scale = float(jnp.max(jnp.abs(x))) / 127.0
+    assert float(jnp.max(jnp.abs(out - x))) <= scale / 2 + 1e-6
+
+
+def test_quant_channel_ops_arbitrary_shapes():
+    """ops.transmit handles non-2D, non-block-multiple tensors."""
+    key = jax.random.PRNGKey(2)
+    for shape in [(7,), (3, 5, 11), (89_673,), (1, 1)]:
+        x = jax.random.normal(jax.random.fold_in(key, hash(shape) % 97),
+                              shape, jnp.float32)
+        y = qc_ops.transmit(key, x, bits=8, snr_db=40.0, fading=False)
+        assert y.shape == x.shape
+        assert np.isfinite(np.asarray(y)).all()
+        # high SNR: almost no bit errors; output close to quantized input
+        assert float(jnp.mean(jnp.abs(y - x))) < 0.05
+
+
+def test_quant_channel_ber_statistics():
+    """Empirical flip rate of the kernel's hash-derived Bernoulli bits
+    must track the requested p (validates the Murmur3 bit-plane trick)."""
+    key = jax.random.PRNGKey(3)
+    x = jnp.zeros((256, 512), jnp.float32)  # q=0 everywhere, code=qmax
+    rand = jax.random.bits(key, (256, 512), jnp.uint32)
+    p = 0.05
+    out = quant_channel_2d(x, rand, jnp.asarray([p], jnp.float32), 8)
+    # with x==0 the scale collapses to eps; instead count via nonzero out
+    changed = float(jnp.mean((out != 0).astype(jnp.float32)))
+    # P(any of 8 bits flips) = 1-(1-p)^8 ~ 0.337
+    expect = 1 - (1 - p) ** 8
+    assert abs(changed - expect) < 0.02
+
+
+# ---------------------------------------------------------------- lstm_cell
+@HS
+@given(b=st.sampled_from([1, 4, 16]),
+       t=st.sampled_from([1, 7, 14, 30]),
+       h=st.sampled_from([8, 32]),
+       seed=st.integers(0, 2 ** 16))
+def test_lstm_kernel_matches_ref(b, t, h, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    xw = jax.random.normal(k1, (b, t, 4 * h), jnp.float32)
+    wh = jax.random.normal(k2, (h, 4 * h), jnp.float32) * 0.1
+    h_k, c_k = lstm_final_state(xw, wh, interpret=True)
+    h_r, c_r = lstm_final_state_ref(xw, wh)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r),
+                               rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_lstm_layer_matches_model():
+    """ops.lstm_layer == models/lstm_tiny.lstm_scan on the real weights."""
+    from repro.models import lstm_tiny
+    from repro.nn import init_params
+    params = init_params(jax.random.PRNGKey(0), lstm_tiny.model_specs())
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 14, 32), jnp.float32)
+    h_kernel = lstm_ops.lstm_layer(x, params["lstm_wx"], params["lstm_wh"],
+                                   params["lstm_b"])
+    h_model = lstm_tiny.lstm_scan(params, x)
+    np.testing.assert_allclose(np.asarray(h_kernel), np.asarray(h_model),
+                               rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------- decode_attention
+@HS
+@given(b=st.sampled_from([1, 2]),
+       hkv=st.sampled_from([1, 2, 8]),
+       g=st.sampled_from([1, 4, 8]),
+       s=st.sampled_from([128, 256]),
+       hd=st.sampled_from([64, 128]),
+       seed=st.integers(0, 2 ** 16))
+def test_decode_attention_matches_ref(b, hkv, g, s, hd, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, kl = jax.random.split(key, 4)
+    H = hkv * g
+    q = jax.random.normal(kq, (b, H, hd), jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, s, hd), jnp.float32)
+    v = jax.random.normal(kv, (b, hkv, s, hd), jnp.float32)
+    length = jax.random.randint(kl, (), 1, s)
+    out = da_ops.gqa_decode(q, k, v, length, interpret=True)
+    ref = decode_attention_ref(q.reshape(b, hkv, g, hd), k, v, length)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.reshape(b, H, hd)),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [0, 64, 128])
+def test_decode_attention_sliding_window(window):
+    key = jax.random.PRNGKey(7)
+    kq, kk, kv = jax.random.split(key, 3)
+    b, hkv, g, s, hd = 2, 2, 4, 256, 64
+    q = jax.random.normal(kq, (b, hkv * g, hd), jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, s, hd), jnp.float32)
+    v = jax.random.normal(kv, (b, hkv, s, hd), jnp.float32)
+    length = jnp.int32(200)
+    out = da_ops.gqa_decode(q, k, v, length, window=window)
+    ref = decode_attention_ref(q.reshape(b, hkv, g, hd), k, v, length,
+                               window=window)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.reshape(b, hkv * g, hd)),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --------------------------------------------------------------- conv_pool
+@HS
+@given(b=st.sampled_from([1, 4, 8, 16]),
+       t=st.sampled_from([10, 30, 64]),
+       e=st.sampled_from([8, 16]),
+       f=st.sampled_from([32, 64]),
+       seed=st.integers(0, 2 ** 16))
+def test_conv_pool_matches_ref(b, t, e, f, seed):
+    key = jax.random.PRNGKey(seed)
+    kx, kw, kb = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (b, t, e), jnp.float32)
+    w = jax.random.normal(kw, (3, e, f), jnp.float32) * 0.2
+    bias = jax.random.normal(kb, (f,), jnp.float32) * 0.1
+    out = user_conv_pool(x, w, bias)
+    ref = conv_pool_ref(x, w, bias)
+    assert out.shape == (b, (t - 2) // 2, f)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_conv_pool_matches_paper_user_forward():
+    """Kernel == the model's user-side partition (minus embedding)."""
+    from repro.models import lstm_tiny
+    from repro.nn import init_params
+    params = init_params(jax.random.PRNGKey(0), lstm_tiny.model_specs())
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 30), 1, 10_000)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    out = user_conv_pool(x, params["conv_w"], params["conv_b"])
+    ref = lstm_tiny.user_forward(params, tokens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_masks_future():
+    """Tokens beyond `length` must not contribute: poisoning them with
+    huge values leaves the output unchanged."""
+    key = jax.random.PRNGKey(9)
+    kq, kk, kv = jax.random.split(key, 3)
+    b, hkv, g, s, hd = 1, 2, 2, 128, 64
+    q = jax.random.normal(kq, (b, hkv * g, hd), jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, s, hd), jnp.float32)
+    v = jax.random.normal(kv, (b, hkv, s, hd), jnp.float32)
+    length = jnp.int32(64)
+    out1 = da_ops.gqa_decode(q, k, v, length)
+    k2 = k.at[:, :, 64:].set(1e9)
+    v2 = v.at[:, :, 64:].set(-1e9)
+    out2 = da_ops.gqa_decode(q, k2, v2, length)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,184 @@
+"""Model-component property tests: attention equivalences, RoPE, norms,
+MoE dispatch invariants, sliding windows."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.models import layers as L
+from repro.models.moe import apply_moe, _moe_core, capacity, auto_chunk
+from repro.nn import init_params
+
+HS = settings(max_examples=10, deadline=None)
+
+
+def naive_attention(q, k, v, causal=True, window=0):
+    """O(S^2) reference GQA attention."""
+    B, S, H, hd = q.shape
+    G = H // k.shape[2]
+    kg = jnp.repeat(k, G, axis=2)
+    vg = jnp.repeat(v, G, axis=2)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, kg) / math.sqrt(hd)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= qp >= kp
+    if window:
+        mask &= qp - kp < window
+    logits = jnp.where(mask[None, None], logits.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w.astype(v.dtype), vg)
+
+
+@dataclasses.dataclass(frozen=True)
+class _AttnCfg:
+    attn_chunk: int = 32
+
+
+@HS
+@given(s=st.sampled_from([16, 48, 100]),
+       h=st.sampled_from([2, 4]),
+       g=st.sampled_from([1, 2]),
+       window=st.sampled_from([0, 24]),
+       seed=st.integers(0, 2 ** 16))
+def test_chunked_attention_matches_naive(s, h, g, window, seed):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    B, hd = 2, 16
+    hkv = h // g if h % g == 0 else h
+    q = jax.random.normal(kq, (B, s, h, hd), jnp.float32)
+    k = jax.random.normal(kk, (B, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(kv, (B, s, hkv, hd), jnp.float32)
+    out = L.chunked_attention(q, k, v, _AttnCfg(), causal=True,
+                              window=window)
+    ref = naive_attention(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_chunked_attention_window_equals_full_when_large():
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 64, 4, 16))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 4, 16))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 64, 4, 16))
+    full = L.chunked_attention(q, k, v, _AttnCfg(), window=0)
+    windowed = L.chunked_attention(q, k, v, _AttnCfg(), window=64)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(windowed),
+                               rtol=1e-6)
+
+
+# -------------------------------------------------------------------- RoPE
+def test_rope_preserves_norm():
+    """Rotations are orthogonal: |RoPE(x)| == |x|."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (2, 8))
+    sin, cos = L.rope_angles(pos, 32, 10_000.0)
+    y = L.apply_rope(x, sin, cos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<RoPE_m(q), RoPE_n(k)> depends only on m - n."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (32,))
+    k = jax.random.normal(jax.random.PRNGKey(1), (32,))
+
+    def dot_at(m, n):
+        pos = jnp.asarray([[m, n]])
+        sin, cos = L.rope_angles(pos, 32, 10_000.0)
+        qr = L.apply_rope(q.reshape(1, 1, 1, 32),
+                          sin[:, :1], cos[:, :1])
+        kr = L.apply_rope(k.reshape(1, 1, 1, 32),
+                          sin[:, 1:], cos[:, 1:])
+        return float(jnp.sum(qr * kr))
+
+    assert dot_at(3, 1) == pytest.approx(dot_at(10, 8), rel=1e-4)
+    assert dot_at(5, 5) == pytest.approx(dot_at(0, 0), rel=1e-4)
+
+
+def test_rope_partial_fraction_leaves_tail_untouched():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 1, 32))
+    pos = jnp.broadcast_to(jnp.arange(4)[None], (1, 4))
+    sin, cos = L.rope_angles(pos, 32, 10_000.0)
+    y = L.apply_rope(x, sin, cos, fraction=0.5)   # chatglm 2D RoPE
+    np.testing.assert_array_equal(np.asarray(y[..., 16:]),
+                                  np.asarray(x[..., 16:]))
+    assert not np.allclose(np.asarray(y[..., :16]), np.asarray(x[..., :16]))
+
+
+# -------------------------------------------------------------------- norms
+@HS
+@given(seed=st.integers(0, 2 ** 16), d=st.sampled_from([8, 64]))
+def test_rmsnorm_unit_rms(seed, d):
+    p = {"scale": jnp.ones((d,))}
+    x = 5.0 * jax.random.normal(jax.random.PRNGKey(seed), (4, d)) + 2.0
+    y = L.apply_norm(p, x, "rmsnorm")
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-2)
+
+
+def test_layernorm_zero_mean_unit_var():
+    p = {"scale": jnp.ones((64,)), "bias": jnp.zeros((64,))}
+    x = 3.0 * jax.random.normal(jax.random.PRNGKey(0), (4, 64)) + 7.0
+    y = L.apply_norm(p, x, "layernorm")
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(jnp.var(y, -1)), 1.0, atol=1e-2)
+
+
+# --------------------------------------------------------------------- MoE
+def _moe_cfg(**kw):
+    base = get_arch("qwen3-moe-235b-a22b").reduced()
+    return dataclasses.replace(base, **kw)
+
+
+def test_moe_chunked_equals_unchunked():
+    """Chunking is exact when no token hits the capacity limit."""
+    cfg = _moe_cfg(capacity_factor=8.0)          # no drops
+    from repro.models.moe import moe_specs
+    p = init_params(jax.random.PRNGKey(0), moe_specs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    y_full, aux_full = apply_moe(p, x, dataclasses.replace(cfg, moe_chunk=128))
+    y_chunk, aux_chunk = apply_moe(p, x, dataclasses.replace(cfg, moe_chunk=32))
+    np.testing.assert_allclose(np.asarray(y_full), np.asarray(y_chunk),
+                               rtol=2e-4, atol=2e-4)
+    assert float(aux_full["dropped_frac"]) == 0.0
+    assert float(aux_chunk["dropped_frac"]) == 0.0
+
+
+def test_moe_capacity_drops_tokens():
+    cfg = _moe_cfg(capacity_factor=0.25)
+    from repro.models.moe import moe_specs
+    p = init_params(jax.random.PRNGKey(0), moe_specs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    _, aux = apply_moe(p, x, cfg)
+    assert float(aux["dropped_frac"]) > 0.0
+
+
+def test_moe_lb_loss_bounds():
+    """Switch LB loss >= 1 (=1 at perfect balance) for top-1-ish routing."""
+    cfg = _moe_cfg()
+    from repro.models.moe import moe_specs
+    p = init_params(jax.random.PRNGKey(0), moe_specs(cfg))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    _, aux = apply_moe(p, x, cfg)
+    assert float(aux["lb_loss"]) >= 0.9
+
+
+def test_auto_chunk_divides():
+    cfg = _moe_cfg(moe_chunk=16_384)
+    for T in (1_048_576, 65_536, 100, 7):
+        c = auto_chunk(T, cfg)
+        assert T % c == 0 and c <= max(16_384, 1)
+
+
+def test_capacity_lane_aligned():
+    cfg = _moe_cfg()
+    for T in (128, 1000, 4096):
+        assert capacity(T, cfg) % 8 == 0

@@ -1,0 +1,187 @@
+"""End-to-end behaviour tests for the paper's system: FL / SL / CL on the
+tiny model, the split+channel forward, the explicit SL protocol, the
+privacy evaluator, and checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig, WirelessConfig
+from repro.core import privacy as PRIV
+from repro.core.split import split_forward, init_codec
+from repro.data.sentiment import make_dataset, make_splits, partition_users
+from repro.models import lstm_tiny
+from repro.nn import init_params
+from repro.runtime.fl_runtime import fl_round_tiny
+from repro.runtime.sl_runtime import SLSession
+from repro.runtime.train_step import init_train_state, make_train_step
+
+CFG = get_arch("paper-tinylstm")
+SHAPE = ShapeConfig("t", 30, 128, "train", microbatch=128)
+
+
+def _batch(n=128, seed=0):
+    x, y = make_dataset(n, seed=seed)
+    return {"tokens": jnp.asarray(x), "labels": jnp.asarray(y)}
+
+
+def test_tiny_model_param_count_matches_paper():
+    assert lstm_tiny.n_params() == 89_673
+
+
+def test_cl_step_reduces_loss():
+    state = init_train_state(jax.random.PRNGKey(0), CFG, None, "sgd")
+    step = jax.jit(make_train_step(CFG, SHAPE, None, optimizer="sgd",
+                                   lr=0.1))
+    b = _batch()
+    losses = []
+    for i in range(60):
+        state, m = step(state, b, jax.random.PRNGKey(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.02
+    assert np.isfinite(losses).all()
+
+
+def test_sl_forward_perfect_channel_shapes():
+    wcfg = WirelessConfig(mode="sl", perfect_channel=True)
+    state = init_train_state(jax.random.PRNGKey(0), CFG, wcfg, "sgd")
+    logits, aux = split_forward(state.trainable["model"],
+                                state.trainable["codec"], _batch(), CFG,
+                                wcfg, jax.random.PRNGKey(1))
+    assert logits.shape == (128, 1)
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+def test_sl_training_step_updates_both_sides():
+    """SL: user-side (conv), codec, and server-side (lstm) params all
+    receive gradient through the channel crossing."""
+    wcfg = WirelessConfig(mode="sl", quant_bits=16)
+    state = init_train_state(jax.random.PRNGKey(0), CFG, wcfg, "sgd")
+    step = jax.jit(make_train_step(CFG, SHAPE, wcfg, optimizer="sgd",
+                                   lr=0.1))
+    new_state, m = step(state, _batch(), jax.random.PRNGKey(1))
+    for k in ("conv_w", "embed", "lstm_wx", "dense"):
+        d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         state.trainable["model"][k],
+                         new_state.trainable["model"][k])
+        assert max(jax.tree.leaves(d)) > 0, f"{k} did not update"
+    d = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                     state.trainable["codec"], new_state.trainable["codec"])
+    assert max(jax.tree.leaves(d)) > 0, "codec did not update"
+
+
+def test_fl_round_perfect_channel_is_fedavg():
+    """With a perfect channel the synced weights must equal the plain
+    FedAvg mean of the (quantized) user weights."""
+    from repro.core import federated as FED
+    wcfg = WirelessConfig(mode="fl", quant_bits=8, perfect_channel=True)
+    params = init_params(jax.random.PRNGKey(0), lstm_tiny.model_specs())
+    up = jax.tree.map(
+        lambda p: jnp.stack([p, 2 * p, 3 * p]), params)
+    synced, bits = FED.fedavg_through_channel(jax.random.PRNGKey(1), up,
+                                              wcfg)
+    from repro.core import quantization as Q
+    for leaf, s_leaf in zip(jax.tree.leaves(up), jax.tree.leaves(synced)):
+        want = np.mean([np.asarray(Q.dequantize(*Q.quantize(leaf[u], 8)))
+                        for u in range(3)], axis=0)
+        np.testing.assert_allclose(np.asarray(s_leaf[0]), want, atol=1e-6)
+        # broadcast: all users share the same synced weights
+        np.testing.assert_array_equal(np.asarray(s_leaf[0]),
+                                      np.asarray(s_leaf[1]))
+    assert bits == 3 * 8 * sum(l.size for l in jax.tree.leaves(params))
+
+
+def test_fl_round_tiny_runs_and_improves():
+    wcfg = WirelessConfig(mode="fl", quant_bits=8, snr_db=30.0)
+    x, y = make_dataset(3 * 2 * 128, seed=0)
+    state0 = init_train_state(jax.random.PRNGKey(0), CFG, None, "sgd")
+    user_states = jax.tree.map(
+        lambda p: jnp.broadcast_to(p, (3,) + p.shape), state0)
+    toks = jnp.asarray(x.reshape(3, 2, 128, 30))
+    labs = jnp.asarray(y.reshape(3, 2, 128))
+    batches = {"tokens": toks, "labels": labs}
+    losses = []
+    for k in range(3):
+        user_states, metrics, bits = fl_round_tiny(
+            jax.random.PRNGKey(k), user_states, batches, CFG, wcfg, 0.1)
+        losses.append(float(np.asarray(metrics["loss"]).mean()))
+    assert bits == 3 * 8 * 89_673
+    assert losses[-1] <= losses[0] + 1e-3
+
+
+def test_sl_session_protocol_bits_accounting():
+    wcfg = WirelessConfig(mode="sl", quant_bits=16)
+    sess = SLSession(CFG, wcfg, jax.random.PRNGKey(0), lr=0.1)
+    b = _batch(512)
+    up = sess.user_uplink(b["tokens"], jax.random.PRNGKey(1))
+    # smashed [512, 14, 32] compressed x4 -> [512, 14, 8] @ 16 bit
+    assert up.bits == 512 * 14 * 8 * 16
+    down = sess.server_step(up, b["labels"], jax.random.PRNGKey(2))
+    assert down.bits == up.bits
+    sess.user_downlink(down)
+    assert sess.total_bits == 2 * up.bits
+    logits = sess.predict(b["tokens"], jax.random.PRNGKey(3))
+    assert logits.shape == (512, 1)
+
+
+def test_privacy_ordering_cl_below_sl():
+    """The structural privacy claim at unit scale: direct read of raw
+    (CL) reconstructs better than a decoder on compressed+noisy smashed
+    activations (SL)."""
+    x, y = make_dataset(2048, seed=0)
+    norm = x.astype(np.float32) / CFG.vocab_size
+    # CL at 20 dB: token bit errors only
+    from repro.core import channel as CH
+    rx = np.asarray(CH.transmit_tokens(jax.random.PRNGKey(0),
+                                       jnp.asarray(x), CFG.vocab_size,
+                                       20.0))
+    err_cl = PRIV.direct_error(rx.astype(np.float32) / CFG.vocab_size, norm)
+    # SL: compressed smashed data through the channel
+    wcfg = WirelessConfig(mode="sl", quant_bits=16)
+    state = init_train_state(jax.random.PRNGKey(0), CFG, wcfg, "sgd")
+    from repro.core import semantic
+    sm = lstm_tiny.user_forward(state.trainable["model"], jnp.asarray(x))
+    z = semantic.encode(state.trainable["codec"], sm)
+    z_rx, _ = CH.transmit_quantized(jax.random.PRNGKey(1), z, 16, 20.0)
+    err_sl = PRIV.reconstruction_error(
+        jax.random.PRNGKey(2), np.asarray(z_rx).reshape(2048, -1), norm,
+        steps=200)
+    assert err_cl < err_sl
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    from repro.checkpoint.ckpt import save_checkpoint, restore_checkpoint, \
+        latest_step
+    state = init_train_state(jax.random.PRNGKey(0), CFG, None, "sgd")
+    save_checkpoint(str(tmp_path), 7, state)
+    assert latest_step(str(tmp_path)) == 7
+    restored = restore_checkpoint(str(tmp_path), 7, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_kernel_wire_path_transmits_pytree():
+    """FL upload through the fused Pallas wire (interpret mode): same
+    payload accounting, output close to input at high SNR."""
+    from repro.core import channel as CH
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (256, 64)),
+            "b": jax.random.normal(jax.random.PRNGKey(1), (97,))}
+    out, bits = CH.transmit_pytree(jax.random.PRNGKey(2), tree, 8, 50.0,
+                                   fading=False, use_kernel=True)
+    assert bits == (256 * 64 + 97) * 8
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        assert a.shape == b.shape
+        assert float(jnp.mean(jnp.abs(a - b))) < 0.05
+
+
+def test_cl_upload_batch_counts_bits():
+    from repro.core import centralized
+    wcfg = WirelessConfig(mode="cl", snr_db=20.0)
+    b = _batch(64)
+    rx, bits = centralized.upload_batch(jax.random.PRNGKey(0), b,
+                                        CFG.vocab_size, wcfg)
+    assert bits == 64 * 30 * 14 + 64      # 14-bit tokens + 1-bit labels
+    assert rx["tokens"].shape == b["tokens"].shape
