@@ -50,6 +50,11 @@ def _bench_extensions(full):
     return extensions.main(full)
 
 
+def _bench_wire(full):
+    from benchmarks import wire_bench
+    return wire_bench.main(full)
+
+
 BENCHES = {
     "fig3a": _bench_fig3a,
     "fig3b": _bench_fig3b,
@@ -58,6 +63,7 @@ BENCHES = {
     "table2": _bench_table2,
     "roofline": _bench_roofline,
     "extensions": _bench_extensions,
+    "wire": _bench_wire,
 }
 
 

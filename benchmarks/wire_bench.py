@@ -1,0 +1,158 @@
+"""Packed-wire vs per-leaf transmission benchmark (BENCH_wire.json).
+
+Times the FL weight-upload hot path (paper setting: N=3 users,
+tiny-LSTM 89,673-param pytree, 8-bit) and the SL activation/gradient
+legs (batch-512 smashed tensor) under three implementations:
+
+  per_leaf_eager — the seed code path as it actually ran: an un-jitted
+                   Python loop over leaves x users with `bits` separate
+                   bernoulli draws per tensor (O(leaves*users*bits) RNG).
+  per_leaf_jit   — the same loop traced into one XLA program (steelman
+                   baseline: measures op-count, not dispatch).
+  packed         — the fused wire (core/wire.py): one pack, one RNG
+                   draw, one quantize/bit-flip/dequantize pass.
+
+Acceptance (ISSUE 1): packed >= 3x faster than the per-leaf loop for
+the FL setting on CPU. Writes benchmarks/results/BENCH_wire.json so the
+perf trajectory is tracked from this PR onward.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import channel as CH
+from repro.core import quantization as Q
+from repro.core import wire as W
+from repro.models import lstm_tiny
+from repro.nn import init_params
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+N_USERS = 3
+BITS = 8
+SNR_DB = 20.0
+
+
+# ---------------------------------------------------- seed (pre-wire) path
+def _bernoulli_flip_bits(key, codewords, n_bits, p):
+    """The seed implementation of flip_bits: n_bits separate bernoulli
+    draws (kept here as the benchmark baseline after core/channel.py
+    moved to the one-word bit-plane hash)."""
+    flips = jnp.zeros_like(codewords)
+    keys = jax.random.split(key, n_bits)
+    for b in range(n_bits):
+        mask = jax.random.bernoulli(keys[b], p, codewords.shape)
+        flips = flips | (mask.astype(jnp.uint32) << b)
+    return codewords ^ flips
+
+
+def _legacy_transmit_quantized(key, x, bits, snr_db):
+    q, s = Q.quantize(x, bits)
+    kf, kb = jax.random.split(key)
+    p = CH.bpsk_bit_error_prob(snr_db, CH.rayleigh_gain(kf))
+    code = Q.quantize_offset(q, bits)
+    code = _bernoulli_flip_bits(kb, code, bits, p)
+    return Q.dequantize(Q.unquantize_offset(code, bits), s, x.dtype)
+
+
+def _legacy_fedavg(key, user_params, bits, snr_db):
+    """The seed fedavg_through_channel hot loop (leaves x users)."""
+    leaves, treedef = jax.tree.flatten(user_params)
+    n_users = leaves[0].shape[0]
+    out = []
+    for li, leaf in enumerate(leaves):
+        received = []
+        for u in range(n_users):
+            k = jax.random.fold_in(jax.random.fold_in(key, li), u)
+            received.append(_legacy_transmit_quantized(
+                k, leaf[u], bits, snr_db))
+        out.append(jnp.mean(jnp.stack(received), axis=0))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ----------------------------------------------------------------- timing
+def _timeit(fn, *args, reps=20, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e3)          # ms
+
+
+def _first_call_ms(fn, *args):
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return float((time.perf_counter() - t0) * 1e3)
+
+
+def _bench_case(name, user_tree, reps):
+    key = jax.random.PRNGKey(0)
+    rec = {}
+
+    eager = lambda k: _legacy_fedavg(k, user_tree, BITS, SNR_DB)
+    jit_leaf = jax.jit(lambda k: _legacy_fedavg(k, user_tree, BITS, SNR_DB))
+    packed = lambda k: W.transmit_stacked(k, user_tree, BITS, SNR_DB)
+
+    rec["packed_compile_ms"] = _first_call_ms(packed, key)
+    rec["per_leaf_jit_compile_ms"] = _first_call_ms(jit_leaf, key)
+    rec["per_leaf_eager_ms"] = _timeit(eager, key, reps=max(3, reps // 4),
+                                       warmup=1)
+    rec["per_leaf_jit_ms"] = _timeit(jit_leaf, key, reps=reps)
+    rec["packed_ms"] = _timeit(packed, key, reps=reps)
+    rec["speedup_vs_per_leaf"] = rec["per_leaf_eager_ms"] / rec["packed_ms"]
+    rec["speedup_vs_per_leaf_jit"] = rec["per_leaf_jit_ms"] / rec["packed_ms"]
+    rec["elements"] = int(sum(l.size for l in jax.tree.leaves(user_tree)))
+    return name, rec
+
+
+def run(full: bool = False) -> dict:
+    reps = 50 if full else 20
+    out = {"n_users": N_USERS, "bits": BITS, "snr_db": SNR_DB, "cases": {}}
+
+    # FL: paper pytree, N=3 users stacked (Alg. 1 upload)
+    params = init_params(jax.random.PRNGKey(0), lstm_tiny.model_specs())
+    user_params = jax.tree.map(
+        lambda p: jnp.broadcast_to(p, (N_USERS,) + p.shape) *
+        (1.0 + 0.01 * jnp.arange(N_USERS).reshape(
+            (N_USERS,) + (1,) * p.ndim)), params)
+    name, rec = _bench_case("fl_tinylstm_n3", user_params, reps)
+    out["cases"][name] = rec
+
+    # SL: smashed activation + gradient leg sizes (batch 512, Alg. 2)
+    z = jax.random.normal(jax.random.PRNGKey(1), (1, 512, 14, 8))
+    name, rec = _bench_case("sl_activation_b512", z, reps)
+    out["cases"][name] = rec
+    return out
+
+
+def main(full: bool = False) -> list[str]:
+    res = run(full)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_wire.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    rows = []
+    for case, rec in res["cases"].items():
+        for k in ("per_leaf_eager_ms", "per_leaf_jit_ms", "packed_ms",
+                  "packed_compile_ms", "per_leaf_jit_compile_ms"):
+            rows.append(f"wire,{case},{k},{rec[k]:.3f}")
+        rows.append(f"wire,{case},speedup_vs_per_leaf,"
+                    f"{rec['speedup_vs_per_leaf']:.2f}")
+        rows.append(f"wire,{case},speedup_vs_per_leaf_jit,"
+                    f"{rec['speedup_vs_per_leaf_jit']:.2f}")
+    fl = res["cases"]["fl_tinylstm_n3"]
+    rows.append(f"wire,acceptance,packed_ge_3x,"
+                f"{int(fl['speedup_vs_per_leaf'] >= 3.0)}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -16,6 +16,14 @@ kernel `kernels/quant_channel` fuses this with blockwise quantization.
 Rayleigh fading: f = sqrt(e/2)*(g1 + i g2) with g ~ N(0,1) => |f|^2 ~
 Exp(1) (unit mean). The paper draws one f per transmission ("uniformly
 affects all transmitted signals").
+
+RNG scheme: Bernoulli(p) bit noise is derived from ONE uint32 random
+word per element — bit plane b flips iff fmix32(word ^ (b+1)*GOLDEN)
+< p * 2^32 (core/wire.py, shared with the Pallas kernel) — so RNG cost
+does not scale with the bit width. Whole-pytree transmissions
+(transmit_pytree) route through the packed wire (core/wire.py): one
+fused quantize/channel/dequantize pass per tree instead of a per-leaf
+Python loop.
 """
 from __future__ import annotations
 
@@ -26,6 +34,7 @@ import jax.numpy as jnp
 from jax.scipy.special import erfc
 
 from repro.core import quantization as Q
+from repro.core import wire as W
 
 
 def snr_linear(snr_db) -> jax.Array:
@@ -61,13 +70,13 @@ def bpsk_bit_error_prob(snr_db, f2) -> jax.Array:
 
 
 def flip_bits(key, codewords: jax.Array, n_bits: int, p) -> jax.Array:
-    """XOR codewords (uint32, values < 2^n_bits) with iid Bernoulli(p) bits."""
-    flips = jnp.zeros_like(codewords)
-    keys = jax.random.split(key, n_bits)
-    for b in range(n_bits):
-        mask = jax.random.bernoulli(keys[b], p, codewords.shape)
-        flips = flips | (mask.astype(jnp.uint32) << b)
-    return codewords ^ flips
+    """XOR codewords (uint32, values < 2^n_bits) with iid Bernoulli(p)
+    bits. One `jax.random.bits` draw + the Murmur3 bit-plane finalizer
+    (shared with the Pallas wire kernel) — constant RNG cost in n_bits,
+    where the old path paid `n_bits` separate bernoulli draws. `p`
+    broadcasts against `codewords` (per-row fading)."""
+    rand = jax.random.bits(key, codewords.shape, jnp.uint32)
+    return codewords ^ W.bit_flip_mask(rand, n_bits, p)
 
 
 def transmit_quantized(key, x: jax.Array, bits: int, snr_db: float,
@@ -152,25 +161,13 @@ channel_crossing.defvjp(_cc_fwd, _cc_bwd)
 def transmit_pytree(key, tree, bits, snr_db, fading=True, perfect=False,
                     use_kernel: bool = False):
     """Quantize+channel every leaf (FL weight upload, Alg. 1). One fading
-    draw per leaf (one packet per tensor). Returns (tree_hat, total_bits).
+    draw per leaf (one packet per tensor), per-tensor scales. Returns
+    (tree_hat, payload bits as float — wire.payload_bits accounting).
 
-    use_kernel=True routes each leaf through the fused Pallas wire
-    (kernels/quant_channel) — the TPU deploy path; on CPU it runs in
-    interpret mode (same math, per-block scales instead of per-tensor)."""
-    leaves, treedef = jax.tree.flatten(tree)
-    keys = jax.random.split(key, len(leaves))
-    out = []
-    total_bits = 0
-    if use_kernel and not perfect:
-        from repro.kernels.quant_channel.ops import transmit as k_transmit
-        for k, leaf in zip(keys, leaves):
-            out.append(k_transmit(k, leaf, bits=bits, snr_db=snr_db,
-                                  fading=fading))
-            total_bits += Q.payload_bits(leaf, bits)
-    else:
-        for k, leaf in zip(keys, leaves):
-            y, _ = transmit_quantized(k, leaf, bits, snr_db, fading,
-                                      perfect)
-            out.append(y)
-            total_bits += Q.payload_bits(leaf, bits)
-    return jax.tree.unflatten(treedef, out), total_bits
+    The whole tree goes through the packed wire (core/wire.py) as ONE
+    fused jitted pass; use_kernel=True selects the Pallas kernel for the
+    packed buffer (the TPU deploy path; interpret mode on CPU)."""
+    impl = "kernel" if (use_kernel and not perfect) else "packed"
+    out = W.transmit_tree(key, tree, bits, snr_db, fading=fading,
+                          perfect=perfect, impl=impl)
+    return out, W.payload_bits(tree, bits)

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import channel as CH
+from repro.core import wire as W
 
 
 def replicate_for_users(params, n_users: int):
@@ -27,36 +27,29 @@ def replicate_for_users(params, n_users: int):
 def fedavg_through_channel(key, user_params, wcfg):
     """user_params: tree with leading user axis [N, ...]. Quantize each
     user's weights, send through the channel (one fading draw per user per
-    tensor), average (Eq. 3). Returns (global_params, total_payload_bits)."""
+    tensor, per-tensor scales), average (Eq. 3). Returns
+    (global_params, total_payload_bits as float).
+
+    The whole N-user upload is ONE packed-wire pass (core/wire.py): each
+    (user, tensor) pair is a packet with its own fade, and the fused
+    quantize/bit-flip/dequantize runs once over the packed buffer instead
+    of the former leaves x users Python loop. ARQ bit accounting uses the
+    analytic expected transmission count (deterministic; the drawn n_tx
+    is a traced value)."""
     n_users = jax.tree.leaves(user_params)[0].shape[0]
-    leaves, treedef = jax.tree.flatten(user_params)
-    out = []
-    total_bits = 0.0
-    # ARQ bit accounting uses the analytic expected transmission count
-    # (deterministic; the drawn n_tx is a traced value)
     attempts = getattr(wcfg, "arq_attempts", 1)
-    if attempts > 1 and wcfg.fading and not wcfg.perfect_channel:
-        import math as _math
-        p_out = 1.0 - _math.exp(-getattr(wcfg, "arq_min_f2", 0.25))
-        e_tx = (1.0 - p_out ** attempts) / (1.0 - p_out)
+    min_f2 = getattr(wcfg, "arq_min_f2", 0.25)
+    received = W.transmit_stacked(
+        key, user_params, wcfg.quant_bits, wcfg.snr_db,
+        fading=wcfg.fading, perfect=wcfg.perfect_channel,
+        arq_attempts=attempts, arq_min_f2=min_f2)
+    if getattr(wcfg, "aggregate", "mean") == "median":
+        avg = jax.tree.map(lambda r: jnp.median(r, axis=0), received)
     else:
-        e_tx = 1.0
-    for li, leaf in enumerate(leaves):
-        received = []
-        for u in range(n_users):
-            k = jax.random.fold_in(jax.random.fold_in(key, li), u)
-            y, _ = CH.transmit_quantized(
-                k, leaf[u], wcfg.quant_bits, wcfg.snr_db, wcfg.fading,
-                wcfg.perfect_channel, arq_attempts=attempts,
-                arq_min_f2=getattr(wcfg, "arq_min_f2", 0.25))
-            received.append(y)
-            total_bits += leaf[u].size * wcfg.quant_bits * e_tx
-        stack = jnp.stack(received)
-        if getattr(wcfg, "aggregate", "mean") == "median":
-            out.append(jnp.median(stack, axis=0))
-        else:
-            out.append(jnp.mean(stack, axis=0))
-    avg = jax.tree.unflatten(treedef, out)
+        avg = jax.tree.map(lambda r: jnp.mean(r, axis=0), received)
+    e_tx = W.expected_arq_tx(attempts, min_f2, wcfg.fading,
+                             wcfg.perfect_channel)
+    total_bits = W.payload_bits(user_params, wcfg.quant_bits, e_tx)
     # broadcast back (Eq. 4)
     return replicate_for_users(avg, n_users), total_bits
 

@@ -64,5 +64,7 @@ quantize_ste.defvjp(_q_fwd, _q_bwd)
 
 
 def payload_bits(x: jax.Array, bits: int) -> int:
-    """Transmitted payload size of a tensor at b-bit quantization."""
+    """Transmitted payload size of ONE tensor at b-bit quantization.
+    Tree-level accounting (FL uploads, SL legs, ARQ expectation) lives
+    in core.wire.payload_bits, which all hot paths now share."""
     return int(x.size) * bits

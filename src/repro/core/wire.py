@@ -1,0 +1,348 @@
+"""Packed-pytree fused wire: one-shot quantize -> bit-flip channel ->
+dequantize for whole weight/activation pytrees (the FL/SL hot path).
+
+Every FL communication cycle pushes the full weight pytree through the
+radio chain (Alg. 1 lines 8-11) and every SL step pushes the smashed
+activation and its gradient through it (Alg. 2 line 6). The per-leaf /
+per-user Python loops this module replaces emitted O(leaves * users)
+separate quantize/channel/dequantize op chains, each drawing `bits`
+Bernoulli masks — O(leaves * users * bits) RNG calls per round. The
+packed wire does the whole tree in ONE jitted pass.
+
+Manifest layout (`WirePlan`)
+----------------------------
+Each leaf is flattened row-major to float32 and padded up to a whole
+number of `cols`-wide rows (cols = WIRE_COLS = 256, a lane multiple).
+Leaf rows are concatenated into one [R, cols] buffer; R is padded to a
+multiple of 8 (the float32 sublane tile). The plan records, per packet
+(= leaf, or (user, leaf) for stacked transmits):
+
+    row_start[i], rows[i], sizes[i], shapes[i], dtypes[i]
+
+plus the treedef and the padded row count. The plan is a frozen,
+hashable dataclass, so the jitted transmit specializes once per tree
+layout, not once per leaf. Row alignment means per-packet metadata
+(quantization scale, bit-error probability) is a per-ROW vector, which
+the kernel reads as a [block_m, 1] tile beside the data tile.
+
+RNG scheme
+----------
+One `split` of the caller's key: `kf` drives the per-packet Rayleigh
+fades (a single batched uniform draw for all N*P packets), `kb` drives
+ONE `jax.random.bits` draw of a uint32 word per packed element. Bit
+plane b of a codeword flips iff
+
+    fmix32(rand ^ ((b + 1) * GOLDEN)) < p * 2^32
+
+i.e. each plane derives an independent uniform from the same word via
+the Murmur3 finalizer (integer VPU ops only) — RNG cost no longer
+scales with the bit width. The per-leaf reference path (`impl=
+"per_leaf"`) consumes the SAME rand buffer and fades, so packed and
+per-leaf outputs are bit-identical for identical keys (tested in
+tests/test_wire.py).
+
+Kernel grid mapping
+-------------------
+`impl="kernel"` routes the packed buffer through the Pallas kernel
+(kernels/quant_channel/packed_wire_2d): grid = (R // bm, cols // bn)
+over the packed 2D view, with the per-row scale and bit-error vectors
+delivered as [bm, 1] blocks. A stacked N-user transmit reshapes
+[N, R, cols] -> [N*R, cols], so FL's whole multi-user upload is one
+kernel launch with per-user fading via the broadcast p vector. The jnp
+path (`impl="packed"`, the CPU default) is the exact reference: same
+scales, same hash, same flips.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import quantization as Q
+
+WIRE_COLS = 256     # packed row width (lane-size multiple)
+_ROW_ALIGN = 8      # float32 sublane tile: R padded to a multiple of this
+GOLDEN = 0x9E3779B9  # per-bit-plane salt stride (python int, static)
+
+
+# ------------------------------------------------------------- bit-plane RNG
+def fmix32(x: jax.Array) -> jax.Array:
+    """Murmur3 fmix32: a high-quality 32-bit integer hash (VPU-only)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def bit_flip_mask(rand: jax.Array, n_bits: int, p) -> jax.Array:
+    """XOR mask with each of the low `n_bits` planes set iid w.p. `p`,
+    derived from ONE uint32 word per element. `p` is float32 and
+    broadcasts against `rand` (e.g. a per-row [R, 1] vector). Shared by
+    the jnp paths and the Pallas kernel bodies (identical ops)."""
+    thresh = (jnp.asarray(p, jnp.float32) * 4294967296.0).astype(jnp.uint32)
+    flips = jnp.zeros_like(rand)
+    for b in range(n_bits):
+        salt = ((b + 1) * GOLDEN) & 0xFFFFFFFF
+        r = fmix32(rand ^ jnp.uint32(salt))
+        flips = flips | (jnp.where(r < thresh, jnp.uint32(1),
+                                   jnp.uint32(0)) << b)
+    return flips
+
+
+# ---------------------------------------------------------------- manifest
+@dataclasses.dataclass(frozen=True)
+class WirePlan:
+    """Static packed-buffer layout for one pytree (hashable: jit key)."""
+    treedef: Any
+    shapes: tuple              # per-packet logical shapes
+    dtypes: tuple              # per-packet np.dtype
+    sizes: tuple               # per-packet element counts
+    rows: tuple                # per-packet row counts
+    row_start: tuple           # per-packet first row
+    cols: int
+    n_rows: int                # R, padded to a multiple of _ROW_ALIGN
+
+    @property
+    def n_packets(self) -> int:
+        return len(self.shapes)
+
+
+def _plan_from_shapes(treedef, shapes, dtypes, cols: int) -> WirePlan:
+    sizes = tuple(int(np.prod(s)) if s else 1 for s in shapes)
+    rows = tuple(-(-s // cols) for s in sizes)
+    starts, acc = [], 0
+    for r in rows:
+        starts.append(acc)
+        acc += r
+    n_rows = max(_ROW_ALIGN, -(-acc // _ROW_ALIGN) * _ROW_ALIGN)
+    return WirePlan(treedef, tuple(tuple(s) for s in shapes), dtypes,
+                    sizes, rows, tuple(starts), cols, n_rows)
+
+
+def plan_for(tree, cols: int = WIRE_COLS) -> WirePlan:
+    """Layout plan treating every leaf of `tree` as one packet."""
+    leaves, treedef = jax.tree.flatten(tree)
+    return _plan_from_shapes(treedef,
+                             tuple(tuple(l.shape) for l in leaves),
+                             tuple(np.dtype(l.dtype) for l in leaves), cols)
+
+
+def _row_ids(plan: WirePlan) -> np.ndarray:
+    """Static row -> packet-id map (final padding rows alias packet 0;
+    they hold zeros, which cannot perturb a max|.| scale, and their
+    output is discarded at unpack)."""
+    ids = np.zeros(plan.n_rows, np.int32)
+    for i, (r0, r) in enumerate(zip(plan.row_start, plan.rows)):
+        ids[r0:r0 + r] = i
+    return ids
+
+
+# ------------------------------------------------------------- pack/unpack
+def _pack_leaves(leaves, plan: WirePlan) -> jax.Array:
+    parts = []
+    for leaf, size, r in zip(leaves, plan.sizes, plan.rows):
+        v = jnp.ravel(leaf).astype(jnp.float32)
+        parts.append(jnp.pad(v, (0, r * plan.cols - size)))
+    flat = jnp.concatenate(parts) if parts else jnp.zeros((0,), jnp.float32)
+    flat = jnp.pad(flat, (0, plan.n_rows * plan.cols - flat.shape[0]))
+    return flat.reshape(plan.n_rows, plan.cols)
+
+
+def _unpack_leaves(buf: jax.Array, plan: WirePlan):
+    flat = buf.reshape(-1)
+    out = []
+    for shape, dt, size, r0 in zip(plan.shapes, plan.dtypes, plan.sizes,
+                                   plan.row_start):
+        off = r0 * plan.cols
+        out.append(flat[off:off + size].reshape(shape).astype(dt))
+    return out
+
+
+def pack_tree(tree, cols: int = WIRE_COLS):
+    """-> (packed [R, cols] float32 buffer, WirePlan)."""
+    plan = plan_for(tree, cols)
+    return _pack_leaves(jax.tree.leaves(tree), plan), plan
+
+
+def unpack_tree(buf: jax.Array, plan: WirePlan):
+    """Inverse of pack_tree (padding discarded, dtypes restored)."""
+    return jax.tree.unflatten(plan.treedef, _unpack_leaves(buf, plan))
+
+
+# --------------------------------------------------------------- accounting
+def expected_arq_tx(attempts: int = 1, min_f2: float = 0.25,
+                    fading: bool = True, perfect: bool = False) -> float:
+    """Analytic expected transmissions per packet under outage-ARQ:
+    E[tx] = (1 - p_out^A) / (1 - p_out), p_out = P(|f|^2 < min_f2)
+    = 1 - exp(-min_f2) for the unit-mean Rayleigh gain. Deterministic
+    (the drawn n_tx is a traced value), so payload accounting stays a
+    plain python float."""
+    if attempts <= 1 or not fading or perfect:
+        return 1.0
+    p_out = 1.0 - math.exp(-min_f2)
+    return (1.0 - p_out ** attempts) / (1.0 - p_out)
+
+
+def payload_bits(tree, bits: int, expected_tx: float = 1.0) -> float:
+    """On-air payload of transmitting every leaf of `tree` at b-bit
+    quantization, scaled by the expected (ARQ) transmission count.
+    The ONE accounting helper for FL uploads and SL legs — always a
+    float, so int/float mixing between call sites is gone."""
+    n = sum(int(l.size) for l in jax.tree.leaves(tree))
+    return float(n) * float(bits) * float(expected_tx)
+
+
+# ------------------------------------------------------------ fused channel
+def wire_transform(buf: jax.Array, rand: jax.Array, scale, p,
+                   bits: int) -> jax.Array:
+    """The fused quantize -> BPSK/Rayleigh bit-flip -> dequantize math on
+    a packed buffer. `scale`/`p` broadcast against `buf` (per-row
+    [..., R, 1] vectors). Identical ops to the Pallas kernel body — this
+    IS the reference."""
+    qm = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(jnp.round(buf / scale), -qm, qm).astype(jnp.int32)
+    code = (q + jnp.int32(qm)).astype(jnp.uint32)
+    code = code ^ bit_flip_mask(rand, bits, p)
+    q_hat = jnp.clip(code.astype(jnp.int32) - jnp.int32(qm), -qm, qm)
+    return (q_hat.astype(jnp.float32) * scale).astype(buf.dtype)
+
+
+def _packet_fades(kf, n: int, n_packets: int, fading: bool,
+                  arq_attempts: int, arq_min_f2: float) -> jax.Array:
+    """|f|^2 per (user, packet) — ONE batched uniform draw. With ARQ,
+    deep fades are redrawn up to `arq_attempts` times (vectorized
+    rayleigh_gain_arq)."""
+    if not fading:
+        return jnp.ones((n, n_packets), jnp.float32)
+    if arq_attempts > 1:
+        u = jax.random.uniform(kf, (n, n_packets, arq_attempts),
+                               jnp.float32, 1e-12, 1.0)
+        f2s = -jnp.log(u)
+        ok = f2s >= arq_min_f2
+        any_ok = ok.any(axis=-1)
+        first = jnp.argmax(ok, axis=-1)
+        idx = jnp.where(any_ok, first, arq_attempts - 1)
+        return jnp.take_along_axis(f2s, idx[..., None], axis=-1)[..., 0]
+    u = jax.random.uniform(kf, (n, n_packets), jnp.float32, 1e-12, 1.0)
+    return -jnp.log(u)
+
+
+def _transmit_per_leaf(leaves, plan: WirePlan, rand, p, bits: int):
+    """Per-leaf reference loop: per-tensor scale (Q.quantize), shared
+    hash flips on the SAME rand words the packed path uses. Bit-exactly
+    equal to the packed output — and the shape of the per-round cost the
+    packed wire removes (O(packets) separate op chains)."""
+    n = rand.shape[0]
+    outs = []
+    for ui in range(n):
+        row = []
+        for i, leaf in enumerate(leaves):
+            x = leaf[ui].astype(jnp.float32)
+            q, s = Q.quantize(x, bits)
+            code = Q.quantize_offset(q, bits)
+            r0, nr, size = plan.row_start[i], plan.rows[i], plan.sizes[i]
+            rs = rand[ui, r0:r0 + nr].reshape(-1)[:size].reshape(x.shape)
+            code = code ^ bit_flip_mask(rs, bits, p[ui, i])
+            q_hat = Q.unquantize_offset(code, bits)
+            row.append(Q.dequantize(q_hat, s).astype(plan.dtypes[i]))
+        outs.append(row)
+    return tuple(jnp.stack([outs[ui][i] for ui in range(n)])
+                 for i in range(len(leaves)))
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "plan", "bits", "fading", "perfect", "arq_attempts", "arq_min_f2",
+    "impl", "interpret"))
+def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
+                              snr_db, fading: bool, perfect: bool,
+                              arq_attempts: int, arq_min_f2: float,
+                              impl: str, interpret: bool):
+    """One fused pass over a stacked tuple of leaves ([N, *shape_i]).
+    Returns the received leaves, same stacked shapes."""
+    from repro.core import channel as CH  # lazy: channel imports wire
+
+    n = leaves[0].shape[0] if leaves else 1
+    npk = plan.n_packets
+    kf, kb = jax.random.split(key)
+    if perfect:
+        p = jnp.zeros((n, npk), jnp.float32)
+    else:
+        f2 = _packet_fades(kf, n, npk, fading, arq_attempts, arq_min_f2)
+        p = CH.bpsk_bit_error_prob(snr_db, f2)
+    rand = jax.random.bits(kb, (n, plan.n_rows, plan.cols), jnp.uint32)
+
+    if impl == "per_leaf":
+        return _transmit_per_leaf(leaves, plan, rand, p, bits)
+
+    buf = jax.vmap(lambda *ls: _pack_leaves(ls, plan))(*leaves)  # [n, R, C]
+    row_id = jnp.asarray(_row_ids(plan))
+    absrow = jnp.max(jnp.abs(buf), axis=2)                        # [n, R]
+    amax = jax.vmap(lambda a: jax.ops.segment_max(
+        a, row_id, num_segments=npk))(absrow)                     # [n, P]
+    scale = jnp.maximum(amax, 1e-12) / Q.qmax(bits)
+    scale_row = jnp.take(scale, row_id, axis=1)[..., None]        # [n, R, 1]
+    p_row = jnp.take(p, row_id, axis=1)[..., None]                # [n, R, 1]
+
+    if impl == "kernel":
+        from repro.kernels.quant_channel.kernel import packed_wire_2d
+        r, c = plan.n_rows, plan.cols
+        y = packed_wire_2d(buf.reshape(n * r, c), rand.reshape(n * r, c),
+                           scale_row.reshape(n * r, 1),
+                           p_row.reshape(n * r, 1), bits,
+                           interpret=interpret).reshape(n, r, c)
+    else:
+        y = wire_transform(buf, rand, scale_row, p_row, bits)
+    return jax.vmap(lambda b: tuple(_unpack_leaves(b, plan)))(y)
+
+
+def transmit_stacked(key, tree, bits: int, snr_db, fading: bool = True,
+                     perfect: bool = False, arq_attempts: int = 1,
+                     arq_min_f2: float = 0.25, impl: str = "packed",
+                     interpret: bool = True):
+    """Fused transmit of a tree whose leaves carry a leading user axis
+    [N, ...]: each (user, leaf) pair is one packet with its own fade and
+    per-tensor quantization scale — FL's whole N-user upload in one
+    jitted call (one kernel launch under impl="kernel")."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        return tree
+    plan = _plan_from_shapes(treedef,
+                             tuple(tuple(l.shape[1:]) for l in leaves),
+                             tuple(np.dtype(l.dtype) for l in leaves),
+                             WIRE_COLS)
+    out = _transmit_stacked_planned(key, tuple(leaves), plan, int(bits),
+                                    snr_db, bool(fading), bool(perfect),
+                                    int(arq_attempts), float(arq_min_f2),
+                                    impl, bool(interpret))
+    return jax.tree.unflatten(treedef, list(out))
+
+
+def transmit_tree(key, tree, bits: int, snr_db, fading: bool = True,
+                  perfect: bool = False, arq_attempts: int = 1,
+                  arq_min_f2: float = 0.25, impl: str = "packed",
+                  interpret: bool = True):
+    """Fused transmit of an arbitrary pytree: one fade + one per-tensor
+    scale per leaf, one RNG draw and one quantize/channel/dequantize
+    pass for the whole tree. Drop-in replacement for the per-leaf
+    transmit loop; `impl` selects packed-jnp (default), the Pallas
+    kernel, or the bit-identical per-leaf reference."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        return tree
+    plan = _plan_from_shapes(treedef,
+                             tuple(tuple(l.shape) for l in leaves),
+                             tuple(np.dtype(l.dtype) for l in leaves),
+                             WIRE_COLS)
+    stacked = tuple(l[None] for l in leaves)
+    out = _transmit_stacked_planned(key, stacked, plan, int(bits), snr_db,
+                                    bool(fading), bool(perfect),
+                                    int(arq_attempts), float(arq_min_f2),
+                                    impl, bool(interpret))
+    return jax.tree.unflatten(treedef, [o[0] for o in out])

@@ -14,9 +14,17 @@ TPU adaptation notes (DESIGN.md §5):
     p = Q(sqrt(2 |f|^2 SNR)) — see core/channel.py;
   * randomness: one uint32 word per element enters the kernel; each of
     the b bit-planes derives an independent uniform via a Murmur3-style
-    integer finalizer (VPU int ops only). On real TPU hardware the rand
-    input can be replaced by `pltpu.prng_random_bits` (not available in
-    interpret mode, which is how this container validates the kernel).
+    integer finalizer (VPU int ops only, shared with core/wire.py). On
+    real TPU hardware the rand input can be replaced by
+    `pltpu.prng_random_bits` (not available in interpret mode, which is
+    how this container validates the kernel).
+
+Two entry points:
+  * `quant_channel_2d` — blockwise scales, scalar p (single tensor);
+  * `packed_wire_2d` — the packed-pytree wire (core/wire.py): per-ROW
+    scale and bit-error vectors ([bm, 1] tiles beside the data tile),
+    so a whole pytree — or a stacked N-user FL upload reshaped to
+    [N*R, C] — is ONE kernel launch with per-packet fading.
 """
 from __future__ import annotations
 
@@ -26,19 +34,14 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.wire import GOLDEN as _GOLDEN          # noqa: F401 (re-export)
+from repro.core.wire import bit_flip_mask, fmix32
+
 BLOCK_M = 128
 BLOCK_N = 512
-_GOLDEN = 0x9E3779B9  # python int: per-plane salt is a static literal
 
-
-def _finalize(x: jax.Array) -> jax.Array:
-    """Murmur3 fmix32: a high-quality 32-bit integer hash (VPU-only)."""
-    x = x ^ (x >> 16)
-    x = x * jnp.uint32(0x7FEB352D)
-    x = x ^ (x >> 15)
-    x = x * jnp.uint32(0x846CA68B)
-    x = x ^ (x >> 16)
-    return x
+# back-compat alias: ref.py and older callers import the finalizer here
+_finalize = fmix32
 
 
 def _qc_kernel(x_ref, rand_ref, p_ref, o_ref, *, bits: int):
@@ -51,18 +54,50 @@ def _qc_kernel(x_ref, rand_ref, p_ref, o_ref, *, bits: int):
     code = (q + jnp.int32(qmax)).astype(jnp.uint32)
 
     # per-bit-plane Bernoulli(p) flips from one rand word per element
-    p = p_ref[0]
-    thresh = (p * 4294967296.0).astype(jnp.uint32)
-    rand = rand_ref[...]
-    flips = jnp.zeros_like(code)
-    for b in range(bits):
-        salt = ((b + 1) * _GOLDEN) & 0xFFFFFFFF
-        r = _finalize(rand ^ jnp.uint32(salt))
-        flips = flips | (jnp.where(r < thresh, jnp.uint32(1), jnp.uint32(0)) << b)
-    code = code ^ flips
+    code = code ^ bit_flip_mask(rand_ref[...], bits, p_ref[0])
 
     q_hat = jnp.clip(code.astype(jnp.int32) - jnp.int32(qmax), -qmax, qmax)
     o_ref[...] = (q_hat.astype(jnp.float32) * scale).astype(o_ref.dtype)
+
+
+def _packed_kernel(x_ref, rand_ref, scale_ref, p_ref, o_ref, *, bits: int):
+    """Packed-wire body: per-ROW quantization scale and bit-error prob
+    (delivered as [bm, 1] tiles) instead of a blockwise scale — each row
+    belongs to exactly one packet (leaf / user), see core/wire.py."""
+    x = x_ref[...]
+    scale = scale_ref[...]                       # [bm, 1], broadcasts
+    qmax = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    code = (q + jnp.int32(qmax)).astype(jnp.uint32)
+    code = code ^ bit_flip_mask(rand_ref[...], bits, p_ref[...])
+    q_hat = jnp.clip(code.astype(jnp.int32) - jnp.int32(qmax), -qmax, qmax)
+    o_ref[...] = (q_hat.astype(jnp.float32) * scale).astype(o_ref.dtype)
+
+
+def packed_wire_2d(buf: jax.Array, rand: jax.Array, scale_row: jax.Array,
+                   p_row: jax.Array, bits: int,
+                   interpret: bool = True) -> jax.Array:
+    """buf [R, C] float32, rand [R, C] uint32, scale_row/p_row [R, 1]
+    float32. Grid over the packed 2D view; one launch per pytree (or per
+    N-user upload when the caller stacks users into R)."""
+    R, C = buf.shape
+    bm = next(b for b in (BLOCK_M, 64, 32, 16, 8, 4, 2, 1) if R % b == 0)
+    bn = min(BLOCK_N, C)
+    assert C % bn == 0, (R, C, bm, bn)
+    grid = (R // bm, C // bn)
+    return pl.pallas_call(
+        functools.partial(_packed_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), buf.dtype),
+        interpret=interpret,
+    )(buf, rand, scale_row, p_row)
 
 
 def quant_channel_2d(x: jax.Array, rand: jax.Array, p: jax.Array,

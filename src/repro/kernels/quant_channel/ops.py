@@ -1,6 +1,13 @@
-"""jit'd public wrapper: arbitrary-shape tensors -> padded 2D blocks ->
-fused kernel. Drop-in accelerated version of
-core.channel.transmit_quantized (per-block scales)."""
+"""jit'd public wrappers for the fused quantize+channel kernels.
+
+`transmit` — single tensor, per-BLOCK scales: arbitrary-shape input ->
+padded 2D blocks -> quant_channel_2d. Accelerated version of
+core.channel.transmit_quantized.
+
+Whole-pytree (and stacked multi-user) transmissions should go through
+core.wire.transmit_tree / transmit_stacked with impl="kernel", which
+pack once and hit `packed_wire_2d` in a single launch with per-tensor
+scales and per-packet fading."""
 from __future__ import annotations
 
 import functools

@@ -1,12 +1,21 @@
-"""Pure-jnp oracle for the quant_channel kernel: identical blockwise math
-(same hash, same scales) with no Pallas."""
+"""Pure-jnp oracles for the quant_channel kernels: identical math (same
+hash, same scales) with no Pallas. `quant_channel_ref` mirrors the
+blockwise-scale kernel; `packed_wire_ref` mirrors the packed-pytree
+kernel (per-row scale/p — it IS core.wire.wire_transform)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.wire import wire_transform
 from repro.kernels.quant_channel.kernel import (BLOCK_M, BLOCK_N, _GOLDEN,
                                                 _finalize)
+
+
+def packed_wire_ref(buf: jax.Array, rand: jax.Array, scale_row: jax.Array,
+                    p_row: jax.Array, bits: int) -> jax.Array:
+    """Oracle for kernel.packed_wire_2d ([R, C] buffer, [R, 1] scale/p)."""
+    return wire_transform(buf, rand, scale_row, p_row, bits)
 
 
 def quant_channel_ref(x: jax.Array, rand: jax.Array, p: jax.Array,

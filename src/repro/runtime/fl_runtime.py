@@ -17,8 +17,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import channel as CH
 from repro.core import federated as FED
+from repro.core import wire as WIRE
 from repro.models import api as M
 from repro.models import lstm_tiny
 from repro.optim import sgd_momentum
@@ -90,21 +90,18 @@ def make_fl_train_step(cfg, shape_cfg, wcfg, n_users: int = 2,
 
     def fl_step(state: TrainState, batch: dict, key: jax.Array):
         state, metrics = local_steps(state, batch, key)
-        # ---- quantized channel sync (the only cross-user collective)
-        def sync_leaf(path_i, leaf):
-            k = jax.random.fold_in(key, path_i)
-            def per_user(u, x):
-                y, _ = CH.transmit_quantized(
-                    jax.random.fold_in(k, u), x, wcfg.quant_bits,
-                    wcfg.snr_db, wcfg.fading, wcfg.perfect_channel)
-                return y
-            received = jax.vmap(per_user)(jnp.arange(n_users), leaf)
-            avg = jnp.mean(received, axis=0)
-            return jnp.broadcast_to(avg, leaf.shape)
-
-        leaves, treedef = jax.tree.flatten(state.trainable["model"])
-        synced = [sync_leaf(i, l) for i, l in enumerate(leaves)]
-        model = jax.tree.unflatten(treedef, synced)
+        # ---- quantized channel sync (the only cross-user collective):
+        # the whole N-user model upload is one packed-wire pass (the
+        # user axis stays a leading batch axis of the packed buffer, so
+        # the mean below remains the single cross-pod all-reduce)
+        received = WIRE.transmit_stacked(
+            jax.random.fold_in(key, 999), state.trainable["model"],
+            wcfg.quant_bits, wcfg.snr_db, fading=wcfg.fading,
+            perfect=wcfg.perfect_channel)
+        model = jax.tree.map(
+            lambda r, leaf: jnp.broadcast_to(jnp.mean(r, axis=0),
+                                             leaf.shape),
+            received, state.trainable["model"])
         trainable = dict(state.trainable, model=model)
         return TrainState(trainable, state.opt_state, state.step), \
             jax.tree.map(lambda m: m.mean(), metrics)

@@ -11,8 +11,9 @@ messages, so the radio boundary is a real serialization point.
         down = session.server_step(up, batch["labels"], key) # SERVER
         session.user_downlink(down)                          # USER device
 
-Each leg quantizes, crosses the Rayleigh/AWGN channel, and accounts its
-payload bits. Works for the paper's tiny model (conv+pool user-side) —
+Each leg quantizes, crosses the Rayleigh/AWGN channel (one fused
+packed-wire call per leg, core/wire.py), and accounts its payload bits
+via wire.payload_bits. Works for the paper's tiny model (conv+pool user-side) —
 the scaled architectures use the fused path (runtime/train_step.py with
 wcfg.mode == "sl"), which the multi-pod dry-run lowers with the pod axis
 as the user/server boundary.
@@ -25,9 +26,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core import channel as CH
-from repro.core import quantization as Q
 from repro.core import semantic
+from repro.core import wire as W
 from repro.core.split import init_codec
 from repro.models import lstm_tiny
 from repro.nn import init_params
@@ -40,7 +40,7 @@ class Message:
     """One radio transmission: quantized payload + metadata the receiver
     needs (scale rides the control channel, as in the paper)."""
     payload: jax.Array          # dequantized-at-receiver tensor
-    bits: int                   # payload size on the wire
+    bits: float                 # payload size on the wire (wire.payload_bits)
 
 
 class SLSession:
@@ -84,9 +84,9 @@ class SLSession:
                                         tokens)
         self._cached_smashed = (tokens, smashed, z)
         w = self.wcfg
-        y, _ = CH.transmit_quantized(key, z, w.quant_bits, w.snr_db,
-                                     w.fading, w.perfect_channel)
-        bits = Q.payload_bits(z, w.quant_bits)
+        y = W.transmit_tree(key, z, w.quant_bits, w.snr_db,
+                            fading=w.fading, perfect=w.perfect_channel)
+        bits = W.payload_bits(z, w.quant_bits)
         self.total_bits += bits
         return Message(y, bits)
 
@@ -115,10 +115,9 @@ class SLSession:
             self.server_params, self.server_codec, self._server_opt,
             up.payload, labels)
         w = self.wcfg
-        g_hat, _ = CH.transmit_quantized(key, grad_z, w.quant_bits,
-                                         w.snr_db, w.fading,
-                                         w.perfect_channel)
-        bits = Q.payload_bits(grad_z, w.quant_bits)
+        g_hat = W.transmit_tree(key, grad_z, w.quant_bits, w.snr_db,
+                                fading=w.fading, perfect=w.perfect_channel)
+        bits = W.payload_bits(grad_z, w.quant_bits)
         self.total_bits += bits
         return Message(g_hat, bits)
 

@@ -1,0 +1,70 @@
+"""Hypothesis compatibility layer: the real library when installed, else
+a minimal deterministic fallback so the suite still collects AND the
+property tests still execute (the container image has no `hypothesis`;
+the seed suite died at collection on it).
+
+Fallback semantics: `@given(...)` draws a bounded number of pseudo-random
+samples per strategy from a fixed per-test seed (crc32 of the test
+name) — a deterministic property *sweep*, no shrinking. Only the
+strategies this repo uses are implemented (integers, floats,
+sampled_from). Example counts are capped to bound suite time; the real
+hypothesis honors the requested max_examples.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised when hypothesis absent
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import random
+    import zlib
+
+    _DEFAULT_EXAMPLES = 6
+    _MAX_EXAMPLES_CAP = 8
+
+    class _Strategy:
+        def __init__(self, draw):
+            self.draw = draw
+
+    class strategies:  # noqa: N801 - stands in for the hypothesis module
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(lambda r: r.randint(min_value, max_value))
+
+        @staticmethod
+        def floats(min_value, max_value):
+            return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+        @staticmethod
+        def sampled_from(elements):
+            elements = list(elements)
+            return _Strategy(lambda r: r.choice(elements))
+
+    def given(**strategy_kwargs):
+        def deco(fn):
+            def wrapper(*args, **kwargs):
+                rng = random.Random(zlib.crc32(fn.__name__.encode()))
+                n = min(getattr(wrapper, "_max_examples",
+                                _DEFAULT_EXAMPLES), _MAX_EXAMPLES_CAP)
+                for _ in range(n):
+                    drawn = {k: s.draw(rng)
+                             for k, s in strategy_kwargs.items()}
+                    drawn.update(kwargs)
+                    fn(*args, **drawn)
+            # no functools.wraps: pytest must see the zero-arg signature,
+            # not the strategy params (it would treat them as fixtures)
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._mini_given = True
+            return wrapper
+        return deco
+
+    def settings(max_examples=_DEFAULT_EXAMPLES, deadline=None, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

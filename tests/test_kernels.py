@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 
 from repro.kernels.quant_channel.kernel import quant_channel_2d
 from repro.kernels.quant_channel.ref import quant_channel_ref
@@ -73,6 +73,24 @@ def test_quant_channel_ops_arbitrary_shapes():
         assert np.isfinite(np.asarray(y)).all()
         # high SNR: almost no bit errors; output close to quantized input
         assert float(jnp.mean(jnp.abs(y - x))) < 0.05
+
+
+@HS
+@given(rows=st.sampled_from([8, 64, 120]), bits=st.sampled_from([4, 8]),
+       seed=st.integers(0, 2 ** 16))
+def test_packed_wire_kernel_matches_ref(rows, bits, seed):
+    """packed_wire_2d (per-row scale/p tiles) == the jnp packed oracle."""
+    from repro.kernels.quant_channel.kernel import packed_wire_2d
+    from repro.kernels.quant_channel.ref import packed_wire_ref
+    key = jax.random.PRNGKey(seed)
+    kx, kr, ks, kp = jax.random.split(key, 4)
+    x = jax.random.normal(kx, (rows, 256), jnp.float32)
+    rand = jax.random.bits(kr, (rows, 256), jnp.uint32)
+    scale = jax.random.uniform(ks, (rows, 1), jnp.float32, 0.01, 0.1)
+    p = jax.random.uniform(kp, (rows, 1), jnp.float32, 0.0, 0.2)
+    out = packed_wire_2d(x, rand, scale, p, bits, interpret=True)
+    ref = packed_wire_ref(x, rand, scale, p, bits)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
 
 
 def test_quant_channel_ber_statistics():

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.launch.mesh import make_test_mesh

@@ -1,0 +1,158 @@
+"""Packed-wire tests: packed output bit-exactly equals the per-leaf
+reference path for identical keys, pack/unpack round-trips ragged
+pytrees, and the payload accounting is a single consistent helper."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, strategies as st
+
+from repro.core import channel as CH
+from repro.core import federated as FED
+from repro.core import quantization as Q
+from repro.core import wire as W
+from repro.configs.base import WirelessConfig
+
+HS = settings(max_examples=10, deadline=None)
+
+
+def _ragged_tree(seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    return {"w": jax.random.normal(ks[0], (17, 33)),
+            "b": jax.random.normal(ks[1], (7,)),
+            "scalar": jax.random.normal(ks[2], ()),
+            "conv": jax.random.normal(ks[3], (3, 5, 2)),
+            "big": jax.random.normal(ks[4], (41, 67))}
+
+
+def _assert_tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------- equivalence (exact)
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("fading", [True, False])
+def test_packed_bit_exact_vs_per_leaf(bits, fading):
+    """The fused one-shot pass and the per-leaf reference loop consume
+    the same rand buffer and fades -> bit-identical received trees."""
+    tree = _ragged_tree()
+    key = jax.random.PRNGKey(42)
+    packed = W.transmit_tree(key, tree, bits, 6.0, fading=fading,
+                             impl="packed")
+    per_leaf = W.transmit_tree(key, tree, bits, 6.0, fading=fading,
+                               impl="per_leaf")
+    _assert_tree_equal(packed, per_leaf)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_kernel_bit_exact_vs_per_leaf(bits):
+    """Pallas packed kernel (interpret mode) == per-leaf reference."""
+    tree = _ragged_tree(1)
+    key = jax.random.PRNGKey(7)
+    kern = W.transmit_tree(key, tree, bits, 6.0, impl="kernel")
+    per_leaf = W.transmit_tree(key, tree, bits, 6.0, impl="per_leaf")
+    _assert_tree_equal(kern, per_leaf)
+
+
+def test_stacked_bit_exact_vs_per_leaf():
+    """FL-shaped transmit: [N, ...] leaves, per-(user, tensor) fades."""
+    tree = jax.tree.map(lambda p: jnp.stack([p, 2 * p, 0.5 * p]),
+                        _ragged_tree(2))
+    key = jax.random.PRNGKey(3)
+    for impl in ("packed", "kernel"):
+        got = W.transmit_stacked(key, tree, 8, 6.0, impl=impl)
+        ref = W.transmit_stacked(key, tree, 8, 6.0, impl="per_leaf")
+        _assert_tree_equal(got, ref)
+
+
+def test_packed_arq_bit_exact_vs_per_leaf():
+    tree = _ragged_tree(4)
+    key = jax.random.PRNGKey(11)
+    a = W.transmit_tree(key, tree, 8, 0.0, arq_attempts=4, impl="packed")
+    b = W.transmit_tree(key, tree, 8, 0.0, arq_attempts=4, impl="per_leaf")
+    _assert_tree_equal(a, b)
+
+
+def test_perfect_channel_is_per_tensor_quantization():
+    tree = _ragged_tree(5)
+    out = W.transmit_tree(jax.random.PRNGKey(0), tree, 8, 0.0, perfect=True)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+        q, s = Q.quantize(x, 8)
+        np.testing.assert_allclose(np.asarray(y),
+                                   np.asarray(Q.dequantize(q, s)),
+                                   atol=1e-6)
+
+
+def test_low_snr_corrupts_high_snr_does_not():
+    x = jax.random.normal(jax.random.PRNGKey(0), (64, 64))
+    hi = W.transmit_tree(jax.random.PRNGKey(1), x, 8, 60.0, fading=False)
+    assert float(jnp.max(jnp.abs(hi - x))) <= float(Q.scale_for(x, 8)) / 2 \
+        + 1e-6
+    lo = W.transmit_tree(jax.random.PRNGKey(1), x, 8, -10.0, fading=False)
+    assert float(jnp.mean(jnp.abs(lo - x))) > 0.1
+
+
+# ------------------------------------------------------ pack/unpack property
+@HS
+@given(seed=st.integers(0, 2 ** 16), n_leaves=st.integers(1, 6))
+def test_pack_unpack_roundtrip_ragged(seed, n_leaves):
+    rng = np.random.default_rng(seed)
+    leaves = []
+    for i in range(n_leaves):
+        nd = int(rng.integers(0, 4))
+        shape = tuple(int(rng.integers(1, 9)) for _ in range(nd))
+        leaves.append(jnp.asarray(rng.standard_normal(shape),
+                                  jnp.float32))
+    tree = {f"leaf{i}": l for i, l in enumerate(leaves)}
+    buf, plan = W.pack_tree(tree)
+    assert buf.shape == (plan.n_rows, plan.cols)
+    assert plan.n_rows % 8 == 0
+    out = W.unpack_tree(buf, plan)
+    _assert_tree_equal(tree, out)
+    # manifest rows cover exactly the payload, in order
+    for i in range(plan.n_packets):
+        assert plan.rows[i] == -(-plan.sizes[i] // plan.cols)
+    assert plan.row_start == tuple(
+        int(np.cumsum((0,) + plan.rows[:-1])[i])
+        for i in range(plan.n_packets))
+
+
+# ------------------------------------------------------------- accounting
+def test_payload_bits_helper_consistency():
+    tree = _ragged_tree()
+    n = sum(l.size for l in jax.tree.leaves(tree))
+    got = W.payload_bits(tree, 8)
+    assert isinstance(got, float) and got == n * 8
+    # matches the per-tensor helper summed over leaves
+    assert got == sum(Q.payload_bits(l, 8) for l in jax.tree.leaves(tree))
+    # ARQ expectation scales the count analytically
+    e = W.expected_arq_tx(attempts=4, min_f2=0.25)
+    assert 1.0 < e < 4.0
+    assert W.payload_bits(tree, 8, e) == pytest.approx(n * 8 * e)
+    # degenerate cases collapse to one transmission
+    assert W.expected_arq_tx(attempts=1) == 1.0
+    assert W.expected_arq_tx(attempts=4, fading=False) == 1.0
+    assert W.expected_arq_tx(attempts=4, perfect=True) == 1.0
+
+
+def test_transmit_pytree_and_fedavg_accounting_agree():
+    """Satellite: both hot paths report wire.payload_bits floats."""
+    tree = {"a": jnp.ones((10, 10)), "b": jnp.ones((7,))}
+    _, bits_tree = CH.transmit_pytree(jax.random.PRNGKey(0), tree, 8, 20.0)
+    assert isinstance(bits_tree, float) and bits_tree == 107 * 8
+    up = jax.tree.map(lambda p: jnp.stack([p, p, p]), tree)
+    wcfg = WirelessConfig(mode="fl", quant_bits=8)
+    _, bits_fl = FED.fedavg_through_channel(jax.random.PRNGKey(1), up, wcfg)
+    assert isinstance(bits_fl, float) and bits_fl == 3 * 107 * 8
+
+
+def test_fedavg_median_aggregate_still_works():
+    tree = {"a": jnp.ones((6, 6))}
+    up = jax.tree.map(lambda p: jnp.stack([p, 2 * p, 30 * p]), tree)
+    wcfg = WirelessConfig(mode="fl", quant_bits=8, perfect_channel=True,
+                          aggregate="median")
+    synced, _ = FED.fedavg_through_channel(jax.random.PRNGKey(0), up, wcfg)
+    med = jax.tree.leaves(synced)[0][0]
+    # median of (1, 2, 30)*quant ~ 2 (robust to the outlier user)
+    np.testing.assert_allclose(np.asarray(med), 2.0, atol=0.1)
