@@ -1,7 +1,13 @@
-"""Shared experiment engine for the paper-reproduction benchmarks.
+"""Benchmark-facing facade over the unified scheme API (repro.schemes).
 
-Runs the paper's exact 89,673-parameter sentiment model (Sec. III-A) under
-the three topologies:
+The three driver loops that used to live here (~250 copy-pasted lines)
+are now `CentralizedScheme` / `FederatedScheme` / `SplitScheme` driven
+by one `Experiment` runner (src/repro/schemes/); `train_cl` /
+`train_fl` / `train_sl` remain as thin wrappers so existing benchmarks
+keep their entry points, with fixed-seed parity pinned in
+tests/test_scheme_parity.py.
+
+Paradigms (paper Sec. III):
 
   CL — raw data crosses the channel ONCE at upload; server trains.
   FL — N=3 users, J local epochs, b-bit quantized weight upload through
@@ -19,139 +25,20 @@ dataset reduction factor and are reported both raw and rescaled.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import math
-from typing import Callable, Optional
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.configs.base import WirelessConfig
+from repro.schemes import (BATCH, CFG, LR0, MOMENTUM, N_TEST, N_TRAIN,
+                           Experiment, RunResult, batches_of, build_scheme,
+                           corpus, evaluate, evaluate_sl, lr_at,
+                           step_flops, user_side_flops_sl)
 
-from repro.configs import get_arch
-from repro.configs.base import ShapeConfig, WirelessConfig
-from repro.core import channel as CH
-from repro.core import energy as EN
-from repro.core import federated as FED
-from repro.core import semantic
-from repro.core.split import init_codec, split_forward
-from repro.data.sentiment import SentimentConfig, make_splits, partition_users
-from repro.models import lstm_tiny
-from repro.nn import init_params
-from repro.optim import sgd_momentum
-from repro.runtime.fl_runtime import fl_round_tiny
-from repro.runtime.train_step import (TrainState, init_train_state,
-                                      make_train_step)
-
-CFG = get_arch("paper-tinylstm")
-BATCH = 512                      # paper Table I
-# Paper Table I: lr=0.01, SGD+momentum 0.9, over ~140k steps (50 epochs
-# x 2813 batches of the 1.44M-sample corpus). The reduced corpus gives
-# ~50x fewer steps, so the LR is scaled x10 to keep comparable total
-# optimization travel; the schedule shape (x0.9 every 5 epochs) is the
-# paper's. Deviation recorded in EXPERIMENTS.md §Repro.
-LR0 = 0.1
-MOMENTUM = 0.9
-LR_DECAY, LR_EVERY = 0.9, 5      # "reduce by 10% every 5 epochs"
-
-# Reduced-corpus defaults (paper: 1.44M train / 160k test).
-N_TRAIN = 24_576
-N_TEST = 2_560
-
-
-def lr_at(epoch: int) -> float:
-    return LR0 * LR_DECAY ** (epoch // LR_EVERY)
-
-
-@dataclasses.dataclass
-class RunResult:
-    accuracy: list          # per-cycle test accuracy
-    loss: list              # per-cycle train loss
-    total_bits: float       # payload that crossed the radio (uplink+downlink)
-    user_flops: float       # user-side computation (fwd+bwd share)
-    server_flops: float
-    captures: dict          # privacy-eval observations (optional)
-
-    @property
-    def final_accuracy(self) -> float:
-        return float(np.mean(self.accuracy[-3:])) if self.accuracy else 0.0
-
-
-# --------------------------------------------------------------------- data
-@functools.lru_cache(maxsize=4)
-def corpus(n_train: int = N_TRAIN, n_test: int = N_TEST, seed: int = 0):
-    (xtr, ytr), (xte, yte) = make_splits(n_train + n_test, seed=seed,
-                                         train_frac=n_train / (n_train + n_test))
-    return (xtr, ytr), (xte, yte)
-
-
-def batches_of(x: np.ndarray, y: np.ndarray, batch: int, rng: np.random.Generator):
-    idx = rng.permutation(len(x))
-    n = len(x) // batch
-    for i in range(n):
-        s = idx[i * batch:(i + 1) * batch]
-        yield {"tokens": jnp.asarray(x[s]), "labels": jnp.asarray(y[s])}
-
-
-# --------------------------------------------------------------------- eval
-@functools.lru_cache(maxsize=8)
-def _eval_fn():
-    @jax.jit
-    def ev(params, tokens, labels):
-        logits, _ = lstm_tiny.forward(params, {"tokens": tokens})
-        return (lstm_tiny.accuracy(logits, labels),
-                lstm_tiny.bce_loss(logits, labels))
-    return ev
-
-
-def evaluate(params, xte, yte, batch: int = 2048):
-    ev = _eval_fn()
-    accs, losses, n = [], [], 0
-    for i in range(0, len(xte) - batch + 1, batch):
-        a, l = ev(params, jnp.asarray(xte[i:i + batch]),
-                  jnp.asarray(yte[i:i + batch]))
-        accs.append(float(a)); losses.append(float(l)); n += 1
-    if not accs:
-        a, l = ev(params, jnp.asarray(xte), jnp.asarray(yte))
-        return float(a), float(l)
-    return float(np.mean(accs)), float(np.mean(losses))
-
-
-# -------------------------------------------------------------------- FLOPs
-@functools.lru_cache(maxsize=16)
-def step_flops(mode: str, wcfg_key: tuple = ()) -> float:
-    """Compiled fwd+bwd FLOPs of one batch-512 train step (CPU backend
-    cost model). For SL the user/server shares are separated by lowering
-    the user-side partition alone."""
-    wcfg = WirelessConfig(**dict(wcfg_key)) if wcfg_key else None
-    shape = ShapeConfig("paper", 30, BATCH, "train", microbatch=BATCH)
-    state = init_train_state(jax.random.PRNGKey(0), CFG, wcfg, "sgd")
-    step = make_train_step(CFG, shape, wcfg, optimizer="sgd", lr=LR0)
-    batch = {"tokens": jnp.ones((BATCH, 30), jnp.int32),
-             "labels": jnp.ones((BATCH,), jnp.int32)}
-    compiled = jax.jit(step).lower(state, batch, jax.random.PRNGKey(1)).compile()
-    # trip-count-scaled dot/conv FLOPs (XLA cost_analysis counts the LSTM
-    # scan body once — a 14x undercount for this model)
-    from repro.launch.hlo_analysis import analyze
-    return float(analyze(compiled.as_text())["dot_flops"])
-
-
-@functools.lru_cache(maxsize=4)
-def user_side_flops_sl(compress_factor: int = 4) -> float:
-    """SL user-side compute per batch: conv/pool fwd + semantic encode,
-    plus the backward through the same ops (~2x fwd, standard count)."""
-    specs = lstm_tiny.model_specs(None, compress_factor)
-    params = init_params(jax.random.PRNGKey(0), specs)
-
-    def user_fwd_loss(p, tokens):
-        smashed = lstm_tiny.user_forward(p, tokens)
-        z = semantic.encode({"enc": p["sem_enc"]} if "sem_enc" in p else p, smashed)
-        return jnp.sum(z * z)
-
-    tokens = jnp.ones((BATCH, 30), jnp.int32)
-    compiled = jax.jit(jax.grad(user_fwd_loss)).lower(params, tokens).compile()
-    from repro.launch.hlo_analysis import analyze
-    return float(analyze(compiled.as_text())["dot_flops"])
+__all__ = [
+    "BATCH", "CFG", "LR0", "MOMENTUM", "N_TEST", "N_TRAIN", "RunResult",
+    "batches_of", "corpus", "evaluate", "evaluate_sl", "lr_at",
+    "step_flops", "user_side_flops_sl", "train_cl", "train_fl",
+    "train_sl",
+]
 
 
 # ----------------------------------------------------------------------- CL
@@ -160,45 +47,8 @@ def train_cl(cycles: int = 30, wcfg: Optional[WirelessConfig] = None,
              capture: bool = False) -> RunResult:
     """Centralized: the dataset crosses the channel once at upload (the
     paper's CL transmits raw data); the server then trains normally."""
-    (xtr, ytr), (xte, yte) = corpus(n_train, n_test, seed)
-    captures = {}
-    n_bits_tok = max(1, (CFG.vocab_size - 1).bit_length())
-    total_bits = 0.0
-    total_bits = xtr.size * n_bits_tok + ytr.size  # labels ride 1 bit
-    if wcfg is not None and not wcfg.perfect_channel:
-        clean = xtr.copy()
-        key = jax.random.PRNGKey(seed + 7)
-        xtr_dev = CH.transmit_tokens(key, jnp.asarray(xtr), CFG.vocab_size,
-                                     wcfg.snr_db, wcfg.fading)
-        xtr = np.asarray(xtr_dev)
-        if capture:
-            captures = {"received": xtr.copy(), "original": clean}
-    elif capture:
-        captures = {"received": xtr.copy(), "original": xtr.copy()}
-
-    shape = ShapeConfig("paper", 30, BATCH, "train", microbatch=BATCH)
-    state = init_train_state(jax.random.PRNGKey(seed), CFG, None, "sgd")
-    rng = np.random.default_rng(seed + 1)
-
-    accs, losses = [], []
-    steps = 0
-    step_cache = {}
-    for cyc in range(cycles):
-        lr = lr_at(cyc)
-        if lr not in step_cache:
-            step_cache[lr] = jax.jit(make_train_step(
-                CFG, shape, None, optimizer="sgd", lr=lr, momentum=MOMENTUM))
-        step = step_cache[lr]
-        for b in batches_of(xtr, ytr, BATCH, rng):
-            state, m = step(state, b, jax.random.fold_in(
-                jax.random.PRNGKey(seed + 2), steps))
-            steps += 1
-        a, l = evaluate(state.trainable["model"], xte, yte)
-        accs.append(a); losses.append(float(m["loss"]))
-    f = step_flops("cl")
-    return RunResult(accs, losses, total_bits,
-                     user_flops=0.0,               # paper: CL user compute = 0
-                     server_flops=f * steps, captures=captures)
+    return Experiment(build_scheme(wcfg, capture=capture), cycles,
+                      seed=seed, n_train=n_train, n_test=n_test).run()
 
 
 # ----------------------------------------------------------------------- FL
@@ -208,111 +58,11 @@ def train_fl(cycles: int = 7, local_epochs: int = 5, n_users: int = 3,
              capture: bool = False) -> RunResult:
     """Federated (Alg. 1): J = local_epochs full passes over each user's
     shard per communication cycle; quantized upload through the channel."""
-    wcfg = wcfg or WirelessConfig(mode="fl")
-    (xtr, ytr), (xte, yte) = corpus(n_train, n_test, seed)
-    shards = partition_users(xtr, ytr, n_users)
-    per_user = len(shards[0][0])
-    steps_per_epoch = per_user // BATCH
-
-    state0 = init_train_state(jax.random.PRNGKey(seed), CFG, None, "sgd")
-    user_states = jax.tree.map(
-        lambda p: jnp.broadcast_to(p, (n_users,) + p.shape), state0)
-    rng = np.random.default_rng(seed + 1)
-
-    accs, losses = [], []
-    total_bits = 0.0
-    captures = {"deltas": [], "targets": []} if capture else {}
-    epoch = 0
-    for cyc in range(cycles):
-        lr = lr_at(epoch)
-        j = local_epochs * steps_per_epoch
-        # build [N, J, ...] batch stacks
-        toks = np.empty((n_users, j, BATCH, 30), np.int32)
-        labs = np.empty((n_users, j, BATCH), np.int32)
-        for u, (xu, yu) in enumerate(shards):
-            bi = 0
-            for _ in range(local_epochs):
-                for b in batches_of(xu, yu, BATCH, rng):
-                    toks[u, bi] = np.asarray(b["tokens"])
-                    labs[u, bi] = np.asarray(b["labels"])
-                    bi += 1
-        batches = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
-        kcyc = jax.random.fold_in(jax.random.PRNGKey(seed + 3), cyc)
-        pre_sync = (jax.tree.map(lambda p: p[0],
-                                 user_states.trainable["model"])
-                    if capture else None)
-
-        # --- local phase (Alg. 1 lines 3-7), vmapped over users
-        local_step = _local_step(lr)
-        keys = jax.random.split(kcyc, n_users * j).reshape(n_users, j, 2)
-        user_states, metrics = FED.local_steps_vmapped(
-            local_step, user_states, (batches, keys))
-
-        # --- quantized channel upload + FedAvg (Alg. 1 lines 8-17)
-        user_params = user_states.trainable["model"]
-        kch = jax.random.fold_in(kcyc, 999)
-        if capture:
-            received = _receive_users(kch, user_params, wcfg)
-            captures["deltas"].append(_flat_uploads(received, pre_sync))
-            # target: the mean normalized token vector of the user's shard
-            # (the update aggregates the whole local dataset)
-            captures["targets"].append(
-                np.stack([toks[u].reshape(-1, 30).mean(0)
-                          for u in range(n_users)]))
-            avg = jax.tree.map(lambda r: jnp.mean(r, axis=0), received)
-            synced = FED.replicate_for_users(avg, n_users)
-            bits = sum(l.size * wcfg.quant_bits
-                       for l in jax.tree.leaves(user_params))
-        else:
-            synced, bits = FED.fedavg_through_channel(kch, user_params, wcfg)
-        total_bits += bits
-        user_states = TrainState(
-            dict(user_states.trainable, model=synced),
-            user_states.opt_state, user_states.step)
-
-        epoch += local_epochs
-        gp = jax.tree.map(lambda p: p[0], synced)
-        a, l = evaluate(gp, xte, yte)
-        accs.append(a)
-        losses.append(float(np.asarray(metrics["loss"]).mean()))
-    f = step_flops("cl")        # full-model fwd+bwd per local step
-    steps_total = cycles * local_epochs * steps_per_epoch
-    return RunResult(accs, losses, float(total_bits) / n_users,  # per user
-                     user_flops=f * steps_total,     # per user
-                     server_flops=0.0, captures=captures)
-
-
-@functools.lru_cache(maxsize=16)
-def _local_step(lr: float):
-    from repro.runtime.fl_runtime import make_local_step_tiny
-    return make_local_step_tiny(CFG, None, lr, MOMENTUM)
-
-
-def _receive_users(key, user_params, wcfg):
-    """Per-user quantize+channel pass (what the server decodes), keeping
-    the user axis so the privacy capture sees individual uploads."""
-    leaves, treedef = jax.tree.flatten(user_params)
-    n_users = leaves[0].shape[0]
-    out = []
-    for li, leaf in enumerate(leaves):
-        rx = []
-        for u in range(n_users):
-            k = jax.random.fold_in(jax.random.fold_in(key, li), u)
-            y, _ = CH.transmit_quantized(k, leaf[u], wcfg.quant_bits,
-                                         wcfg.snr_db, wcfg.fading,
-                                         wcfg.perfect_channel)
-            rx.append(y)
-        out.append(jnp.stack(rx))
-    return jax.tree.unflatten(treedef, out)
-
-
-def _flat_uploads(received, pre_broadcast):
-    """[N, P] received weight-delta (vs the cycle's broadcast weights)."""
-    pre_leaves = jax.tree.leaves(pre_broadcast)
-    rx_leaves = jax.tree.leaves(received)
-    return np.asarray(jnp.concatenate(
-        [(r - p[None]).reshape(r.shape[0], -1)
-         for r, p in zip(rx_leaves, pre_leaves)], axis=1))
+    import dataclasses
+    wcfg = dataclasses.replace(wcfg or WirelessConfig(mode="fl"),
+                               local_steps=local_epochs, n_users=n_users)
+    return Experiment(build_scheme(wcfg, capture=capture), cycles,
+                      seed=seed, n_train=n_train, n_test=n_test).run()
 
 
 # ----------------------------------------------------------------------- SL
@@ -322,87 +72,6 @@ def train_sl(cycles: int = 30, wcfg: Optional[WirelessConfig] = None,
     """Split (Alg. 2): the forward activation and the clipped gradient both
     cross the channel every batch. One user (paper Table I)."""
     wcfg = wcfg or WirelessConfig(mode="sl", quant_bits=16)
-    (xtr, ytr), (xte, yte) = corpus(n_train, n_test, seed)
-    shape = ShapeConfig("paper", 30, BATCH, "train", microbatch=BATCH)
-    state = init_train_state(jax.random.PRNGKey(seed), CFG, wcfg, "sgd")
-    rng = np.random.default_rng(seed + 1)
-
-    # payload per batch: compressed activation up + clipped gradient down
-    t_pool = (30 - lstm_tiny.CONV_K + 1) // 2
-    c = lstm_tiny.CONV_F // wcfg.compress_factor
-    bits_per_batch = 2 * BATCH * t_pool * c * wcfg.quant_bits
-
-    captures = {"smashed": [], "original": []} if capture else {}
-    cap_fn = _sl_observe_fn(wcfg) if capture else None
-
-    accs, losses = [], []
-    steps = 0
-    total_bits = 0.0
-    step_cache = {}
-    for cyc in range(cycles):
-        lr = lr_at(cyc)
-        if lr not in step_cache:
-            step_cache[lr] = jax.jit(make_train_step(
-                CFG, shape, wcfg, optimizer="sgd", lr=lr, momentum=MOMENTUM))
-        step = step_cache[lr]
-        for b in batches_of(xtr, ytr, BATCH, rng):
-            key = jax.random.fold_in(jax.random.PRNGKey(seed + 2), steps)
-            state, m = step(state, b, key)
-            total_bits += bits_per_batch
-            if capture and steps % capture_every == 0:
-                z = cap_fn(state.trainable, b["tokens"],
-                           jax.random.fold_in(key, 12345))
-                captures["smashed"].append(np.asarray(z))
-                captures["original"].append(np.asarray(b["tokens"]))
-            steps += 1
-        a = evaluate_sl(state.trainable, wcfg, xte, yte)
-        accs.append(a); losses.append(float(m["loss"]))
-    wk = tuple(sorted(dataclasses.asdict(wcfg).items()))
-    return RunResult(accs, losses, total_bits,
-                     user_flops=user_side_flops_sl(wcfg.compress_factor) * steps,
-                     server_flops=(step_flops("sl", wk) -
-                                   user_side_flops_sl(wcfg.compress_factor)) * steps,
-                     captures=captures)
-
-
-@functools.lru_cache(maxsize=8)
-def _sl_eval_fn(wcfg_key):
-    """SL eval must run the DEPLOYED function — user partition + codec +
-    (noiseless) link + server partition — not the raw model without the
-    codec, which is a different function once the codec trains away from
-    its identity init."""
-    wcfg = WirelessConfig(**dict(wcfg_key))
-    import dataclasses as _dc
-    wp = _dc.replace(wcfg, perfect_channel=True)
-
-    @jax.jit
-    def ev(trainable, tokens, labels):
-        logits, _ = split_forward(trainable["model"], trainable["codec"],
-                                  {"tokens": tokens}, CFG, wp,
-                                  jax.random.PRNGKey(0))
-        return (lstm_tiny.accuracy(logits, labels),
-                lstm_tiny.bce_loss(logits, labels))
-    return ev
-
-
-def evaluate_sl(trainable, wcfg, xte, yte, batch: int = 2048):
-    wk = tuple(sorted(dataclasses.asdict(wcfg).items()))
-    ev = _sl_eval_fn(wk)
-    accs = []
-    for i in range(0, max(len(xte) - batch + 1, 1), batch):
-        a, _ = ev(trainable, jnp.asarray(xte[i:i + batch]),
-                  jnp.asarray(yte[i:i + batch]))
-        accs.append(float(a))
-    return float(np.mean(accs))
-
-
-def _sl_observe_fn(wcfg):
-    """What the SERVER receives on the SL uplink: encode -> channel."""
-    @jax.jit
-    def obs(trainable, tokens, key):
-        smashed = lstm_tiny.user_forward(trainable["model"], tokens)
-        z = semantic.encode(trainable["codec"], smashed)
-        y, _ = CH.transmit_quantized(key, z, wcfg.quant_bits, wcfg.snr_db,
-                                     wcfg.fading, wcfg.perfect_channel)
-        return y
-    return obs
+    return Experiment(build_scheme(wcfg, capture=capture,
+                                   capture_every=capture_every), cycles,
+                      seed=seed, n_train=n_train, n_test=n_test).run()

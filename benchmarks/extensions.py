@@ -15,14 +15,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import (BATCH, CFG, MOMENTUM, N_TEST, N_TRAIN,
-                               batches_of, corpus, evaluate, lr_at,
-                               _local_step, _receive_users)
 from repro.configs.base import WirelessConfig
 from repro.core import channel as CH
-from repro.core import coding, dp, energy as EN, federated as FED, modulation
+from repro.core import coding, energy as EN, modulation
 from repro.data.sentiment import partition_users_dirichlet
-from repro.runtime.train_step import TrainState, init_train_state
+from repro.schemes import Experiment, FederatedScheme, corpus
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
@@ -33,7 +30,8 @@ def coding_study(snrs=(0.0, 3.0, 6.0, 10.0), n: int = 8192) -> list[str]:
     out = {}
     for snr in snrs:
         key = jax.random.PRNGKey(int(snr * 10) + 1)
-        y_p, _ = CH.transmit_quantized(key, x, 8, snr, fading=False)
+        y_p, _ = CH.transmit_quantized(key, x, bits=8, snr_db=snr,
+                                       fading=False)
         y_c, bits_c = coding.transmit_quantized_coded(key, x, 8, snr,
                                                       fading=False)
         mse_p = float(jnp.mean((y_p - x) ** 2))
@@ -66,61 +64,16 @@ def qam_study(snr_db: float = 20.0) -> list[str]:
 
 def _fl_run(shards, cycles, wcfg, seed=0, dp_sigma=0.0, lr_scale=1.0,
             prox_mu: float = 0.0):
-    """Compact FL loop over given shards (optionally DP / FedProx)."""
-    (xte, yte) = corpus()[1]
-    n_users = len(shards)
-    state0 = init_train_state(jax.random.PRNGKey(seed), CFG, None, "sgd")
-    user_states = jax.tree.map(
-        lambda p: jnp.broadcast_to(p, (n_users,) + p.shape), state0)
-    rng = np.random.default_rng(seed + 1)
-    steps_per_epoch = max(1, len(shards[0][0]) // BATCH)
-    epoch = 0
-    accs = []
-    for cyc in range(cycles):
-        lr = lr_at(epoch) * lr_scale
-        j = wcfg.local_steps * steps_per_epoch
-        toks = np.empty((n_users, j, BATCH, 30), np.int32)
-        labs = np.empty((n_users, j, BATCH), np.int32)
-        for u, (xu, yu) in enumerate(shards):
-            # sample with replacement: Dirichlet shards can be smaller
-            # than one batch (a plain epoch iterator would leave batches
-            # uninitialized)
-            for bi in range(j):
-                idx = rng.integers(0, len(xu), BATCH)
-                toks[u, bi] = xu[idx]
-                labs[u, bi] = yu[idx]
-        batches = {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labs)}
-        kcyc = jax.random.fold_in(jax.random.PRNGKey(seed + 3), cyc)
-        keys = jax.random.split(kcyc, n_users * j).reshape(n_users, j, 2)
-        broadcast = jax.tree.map(lambda p: p[0],
-                                 user_states.trainable["model"])
-        if prox_mu:
-            from repro.runtime.fl_runtime import make_local_step_tiny
-            anchor = {"model": broadcast, "codec": {}}
-            local_step = make_local_step_tiny(CFG, None, lr,
-                                              prox_mu=prox_mu,
-                                              anchor=anchor)
-        else:
-            local_step = _local_step(lr)
-        user_states, _ = FED.local_steps_vmapped(
-            local_step, user_states, (batches, keys))
-        kch = jax.random.fold_in(kcyc, 999)
-        if dp_sigma > 0:
-            synced, _, eps = dp.fedavg_dp_through_channel(
-                kch, user_states.trainable["model"], broadcast, wcfg,
-                clip_c=1.0, sigma=dp_sigma)
-        else:
-            synced, _ = FED.fedavg_through_channel(
-                kch, user_states.trainable["model"], wcfg)
-            eps = float("inf")
-        user_states = TrainState(
-            dict(user_states.trainable, model=synced),
-            user_states.opt_state, user_states.step)
-        epoch += wcfg.local_steps
-        gp = jax.tree.map(lambda p: p[0], synced)
-        a, _ = evaluate(gp, xte, yte)
-        accs.append(a)
-    return accs, eps
+    """FL over custom shards (optionally DP / FedProx): FederatedScheme
+    with the extension hooks, driven by the shared Experiment runner.
+    Shards sample with replacement because Dirichlet shards can be
+    smaller than one batch."""
+    scheme = FederatedScheme(wcfg, shards=shards, dp_sigma=dp_sigma,
+                             prox_mu=prox_mu,
+                             sample_with_replacement=True)
+    res = Experiment(scheme, cycles, seed=seed, lr_scale=lr_scale,
+                     data=corpus()).run()
+    return res.accuracy, scheme.last_epsilon
 
 
 def noniid_study(cycles: int = 5) -> list[str]:

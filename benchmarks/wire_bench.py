@@ -99,7 +99,8 @@ def _bench_case(name, user_tree, reps):
 
     eager = lambda k: _legacy_fedavg(k, user_tree, BITS, SNR_DB)
     jit_leaf = jax.jit(lambda k: _legacy_fedavg(k, user_tree, BITS, SNR_DB))
-    packed = lambda k: W.transmit_stacked(k, user_tree, BITS, SNR_DB)
+    packed = lambda k: W.transmit_stacked(k, user_tree, bits=BITS,
+                                          snr_db=SNR_DB)
 
     rec["packed_compile_ms"] = _first_call_ms(packed, key)
     rec["per_leaf_jit_compile_ms"] = _first_call_ms(jit_leaf, key)

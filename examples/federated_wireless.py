@@ -3,28 +3,16 @@
 Three users train locally; every communication cycle their weights are
 8-bit quantized, BPSK-modulated through a Rayleigh-fading AWGN channel,
 FedAvg'd at the server, and broadcast back. Reports accuracy, payload
-bits, and channel statistics per cycle.
+bits, and channel statistics per cycle — all through the unified
+`build_scheme` + `Experiment` entry point.
 
     PYTHONPATH=src python examples/federated_wireless.py [--snr-db 20]
 """
 import argparse
-import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_arch
 from repro.configs.base import WirelessConfig
 from repro.core import energy as EN
-from repro.data.sentiment import make_splits, partition_users
-from repro.models import lstm_tiny
-from repro.runtime.train_step import init_train_state
-from benchmarks.common import train_fl
+from repro.schemes import Experiment, build_scheme
 
 
 def main():
@@ -39,9 +27,12 @@ def main():
     print(f"FL: N={wcfg.n_users} users, J={wcfg.local_steps} local epochs, "
           f"Q{wcfg.quant_bits}, SNR {wcfg.snr_db} dB, Rayleigh fading")
 
-    res = train_fl(cycles=args.cycles, wcfg=wcfg, seed=0)
-    for k, acc in enumerate(res.accuracy):
-        print(f"cycle {k + 1}: test-acc {acc:.4f}")
+    exp = Experiment(
+        build_scheme(wcfg), cycles=args.cycles, seed=0,
+        on_cycle=lambda k, acc, rep: print(
+            f"cycle {k + 1}: test-acc {acc:.4f}  "
+            f"({rep.bits / 1e6:.3f} Mbit, {int(rep.n_tx)} tx)"))
+    res = exp.run()
 
     comm_j = EN.comm_energy_j(res.total_bits, wcfg)
     comp_j = EN.comp_energy_j(res.user_flops, "edge")

@@ -1,24 +1,14 @@
 """Quickstart: train the paper's 89,673-parameter sentiment model
-centrally (no radio), evaluate, and save a checkpoint.
+centrally (no radio) through the unified scheme API, evaluate, and save
+a checkpoint.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-
-import jax
-import numpy as np
-
 from repro.checkpoint.ckpt import save_checkpoint
 from repro.configs import get_arch
-from repro.configs.base import ShapeConfig
 from repro.data.sentiment import make_splits
-from repro.data.pipeline import batches
 from repro.models import lstm_tiny
-from repro.runtime.train_step import init_train_state, make_train_step
+from repro.schemes import Experiment, build_scheme
 
 
 def main():
@@ -26,31 +16,17 @@ def main():
     print(f"model: {cfg.name}, {lstm_tiny.n_params():,} params "
           f"(paper: 89,673)")
 
-    (xtr, ytr), (xte, yte) = make_splits(12_288, seed=0)
-    shape = ShapeConfig("quickstart", 30, 512, "train", microbatch=512)
-    state = init_train_state(jax.random.PRNGKey(0), cfg, None, "sgd")
-    step = jax.jit(make_train_step(cfg, shape, None, optimizer="sgd",
-                                   lr=0.1, momentum=0.9))
+    scheme = build_scheme(None)        # CL with an ideal (no-radio) link
+    exp = Experiment(
+        scheme, cycles=15, data=make_splits(12_288, seed=0),
+        on_cycle=lambda k, acc, rep: print(
+            f"epoch {k:2d}  loss {rep.loss:.4f}  test-acc {acc:.4f}"))
+    res = exp.run()
 
-    @jax.jit
-    def evaluate(params):
-        logits, _ = lstm_tiny.forward(params, {"tokens": xte_j})
-        return lstm_tiny.accuracy(logits, yte_j)
-
-    import jax.numpy as jnp
-    xte_j, yte_j = jnp.asarray(xte), jnp.asarray(yte)
-
-    i = 0
-    for epoch in range(15):
-        for b in batches(xtr, ytr, 512, seed=epoch):
-            state, metrics = step(state, b, jax.random.PRNGKey(i))
-            i += 1
-        acc = float(evaluate(state.trainable["model"]))
-        print(f"epoch {epoch:2d}  loss {float(metrics['loss']):.4f}  "
-              f"test-acc {acc:.4f}")
-
-    assert acc > 0.70, "expected the sentiment task to be learned"
-    path = save_checkpoint("/tmp/repro_quickstart", i, state.trainable)
+    assert res.final_accuracy > 0.70, "expected the sentiment task to be learned"
+    path = save_checkpoint("/tmp/repro_quickstart",
+                           exp.final_state.steps,
+                           exp.final_state.train.trainable)
     print("checkpoint:", path)
 
 

@@ -1,24 +1,26 @@
 """Beyond-paper toolbox demo: federated learning on a HARSH link
 (10 dB, Rayleigh) with the robustness/efficiency extensions —
 link-layer ARQ, coordinate-median aggregation, Hamming-coded payloads,
-and optional differential privacy.
+and optional differential privacy. Each arm is the same
+`build_scheme(wcfg)` + `Experiment.run()` call with different channel
+knobs.
 
     PYTHONPATH=src python examples/robust_wireless_fl.py [--snr-db 10]
 """
 import argparse
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import WirelessConfig
+from repro.core import channel as CH
 from repro.core import coding, modulation
-from benchmarks.common import train_fl
+from repro.schemes import Experiment, build_scheme
+
+
+def _run(wcfg, cycles):
+    return Experiment(build_scheme(wcfg), cycles, seed=0,
+                      n_train=8192, n_test=1024).run()
 
 
 def main():
@@ -28,18 +30,13 @@ def main():
     args = ap.parse_args()
 
     print(f"--- FL at {args.snr_db} dB over Rayleigh (harsh link) ---")
-    plain = train_fl(cycles=args.cycles, n_train=8192, n_test=1024,
-                     wcfg=WirelessConfig(mode="fl", quant_bits=8,
-                                         snr_db=args.snr_db))
-    arq = train_fl(cycles=args.cycles, n_train=8192, n_test=1024,
-                   wcfg=WirelessConfig(mode="fl", quant_bits=8,
-                                       snr_db=args.snr_db,
-                                       arq_attempts=4))
-    median = train_fl(cycles=args.cycles, n_train=8192, n_test=1024,
-                      wcfg=WirelessConfig(mode="fl", quant_bits=8,
-                                          snr_db=args.snr_db,
-                                          arq_attempts=4,
-                                          aggregate="median"))
+    plain = _run(WirelessConfig(mode="fl", quant_bits=8,
+                                snr_db=args.snr_db), args.cycles)
+    arq = _run(WirelessConfig(mode="fl", quant_bits=8, snr_db=args.snr_db,
+                              arq_attempts=4), args.cycles)
+    median = _run(WirelessConfig(mode="fl", quant_bits=8,
+                                 snr_db=args.snr_db, arq_attempts=4,
+                                 aggregate="median"), args.cycles)
     print(f"plain FedAvg      : {[round(a, 3) for a in plain.accuracy]} "
           f"({plain.total_bits / 1e6:.2f} Mbit/user)")
     print(f"+ ARQ(4)          : {[round(a, 3) for a in arq.accuracy]} "
@@ -48,9 +45,8 @@ def main():
 
     # physical-layer helpers at this SNR
     x = jax.random.normal(jax.random.PRNGKey(0), (4096,))
-    y_u, _ = __import__("repro.core.channel", fromlist=["c"]) \
-        .transmit_quantized(jax.random.PRNGKey(1), x, 8, args.snr_db,
-                            fading=False)
+    y_u, _ = CH.transmit_quantized(jax.random.PRNGKey(1), x, bits=8,
+                                   snr_db=args.snr_db, fading=False)
     y_c, _ = coding.transmit_quantized_coded(jax.random.PRNGKey(1), x, 8,
                                              args.snr_db, fading=False)
     print(f"\npayload MSE uncoded {float(jnp.mean((y_u - x) ** 2)):.5f} "

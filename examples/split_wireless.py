@@ -4,28 +4,19 @@ The user device computes embedding→conv→pool, compresses the smashed
 activations x4 with the semantic encoder, and transmits them through the
 Rayleigh/AWGN channel; the server decompresses, finishes the forward pass
 (LSTM→dense→sigmoid), backprops, and sends the tau-clipped activation
-gradient back through the same channel. Every leg's payload is counted.
+gradient back through the same channel. Every leg is a `Delivery` from
+the session's `Radio`, so every byte (and retransmission) is counted.
+`SplitScheme(protocol="two_party")` drives the two-party `SLSession`
+through the same `Experiment` loop the benchmarks use.
 
     PYTHONPATH=src python examples/split_wireless.py [--snr-db 20]
 """
 import argparse
-import os
-import sys
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import get_arch
 from repro.configs.base import WirelessConfig
 from repro.core import energy as EN
 from repro.data.sentiment import make_splits
-from repro.data.pipeline import batches
-from repro.models import lstm_tiny
-from repro.runtime.sl_runtime import SLSession
+from repro.schemes import Experiment, build_scheme
 
 
 def main():
@@ -35,31 +26,24 @@ def main():
     ap.add_argument("--epochs", type=int, default=12)
     args = ap.parse_args()
 
-    cfg = get_arch("paper-tinylstm")
     wcfg = WirelessConfig(mode="sl", snr_db=args.snr_db,
                           quant_bits=args.quant_bits)
     print(f"SL: split after conv+pool, x{wcfg.compress_factor} semantic "
           f"compression, Q{wcfg.quant_bits} transport, tau={wcfg.grad_clip}")
 
-    (xtr, ytr), (xte, yte) = make_splits(12_288, seed=0)
-    sess = SLSession(cfg, wcfg, jax.random.PRNGKey(0), lr=0.1)
+    scheme = build_scheme(wcfg, protocol="two_party")
+    total = [0.0]
 
-    i = 0
-    for epoch in range(args.epochs):
-        for b in batches(xtr, ytr, 512, seed=epoch):
-            key = jax.random.PRNGKey(i)
-            up = sess.user_uplink(jnp.asarray(b["tokens"]), key)
-            down = sess.server_step(up, jnp.asarray(b["labels"]),
-                                    jax.random.fold_in(key, 1))
-            sess.user_downlink(down)
-            i += 1
-        logits = sess.predict(jnp.asarray(xte), jax.random.fold_in(
-            jax.random.PRNGKey(999), epoch))
-        acc = float(lstm_tiny.accuracy(logits, jnp.asarray(yte)))
-        print(f"epoch {epoch:2d}  loss {float(sess.last_loss):.4f}  "
-              f"test-acc {acc:.4f}  radio {sess.total_bits / 1e6:.1f} Mbit")
+    def report(k, acc, rep):
+        total[0] += rep.bits
+        print(f"epoch {k:2d}  loss {rep.loss:.4f}  test-acc {acc:.4f}  "
+              f"radio {total[0] / 1e6:.1f} Mbit")
 
-    comm_j = EN.comm_energy_j(sess.total_bits, wcfg)
+    res = Experiment(scheme, cycles=args.epochs,
+                     data=make_splits(12_288, seed=0),
+                     on_cycle=report).run()
+
+    comm_j = EN.comm_energy_j(res.total_bits, wcfg)
     print(f"\ncomm energy {comm_j:.3f} J (paper: SL pays the radio, "
           f"saves user compute)")
 

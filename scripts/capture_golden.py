@@ -1,0 +1,60 @@
+"""Capture fixed-seed golden trajectories of the legacy train_* loops.
+
+Run from the repo root BEFORE (to generate) or AFTER (to verify) the
+scheme refactor:
+
+    PYTHONPATH=src python scripts/capture_golden.py
+
+Writes tests/golden_scheme_parity.json, consumed by
+tests/test_scheme_parity.py. Small corpus (3072/512) keeps each arm to a
+few seconds while still exercising multi-batch epochs and all three
+radio paths.
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import train_cl, train_fl, train_sl
+from repro.configs.base import WirelessConfig
+
+N_TRAIN, N_TEST = 3072, 512
+
+
+def rec(res):
+    return {"accuracy": [float(a) for a in res.accuracy],
+            "loss": [float(l) for l in res.loss],
+            "total_bits": float(res.total_bits)}
+
+
+def main():
+    out = {}
+    out["cl_clean"] = rec(train_cl(cycles=2, wcfg=None, seed=0,
+                                   n_train=N_TRAIN, n_test=N_TEST))
+    out["cl_noisy"] = rec(train_cl(
+        cycles=2, wcfg=WirelessConfig(mode="cl", snr_db=10.0), seed=0,
+        n_train=N_TRAIN, n_test=N_TEST))
+    out["fl_q8"] = rec(train_fl(
+        cycles=2, wcfg=WirelessConfig(mode="fl", quant_bits=8), seed=0,
+        n_train=N_TRAIN, n_test=N_TEST))
+    out["sl_perfect"] = rec(train_sl(
+        cycles=2, wcfg=WirelessConfig(mode="sl", quant_bits=16,
+                                      perfect_channel=True), seed=0,
+        n_train=N_TRAIN, n_test=N_TEST))
+    # noisy SL: record payload accounting only (the trajectory depends on
+    # the channel-noise RNG stream, which the packed-wire unification of
+    # channel_crossing re-derives)
+    out["sl_noisy_bits"] = {"total_bits": float(train_sl(
+        cycles=1, wcfg=WirelessConfig(mode="sl", quant_bits=16), seed=0,
+        n_train=N_TRAIN, n_test=N_TEST).total_bits)}
+    path = os.path.join(os.path.dirname(__file__), "..", "tests",
+                        "golden_scheme_parity.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

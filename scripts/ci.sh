@@ -1,0 +1,28 @@
+#!/usr/bin/env bash
+# Smoke CI: tier-1 test suite + the packed-wire perf benchmark.
+#
+#     bash scripts/ci.sh
+#
+# The wire bench writes benchmarks/results/BENCH_wire.json so the
+# packed-wire speedup trajectory stays tracked run-over-run (ROADMAP
+# open item); the acceptance gate below exits nonzero if the packed
+# path loses its >=3x advantage over the jitted per-leaf loop.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1 pytest ==="
+python -m pytest -x -q
+
+echo "=== packed-wire perf benchmark ==="
+python -m benchmarks.run --only wire
+
+echo "=== packed-wire acceptance gate (>=3x vs jitted per-leaf loop) ==="
+python - <<'EOF'
+import json, sys
+res = json.load(open("benchmarks/results/BENCH_wire.json"))
+speed = res["cases"]["fl_tinylstm_n3"]["speedup_vs_per_leaf_jit"]
+print(f"fl_tinylstm_n3 packed speedup vs per-leaf jit: {speed:.2f}x")
+sys.exit(0 if speed >= 3.0 else 1)
+EOF

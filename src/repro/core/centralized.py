@@ -8,16 +8,28 @@ from __future__ import annotations
 import jax
 
 from repro.core import channel as CH
+from repro.core import wire as W
 
 
-def upload_batch(key, batch: dict, vocab_size: int, wcfg) -> tuple[dict, int]:
+def token_bits(vocab_size: int) -> int:
+    """Fixed-width codeword size of one raw token id on the CL uplink."""
+    return max(1, (int(vocab_size) - 1).bit_length())
+
+
+def upload_batch(key, batch: dict, vocab_size: int, wcfg) -> tuple[dict, float]:
     """Send raw tokens through the channel. Labels ride a control channel
     (1 bit; errors there are ignored as in the paper). Returns
-    (received batch, payload bits)."""
+    (received batch, payload bits).
+
+    Payload accounting is wire.payload_bits and is charged whether or
+    not the channel is perfect: the dataset crosses the radio either
+    way — a perfect channel is noiseless, not free (this is the ONE
+    convention; the old code charged 0 here while the CL driver charged
+    full bits even with no channel at all)."""
+    bits = W.payload_bits(batch["tokens"], token_bits(vocab_size)) \
+        + W.payload_bits(batch["labels"], 1)
     if wcfg.perfect_channel:
-        return batch, 0
-    n_bits = max(1, (vocab_size - 1).bit_length())
+        return batch, bits
     tokens = CH.transmit_tokens(key, batch["tokens"], vocab_size,
-                                wcfg.snr_db, wcfg.fading)
-    bits = batch["tokens"].size * n_bits + batch["labels"].size
+                                snr_db=wcfg.snr_db, fading=wcfg.fading)
     return dict(batch, tokens=tokens), bits

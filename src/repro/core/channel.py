@@ -134,9 +134,14 @@ def channel_crossing(x, key, bits, snr_db, fading, grad_clip, perfect):
     """The SL radio boundary (Alg. 2): the forward activation AND the
     backward gradient both traverse quantize->BPSK->Rayleigh+AWGN.
     The gradient is norm-clipped to `grad_clip` (tau) before transmission.
+
+    Both legs go through the packed wire (core/wire.py), so the jitted
+    SL train step and the two-party `SLSession` share ONE wire
+    implementation: same per-tensor scale, same Murmur3 bit-plane RNG,
+    same fused quantize/bit-flip/dequantize pass.
     """
-    y, _ = transmit_quantized(key, x, bits, snr_db, fading, perfect)
-    return y
+    return W.transmit_tree(key, x, bits=bits, snr_db=snr_db, fading=fading,
+                           perfect=perfect)
 
 
 def _cc_fwd(x, key, bits, snr_db, fading, grad_clip, perfect):
@@ -146,8 +151,8 @@ def _cc_fwd(x, key, bits, snr_db, fading, grad_clip, perfect):
 def _cc_bwd(bits, snr_db, fading, grad_clip, perfect, key, g):
     from repro.optim.clip import clip_array_by_norm
     g = clip_array_by_norm(g, grad_clip)
-    g_hat, _ = transmit_quantized(jax.random.fold_in(key, 1), g, bits,
-                                  snr_db, fading, perfect)
+    g_hat = W.transmit_tree(jax.random.fold_in(key, 1), g, bits=bits,
+                            snr_db=snr_db, fading=fading, perfect=perfect)
     # receiver-side re-clip: a deep Rayleigh fade flips high-order bits
     # and can blow the received norm to tau*sqrt(N); the receiver knows
     # tau, so clipping again on arrival bounds the impulse (without it,
@@ -168,6 +173,6 @@ def transmit_pytree(key, tree, bits, snr_db, fading=True, perfect=False,
     fused jitted pass; use_kernel=True selects the Pallas kernel for the
     packed buffer (the TPU deploy path; interpret mode on CPU)."""
     impl = "kernel" if (use_kernel and not perfect) else "packed"
-    out = W.transmit_tree(key, tree, bits, snr_db, fading=fading,
+    out = W.transmit_tree(key, tree, bits=bits, snr_db=snr_db, fading=fading,
                           perfect=perfect, impl=impl)
     return out, W.payload_bits(tree, bits)

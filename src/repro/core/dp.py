@@ -56,9 +56,10 @@ def fedavg_dp_through_channel(key, user_params, broadcast, wcfg,
         delta = jax.tree.unflatten(treedef, delta)
         kp, kc = jax.random.split(jax.random.fold_in(key, u))
         delta = privatize_update(kp, delta, clip_c, sigma)
-        delta, bits = CH.transmit_pytree(kc, delta, wcfg.quant_bits,
-                                         wcfg.snr_db, wcfg.fading,
-                                         wcfg.perfect_channel)
+        delta, bits = CH.transmit_pytree(kc, delta, bits=wcfg.quant_bits,
+                                         snr_db=wcfg.snr_db,
+                                         fading=wcfg.fading,
+                                         perfect=wcfg.perfect_channel)
         received.append(delta)
         total_bits += bits
     avg_delta = jax.tree.map(lambda *ds: sum(ds) / n_users, *received)

@@ -40,7 +40,7 @@ def fedavg_through_channel(key, user_params, wcfg):
     attempts = getattr(wcfg, "arq_attempts", 1)
     min_f2 = getattr(wcfg, "arq_min_f2", 0.25)
     received = W.transmit_stacked(
-        key, user_params, wcfg.quant_bits, wcfg.snr_db,
+        key, user_params, bits=wcfg.quant_bits, snr_db=wcfg.snr_db,
         fading=wcfg.fading, perfect=wcfg.perfect_channel,
         arq_attempts=attempts, arq_min_f2=min_f2)
     if getattr(wcfg, "aggregate", "mean") == "median":

@@ -215,12 +215,15 @@ def wire_transform(buf: jax.Array, rand: jax.Array, scale, p,
 
 
 def _packet_fades(kf, n: int, n_packets: int, fading: bool,
-                  arq_attempts: int, arq_min_f2: float) -> jax.Array:
-    """|f|^2 per (user, packet) — ONE batched uniform draw. With ARQ,
-    deep fades are redrawn up to `arq_attempts` times (vectorized
-    rayleigh_gain_arq)."""
+                  arq_attempts: int, arq_min_f2: float):
+    """(|f|^2, n_tx) per (user, packet) — ONE batched uniform draw. With
+    ARQ, deep fades are redrawn up to `arq_attempts` times (vectorized
+    rayleigh_gain_arq); n_tx is the DRAWN per-packet transmission count
+    (1 everywhere without ARQ), surfaced so accounting can report actual
+    rather than expected retransmissions."""
+    ones = jnp.ones((n, n_packets), jnp.int32)
     if not fading:
-        return jnp.ones((n, n_packets), jnp.float32)
+        return jnp.ones((n, n_packets), jnp.float32), ones
     if arq_attempts > 1:
         u = jax.random.uniform(kf, (n, n_packets, arq_attempts),
                                jnp.float32, 1e-12, 1.0)
@@ -229,9 +232,11 @@ def _packet_fades(kf, n: int, n_packets: int, fading: bool,
         any_ok = ok.any(axis=-1)
         first = jnp.argmax(ok, axis=-1)
         idx = jnp.where(any_ok, first, arq_attempts - 1)
-        return jnp.take_along_axis(f2s, idx[..., None], axis=-1)[..., 0]
+        n_tx = jnp.where(any_ok, first + 1, arq_attempts).astype(jnp.int32)
+        return jnp.take_along_axis(f2s, idx[..., None], axis=-1)[..., 0], \
+            n_tx
     u = jax.random.uniform(kf, (n, n_packets), jnp.float32, 1e-12, 1.0)
-    return -jnp.log(u)
+    return -jnp.log(u), ones
 
 
 def _transmit_per_leaf(leaves, plan: WirePlan, rand, p, bits: int):
@@ -265,7 +270,8 @@ def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
                               arq_attempts: int, arq_min_f2: float,
                               impl: str, interpret: bool):
     """One fused pass over a stacked tuple of leaves ([N, *shape_i]).
-    Returns the received leaves, same stacked shapes."""
+    Returns (received leaves (same stacked shapes), n_tx [N, P] drawn
+    per-packet transmission counts)."""
     from repro.core import channel as CH  # lazy: channel imports wire
 
     n = leaves[0].shape[0] if leaves else 1
@@ -273,13 +279,15 @@ def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
     kf, kb = jax.random.split(key)
     if perfect:
         p = jnp.zeros((n, npk), jnp.float32)
+        n_tx = jnp.ones((n, npk), jnp.int32)
     else:
-        f2 = _packet_fades(kf, n, npk, fading, arq_attempts, arq_min_f2)
+        f2, n_tx = _packet_fades(kf, n, npk, fading, arq_attempts,
+                                 arq_min_f2)
         p = CH.bpsk_bit_error_prob(snr_db, f2)
     rand = jax.random.bits(kb, (n, plan.n_rows, plan.cols), jnp.uint32)
 
     if impl == "per_leaf":
-        return _transmit_per_leaf(leaves, plan, rand, p, bits)
+        return _transmit_per_leaf(leaves, plan, rand, p, bits), n_tx
 
     buf = jax.vmap(lambda *ls: _pack_leaves(ls, plan))(*leaves)  # [n, R, C]
     row_id = jnp.asarray(_row_ids(plan))
@@ -299,50 +307,60 @@ def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
                            interpret=interpret).reshape(n, r, c)
     else:
         y = wire_transform(buf, rand, scale_row, p_row, bits)
-    return jax.vmap(lambda b: tuple(_unpack_leaves(b, plan)))(y)
+    return jax.vmap(lambda b: tuple(_unpack_leaves(b, plan)))(y), n_tx
 
 
 def transmit_stacked(key, tree, bits: int, snr_db, fading: bool = True,
                      perfect: bool = False, arq_attempts: int = 1,
                      arq_min_f2: float = 0.25, impl: str = "packed",
-                     interpret: bool = True):
+                     interpret: bool = True, return_diag: bool = False):
     """Fused transmit of a tree whose leaves carry a leading user axis
     [N, ...]: each (user, leaf) pair is one packet with its own fade and
     per-tensor quantization scale — FL's whole N-user upload in one
-    jitted call (one kernel launch under impl="kernel")."""
+    jitted call (one kernel launch under impl="kernel").
+
+    With return_diag=True also returns {"n_tx": [N, P] int32}, the DRAWN
+    per-(user, packet) ARQ transmission counts (all-ones without ARQ) —
+    the actual on-air cost, vs the analytic `expected_arq_tx`."""
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
-        return tree
+        return (tree, {"n_tx": jnp.zeros((1, 0), jnp.int32)}) \
+            if return_diag else tree
     plan = _plan_from_shapes(treedef,
                              tuple(tuple(l.shape[1:]) for l in leaves),
                              tuple(np.dtype(l.dtype) for l in leaves),
                              WIRE_COLS)
-    out = _transmit_stacked_planned(key, tuple(leaves), plan, int(bits),
-                                    snr_db, bool(fading), bool(perfect),
-                                    int(arq_attempts), float(arq_min_f2),
-                                    impl, bool(interpret))
-    return jax.tree.unflatten(treedef, list(out))
+    out, n_tx = _transmit_stacked_planned(
+        key, tuple(leaves), plan, int(bits), snr_db, bool(fading),
+        bool(perfect), int(arq_attempts), float(arq_min_f2), impl,
+        bool(interpret))
+    rx = jax.tree.unflatten(treedef, list(out))
+    return (rx, {"n_tx": n_tx}) if return_diag else rx
 
 
 def transmit_tree(key, tree, bits: int, snr_db, fading: bool = True,
                   perfect: bool = False, arq_attempts: int = 1,
                   arq_min_f2: float = 0.25, impl: str = "packed",
-                  interpret: bool = True):
+                  interpret: bool = True, return_diag: bool = False):
     """Fused transmit of an arbitrary pytree: one fade + one per-tensor
     scale per leaf, one RNG draw and one quantize/channel/dequantize
     pass for the whole tree. Drop-in replacement for the per-leaf
     transmit loop; `impl` selects packed-jnp (default), the Pallas
-    kernel, or the bit-identical per-leaf reference."""
+    kernel, or the bit-identical per-leaf reference.
+
+    With return_diag=True also returns {"n_tx": [P] int32} drawn
+    per-packet transmission counts (see transmit_stacked)."""
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
-        return tree
+        return (tree, {"n_tx": jnp.zeros((0,), jnp.int32)}) \
+            if return_diag else tree
     plan = _plan_from_shapes(treedef,
                              tuple(tuple(l.shape) for l in leaves),
                              tuple(np.dtype(l.dtype) for l in leaves),
                              WIRE_COLS)
     stacked = tuple(l[None] for l in leaves)
-    out = _transmit_stacked_planned(key, stacked, plan, int(bits), snr_db,
-                                    bool(fading), bool(perfect),
-                                    int(arq_attempts), float(arq_min_f2),
-                                    impl, bool(interpret))
-    return jax.tree.unflatten(treedef, [o[0] for o in out])
+    out, n_tx = _transmit_stacked_planned(
+        key, stacked, plan, int(bits), snr_db, bool(fading), bool(perfect),
+        int(arq_attempts), float(arq_min_f2), impl, bool(interpret))
+    rx = jax.tree.unflatten(treedef, [o[0] for o in out])
+    return (rx, {"n_tx": n_tx[0]}) if return_diag else rx

@@ -96,7 +96,7 @@ def make_fl_train_step(cfg, shape_cfg, wcfg, n_users: int = 2,
         # the mean below remains the single cross-pod all-reduce)
         received = WIRE.transmit_stacked(
             jax.random.fold_in(key, 999), state.trainable["model"],
-            wcfg.quant_bits, wcfg.snr_db, fading=wcfg.fading,
+            bits=wcfg.quant_bits, snr_db=wcfg.snr_db, fading=wcfg.fading,
             perfect=wcfg.perfect_channel)
         model = jax.tree.map(
             lambda r, leaf: jnp.broadcast_to(jnp.mean(r, axis=0),

@@ -11,36 +11,30 @@ messages, so the radio boundary is a real serialization point.
         down = session.server_step(up, batch["labels"], key) # SERVER
         session.user_downlink(down)                          # USER device
 
-Each leg quantizes, crosses the Rayleigh/AWGN channel (one fused
-packed-wire call per leg, core/wire.py), and accounts its payload bits
-via wire.payload_bits. Works for the paper's tiny model (conv+pool user-side) —
-the scaled architectures use the fused path (runtime/train_step.py with
-wcfg.mode == "sl"), which the multi-pod dry-run lowers with the pod axis
-as the user/server boundary.
+Each leg goes through the session's `Radio` (schemes/radio.py): one
+fused packed-wire call per leg, returning a `Delivery` whose payload /
+bits / energy / drawn-transmission accounting the session accumulates.
+`Message` is an alias of `Delivery` (the schemes API made the generic
+envelope first-class). Works for the paper's tiny model (conv+pool
+user-side) — the scaled architectures use the fused path
+(runtime/train_step.py with wcfg.mode == "sl"), which the multi-pod
+dry-run lowers with the pod axis as the user/server boundary.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional
-
 import jax
-import jax.numpy as jnp
 
 from repro.core import semantic
-from repro.core import wire as W
-from repro.core.split import init_codec
 from repro.models import lstm_tiny
 from repro.nn import init_params
 from repro.optim import sgd_momentum
 from repro.optim.clip import clip_array_by_norm
+from repro.schemes.radio import Delivery, Radio
 
-
-@dataclasses.dataclass
-class Message:
-    """One radio transmission: quantized payload + metadata the receiver
-    needs (scale rides the control channel, as in the paper)."""
-    payload: jax.Array          # dequantized-at-receiver tensor
-    bits: float                 # payload size on the wire (wire.payload_bits)
+# One radio transmission: received payload + on-air accounting. The
+# receiver-side metadata (quantization scale) rides the control channel,
+# as in the paper.
+Message = Delivery
 
 
 class SLSession:
@@ -49,6 +43,7 @@ class SLSession:
     def __init__(self, cfg, wcfg, key, lr: float = 0.1,
                  momentum: float = 0.9):
         self.cfg, self.wcfg = cfg, wcfg
+        self.radio = Radio.from_wcfg(wcfg)
         ku, kc = jax.random.split(key)
         params = init_params(ku, lstm_tiny.model_specs(
             cfg, wcfg.compress_factor))
@@ -83,12 +78,9 @@ class SLSession:
         smashed, z = self._jit_user_fwd(self.user_params, self.user_codec,
                                         tokens)
         self._cached_smashed = (tokens, smashed, z)
-        w = self.wcfg
-        y = W.transmit_tree(key, z, w.quant_bits, w.snr_db,
-                            fading=w.fading, perfect=w.perfect_channel)
-        bits = W.payload_bits(z, w.quant_bits)
-        self.total_bits += bits
-        return Message(y, bits)
+        msg = self.radio.send_tree(key, z)
+        self.total_bits += msg.bits
+        return msg
 
     # ----------------------------------------------------------- server
     def _server_step_core(self, server_params, server_codec, opt, z_hat,
@@ -114,12 +106,9 @@ class SLSession:
          grad_z, self.last_loss) = self._jit_server(
             self.server_params, self.server_codec, self._server_opt,
             up.payload, labels)
-        w = self.wcfg
-        g_hat = W.transmit_tree(key, grad_z, w.quant_bits, w.snr_db,
-                                fading=w.fading, perfect=w.perfect_channel)
-        bits = W.payload_bits(grad_z, w.quant_bits)
-        self.total_bits += bits
-        return Message(g_hat, bits)
+        msg = self.radio.send_tree(key, grad_z)
+        self.total_bits += msg.bits
+        return msg
 
     # ------------------------------------------------------ user (bwd)
     def _user_bwd(self, user_params, user_codec, opt, tokens, g_z):

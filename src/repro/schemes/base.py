@@ -1,0 +1,223 @@
+"""Scheme protocol + shared plumbing for the unified CL/FL/SL API.
+
+The paper is a three-way comparison of learning paradigms under one
+channel; this module gives the three paradigms ONE interface:
+
+    scheme = build_scheme(wcfg)                  # schemes/run.py
+    state, first = scheme.init(seed, xtr, ytr)   # params (+CL data upload)
+    batch = scheme.cycle_batches(state, rng, k)  # paradigm's cycle data
+    state, report = scheme.round(state, batch, key, lr)
+    acc = scheme.evaluate(state, xte, yte)
+
+One `round` is one communication cycle: a training epoch for CL/SL, the
+J-local-epochs + quantized-upload + FedAvg exchange for FL. Every radio
+crossing goes through the scheme's `Radio` (schemes/radio.py) and is
+accounted in the `RoundReport`. The `Experiment` runner (schemes/run.py)
+drives any scheme through the fixed-seed loop the three copy-pasted
+`train_cl`/`train_fl`/`train_sl` drivers used to duplicate, reproducing
+their RNG streams exactly (see tests/test_scheme_parity.py).
+
+Shared constants (paper Table I) and the reduced-corpus scaling note
+live here; see the module docstring of benchmarks/common.py (the
+original home of these loops) for the dataset-reduction rationale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Protocol, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig, WirelessConfig
+from repro.data.sentiment import make_splits
+from repro.models import lstm_tiny
+from repro.schemes.radio import Delivery, Radio
+
+CFG = get_arch("paper-tinylstm")
+BATCH = 512                      # paper Table I
+# Paper Table I: lr=0.01, SGD+momentum 0.9, over ~140k steps (50 epochs
+# x 2813 batches of the 1.44M-sample corpus). The reduced corpus gives
+# ~50x fewer steps, so the LR is scaled x10 to keep comparable total
+# optimization travel; the schedule shape (x0.9 every 5 epochs) is the
+# paper's. Deviation recorded in EXPERIMENTS.md §Repro.
+LR0 = 0.1
+MOMENTUM = 0.9
+LR_DECAY, LR_EVERY = 0.9, 5      # "reduce by 10% every 5 epochs"
+
+# Reduced-corpus defaults (paper: 1.44M train / 160k test).
+N_TRAIN = 24_576
+N_TEST = 2_560
+
+
+def lr_at(epoch: int) -> float:
+    return LR0 * LR_DECAY ** (epoch // LR_EVERY)
+
+
+def train_shape(batch: int = BATCH) -> ShapeConfig:
+    return ShapeConfig("paper", 30, batch, "train", microbatch=batch)
+
+
+# --------------------------------------------------------------------- data
+@functools.lru_cache(maxsize=4)
+def corpus(n_train: int = N_TRAIN, n_test: int = N_TEST, seed: int = 0):
+    (xtr, ytr), (xte, yte) = make_splits(n_train + n_test, seed=seed,
+                                         train_frac=n_train / (n_train + n_test))
+    return (xtr, ytr), (xte, yte)
+
+
+def batches_of(x: np.ndarray, y: np.ndarray, batch: int,
+               rng: np.random.Generator):
+    idx = rng.permutation(len(x))
+    n = len(x) // batch
+    for i in range(n):
+        s = idx[i * batch:(i + 1) * batch]
+        yield {"tokens": jnp.asarray(x[s]), "labels": jnp.asarray(y[s])}
+
+
+# --------------------------------------------------------------------- eval
+@functools.lru_cache(maxsize=8)
+def _eval_fn():
+    @jax.jit
+    def ev(params, tokens, labels):
+        logits, _ = lstm_tiny.forward(params, {"tokens": tokens})
+        return (lstm_tiny.accuracy(logits, labels),
+                lstm_tiny.bce_loss(logits, labels))
+    return ev
+
+
+def evaluate(params, xte, yte, batch: int = 2048):
+    ev = _eval_fn()
+    accs, losses, n = [], [], 0
+    for i in range(0, len(xte) - batch + 1, batch):
+        a, l = ev(params, jnp.asarray(xte[i:i + batch]),
+                  jnp.asarray(yte[i:i + batch]))
+        accs.append(float(a)); losses.append(float(l)); n += 1
+    if not accs:
+        a, l = ev(params, jnp.asarray(xte), jnp.asarray(yte))
+        return float(a), float(l)
+    return float(np.mean(accs)), float(np.mean(losses))
+
+
+# -------------------------------------------------------------------- FLOPs
+@functools.lru_cache(maxsize=16)
+def step_flops(mode: str, wcfg_key: tuple = ()) -> float:
+    """Compiled fwd+bwd FLOPs of one batch-512 train step (CPU backend
+    cost model). For SL the user/server shares are separated by lowering
+    the user-side partition alone."""
+    from repro.runtime.train_step import init_train_state, make_train_step
+    wcfg = WirelessConfig(**dict(wcfg_key)) if wcfg_key else None
+    state = init_train_state(jax.random.PRNGKey(0), CFG, wcfg, "sgd")
+    step = make_train_step(CFG, train_shape(), wcfg, optimizer="sgd",
+                           lr=LR0)
+    batch = {"tokens": jnp.ones((BATCH, 30), jnp.int32),
+             "labels": jnp.ones((BATCH,), jnp.int32)}
+    compiled = jax.jit(step).lower(state, batch, jax.random.PRNGKey(1)).compile()
+    # trip-count-scaled dot/conv FLOPs (XLA cost_analysis counts the LSTM
+    # scan body once — a 14x undercount for this model)
+    from repro.launch.hlo_analysis import analyze
+    return float(analyze(compiled.as_text())["dot_flops"])
+
+
+@functools.lru_cache(maxsize=4)
+def user_side_flops_sl(compress_factor: int = 4) -> float:
+    """SL user-side compute per batch: conv/pool fwd + semantic encode,
+    plus the backward through the same ops (~2x fwd, standard count)."""
+    from repro.core import semantic
+    from repro.nn import init_params
+    specs = lstm_tiny.model_specs(None, compress_factor)
+    params = init_params(jax.random.PRNGKey(0), specs)
+
+    def user_fwd_loss(p, tokens):
+        smashed = lstm_tiny.user_forward(p, tokens)
+        z = semantic.encode({"enc": p["sem_enc"]} if "sem_enc" in p else p, smashed)
+        return jnp.sum(z * z)
+
+    tokens = jnp.ones((BATCH, 30), jnp.int32)
+    compiled = jax.jit(jax.grad(user_fwd_loss)).lower(params, tokens).compile()
+    from repro.launch.hlo_analysis import analyze
+    return float(analyze(compiled.as_text())["dot_flops"])
+
+
+# ------------------------------------------------------------------ results
+@dataclasses.dataclass
+class RunResult:
+    accuracy: list          # per-cycle test accuracy
+    loss: list              # per-cycle train loss
+    total_bits: float       # payload that crossed the radio (uplink+downlink)
+    user_flops: float       # user-side computation (fwd+bwd share)
+    server_flops: float
+    captures: dict          # privacy-eval observations (optional)
+
+    @property
+    def final_accuracy(self) -> float:
+        return float(np.mean(self.accuracy[-3:])) if self.accuracy else 0.0
+
+
+@dataclasses.dataclass
+class RoundReport:
+    """Accounting of ONE communication cycle of any scheme.
+
+    `n_tx` is the DRAWN transmission count wherever the wire surfaces
+    it (FL's stacked sync, two-party SL legs, CL's per-row uplink); the
+    FUSED SL path reports the analytic expectation instead — its
+    crossings live inside the jitted train step, which does not expose
+    per-step diagnostics. Cross-paradigm comparisons should treat fused
+    SL's n_tx as E[tx], exact only without ARQ (where both equal one
+    transmission per packet)."""
+    loss: float             # train loss (last step for CL/SL, mean for FL)
+    steps: int              # optimizer steps taken this round (per user)
+    bits: float = 0.0       # on-air payload this round (drawn-ARQ actual)
+    n_tx: float = 0.0       # transmissions across the round's packets
+    energy_j: float = 0.0   # comm energy of this round's deliveries
+    metrics: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class SchemeState:
+    """Host-side state threaded through rounds."""
+    train: Any              # TrainState (CL/SL) / user-stacked (FL) / session
+    data: Any               # training data as held by the training side
+    steps: int = 0          # cumulative optimizer steps (per user for FL)
+    epoch: int = 0          # cumulative local epochs (drives the lr schedule)
+
+
+class Scheme(Protocol):
+    """One learning paradigm under the wireless channel. All radio
+    crossings go through `self.radio`; `self.captures` collects privacy
+    observations when built with capture=True."""
+    mode: str
+    radio: Radio
+    epochs_per_cycle: int
+    bits_normalizer: float   # RunResult.total_bits divisor (N users for FL)
+    captures: dict
+
+    def init(self, seed: int, xtr, ytr) -> Tuple[SchemeState,
+                                                 Optional[Delivery]]:
+        """Model/session init + any one-time data crossing (CL)."""
+        ...
+
+    def cycle_batches(self, state: SchemeState, rng: np.random.Generator,
+                      cycle: int) -> Any:
+        """Draw one cycle's training data in the paradigm's shape."""
+        ...
+
+    def round_key(self, seed: int, cycle: int) -> jax.Array:
+        """The cycle's base PRNG key (matches the legacy drivers)."""
+        ...
+
+    def round(self, state: SchemeState, batch: Any, key: jax.Array,
+              lr: float) -> Tuple[SchemeState, RoundReport]:
+        """One communication cycle."""
+        ...
+
+    def evaluate(self, state: SchemeState, xte, yte) -> float:
+        """Deployed-function test accuracy."""
+        ...
+
+    def flops(self, steps_total: int) -> Tuple[float, float]:
+        """(user_flops, server_flops) for `steps_total` optimizer steps."""
+        ...

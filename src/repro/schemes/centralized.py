@@ -1,0 +1,76 @@
+"""CentralizedScheme: the paper's CL baseline behind the Scheme API.
+
+The raw dataset crosses the channel ONCE at `init` (bit errors corrupt
+token ids directly — paper Fig. 3d); the server then trains normally.
+One `round` = one server epoch over the (possibly corrupted) corpus.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.train_step import init_train_state, make_train_step
+from repro.schemes.base import (BATCH, CFG, MOMENTUM, RoundReport,
+                                SchemeState, batches_of, evaluate,
+                                step_flops, train_shape)
+from repro.schemes.radio import Radio
+
+
+class CentralizedScheme:
+    mode = "cl"
+    epochs_per_cycle = 1
+    bits_normalizer = 1.0
+
+    def __init__(self, wcfg=None, capture: bool = False):
+        self.wcfg = wcfg
+        self.radio = Radio.from_wcfg(wcfg)
+        self.capture = capture
+        self.captures: dict = {}
+        self._steps: dict = {}          # lr -> jitted train step
+
+    # ------------------------------------------------------------- setup
+    def init(self, seed: int, xtr, ytr):
+        clean = np.asarray(xtr)
+        dlv = self.radio.send_tokens(jax.random.PRNGKey(seed + 7),
+                                     jnp.asarray(clean), CFG.vocab_size,
+                                     labels=ytr)
+        xtr_rx = np.asarray(dlv.payload)
+        if self.capture:
+            self.captures = {"received": xtr_rx.copy(),
+                             "original": clean.copy()}
+        state = init_train_state(jax.random.PRNGKey(seed), CFG, None, "sgd")
+        return SchemeState(train=state, data=(xtr_rx, np.asarray(ytr))), dlv
+
+    def cycle_batches(self, state, rng, cycle):
+        xtr, ytr = state.data
+        return batches_of(xtr, ytr, BATCH, rng)
+
+    def round_key(self, seed: int, cycle: int):
+        return jax.random.PRNGKey(seed + 2)
+
+    # ------------------------------------------------------------- round
+    def _step_for(self, lr: float):
+        if lr not in self._steps:
+            self._steps[lr] = jax.jit(make_train_step(
+                CFG, train_shape(), None, optimizer="sgd", lr=lr,
+                momentum=MOMENTUM))
+        return self._steps[lr]
+
+    def round(self, state, batch, key, lr):
+        step = self._step_for(lr)
+        st, steps, m = state.train, state.steps, None
+        for b in batch:
+            st, m = step(st, b, jax.random.fold_in(key, steps))
+            steps += 1
+        new = SchemeState(st, state.data, steps, state.epoch + 1)
+        # the data upload was charged at init; rounds are radio-silent
+        return new, RoundReport(loss=float(m["loss"]),
+                                steps=steps - state.steps)
+
+    # -------------------------------------------------------------- eval
+    def evaluate(self, state, xte, yte) -> float:
+        return evaluate(state.train.trainable["model"], xte, yte)[0]
+
+    def flops(self, steps_total: int):
+        return 0.0, step_flops("cl") * steps_total   # paper: CL user = 0

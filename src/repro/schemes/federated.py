@@ -1,0 +1,183 @@
+"""FederatedScheme: the paper's FL (Alg. 1) behind the Scheme API.
+
+One `round` = J local epochs per user (vmapped over the user axis),
+one quantized N-user weight upload through the packed wire
+(`radio.send_stacked` — one fused pass, one packet per (user, tensor)),
+FedAvg (Eq. 3; coordinate-median option), broadcast back.
+
+Beyond-paper hooks used by the extension study
+(benchmarks/extensions.py): custom shards (Dirichlet non-IID), FedProx
+proximal pull, DP-FedAvg uploads, sample-with-replacement batching for
+sub-batch shards.
+
+Privacy capture now observes the SAME channel pass the sync uses (the
+stacked payload before averaging), so capture runs no longer perturb
+the trajectory the way the old per-user `_receive_users` loop did.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dp
+from repro.core import federated as FED
+from repro.data.sentiment import partition_users
+from repro.runtime.fl_runtime import make_local_step_tiny
+from repro.runtime.train_step import TrainState, init_train_state
+from repro.schemes.base import (BATCH, CFG, MOMENTUM, RoundReport,
+                                SchemeState, batches_of, evaluate,
+                                step_flops)
+from repro.schemes.radio import Radio
+
+
+@functools.lru_cache(maxsize=16)
+def _local_step(lr: float):
+    return make_local_step_tiny(CFG, None, lr, MOMENTUM)
+
+
+def _flat_uploads(received, pre_broadcast):
+    """[N, P] received weight-delta (vs the cycle's broadcast weights)."""
+    pre_leaves = jax.tree.leaves(pre_broadcast)
+    rx_leaves = jax.tree.leaves(received)
+    return np.asarray(jnp.concatenate(
+        [(r - p[None]).reshape(r.shape[0], -1)
+         for r, p in zip(rx_leaves, pre_leaves)], axis=1))
+
+
+class FederatedScheme:
+    mode = "fl"
+
+    def __init__(self, wcfg=None, capture: bool = False, shards=None,
+                 dp_sigma: float = 0.0, dp_clip: float = 1.0,
+                 prox_mu: float = 0.0,
+                 sample_with_replacement: bool = False):
+        from repro.configs.base import WirelessConfig
+        self.wcfg = wcfg or WirelessConfig(mode="fl")
+        self.radio = Radio.from_wcfg(self.wcfg)
+        # custom shards define the population; wcfg.n_users otherwise
+        self.n_users = len(shards) if shards is not None \
+            else self.wcfg.n_users
+        self.local_epochs = self.wcfg.local_steps
+        self.epochs_per_cycle = self.local_epochs
+        self.bits_normalizer = float(self.n_users)   # report per-user bits
+        if capture and dp_sigma > 0:
+            # the DP sync transmits privatized deltas through its own
+            # per-user path and takes no observations; a silent empty
+            # capture would crash a privacy eval far from the cause
+            raise ValueError("capture=True is not supported with "
+                             "dp_sigma > 0 (DP uploads are not observed)")
+        self.capture = capture
+        self.captures = {"deltas": [], "targets": []} if capture else {}
+        self.shards = shards
+        self.dp_sigma, self.dp_clip = dp_sigma, dp_clip
+        self.prox_mu = prox_mu
+        self.sample_with_replacement = sample_with_replacement
+        self.last_epsilon = math.inf
+
+    # ------------------------------------------------------------- setup
+    def init(self, seed: int, xtr, ytr):
+        shards = self.shards if self.shards is not None else \
+            partition_users(xtr, ytr, self.n_users)
+        spe = len(shards[0][0]) // BATCH
+        self._spe = max(1, spe) if self.sample_with_replacement else spe
+        state0 = init_train_state(jax.random.PRNGKey(seed), CFG, None,
+                                  "sgd")
+        user_states = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (self.n_users,) + p.shape),
+            state0)
+        return SchemeState(train=user_states, data=shards), None
+
+    def cycle_batches(self, state, rng, cycle):
+        shards = state.data
+        j = self.local_epochs * self._spe
+        seq = shards[0][0].shape[1]
+        toks = np.empty((self.n_users, j, BATCH, seq), np.int32)
+        labs = np.empty((self.n_users, j, BATCH), np.int32)
+        for u, (xu, yu) in enumerate(shards):
+            if self.sample_with_replacement:
+                # Dirichlet shards can be smaller than one batch; a plain
+                # epoch iterator would leave batches uninitialized
+                for bi in range(j):
+                    idx = rng.integers(0, len(xu), BATCH)
+                    toks[u, bi] = xu[idx]
+                    labs[u, bi] = yu[idx]
+            else:
+                bi = 0
+                for _ in range(self.local_epochs):
+                    for b in batches_of(xu, yu, BATCH, rng):
+                        toks[u, bi] = np.asarray(b["tokens"])
+                        labs[u, bi] = np.asarray(b["labels"])
+                        bi += 1
+        return {"tokens": toks, "labels": labs}
+
+    def round_key(self, seed: int, cycle: int):
+        return jax.random.fold_in(jax.random.PRNGKey(seed + 3), cycle)
+
+    # ------------------------------------------------------------- round
+    def round(self, state, batch, key, lr):
+        j = batch["tokens"].shape[1]
+        jb = {"tokens": jnp.asarray(batch["tokens"]),
+              "labels": jnp.asarray(batch["labels"])}
+        broadcast = jax.tree.map(lambda p: p[0],
+                                 state.train.trainable["model"])
+
+        # --- local phase (Alg. 1 lines 3-7), vmapped over users
+        if self.prox_mu:
+            anchor = {"model": broadcast, "codec": {}}
+            local_step = make_local_step_tiny(CFG, None, lr,
+                                              prox_mu=self.prox_mu,
+                                              anchor=anchor)
+        else:
+            local_step = _local_step(lr)
+        keys = jax.random.split(key, self.n_users * j).reshape(
+            self.n_users, j, 2)
+        states, metrics = FED.local_steps_vmapped(
+            local_step, state.train, (jb, keys))
+
+        # --- quantized channel upload + aggregation (Alg. 1 lines 8-17)
+        user_params = states.trainable["model"]
+        kch = jax.random.fold_in(key, 999)
+        if self.dp_sigma > 0:
+            synced, bits, self.last_epsilon = dp.fedavg_dp_through_channel(
+                kch, user_params, broadcast, self.wcfg,
+                clip_c=self.dp_clip, sigma=self.dp_sigma)
+            bits, n_tx, energy = float(bits), 0.0, self.radio.energy_j(bits)
+        else:
+            dlv = self.radio.send_stacked(kch, user_params)
+            if self.capture:
+                self.captures["deltas"].append(
+                    _flat_uploads(dlv.payload, broadcast))
+                # target: the mean normalized token vector of the user's
+                # shard (the update aggregates the whole local dataset)
+                self.captures["targets"].append(np.stack(
+                    [batch["tokens"][u].reshape(-1, batch["tokens"].shape[-1])
+                     .mean(0) for u in range(self.n_users)]))
+            if getattr(self.wcfg, "aggregate", "mean") == "median":
+                avg = jax.tree.map(lambda r: jnp.median(r, axis=0),
+                                   dlv.payload)
+            else:
+                avg = jax.tree.map(lambda r: jnp.mean(r, axis=0),
+                                   dlv.payload)
+            synced = FED.replicate_for_users(avg, self.n_users)   # Eq. 4
+            bits, n_tx, energy = dlv.bits, dlv.n_tx, dlv.energy_j
+
+        new_train = TrainState(dict(states.trainable, model=synced),
+                               states.opt_state, states.step)
+        new = SchemeState(new_train, state.data, state.steps + j,
+                          state.epoch + self.local_epochs)
+        loss = float(np.asarray(metrics["loss"]).mean())
+        return new, RoundReport(loss=loss, steps=j, bits=bits, n_tx=n_tx,
+                                energy_j=energy)
+
+    # -------------------------------------------------------------- eval
+    def evaluate(self, state, xte, yte) -> float:
+        gp = jax.tree.map(lambda p: p[0], state.train.trainable["model"])
+        return evaluate(gp, xte, yte)[0]
+
+    def flops(self, steps_total: int):
+        # full-model fwd+bwd per local step, per user; server only avgs
+        return step_flops("cl") * steps_total, 0.0

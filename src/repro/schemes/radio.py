@@ -1,0 +1,152 @@
+"""`Radio` — the ONE owner of the channel knobs.
+
+Every transmission in the unified scheme API goes through a `Radio`
+built once from the run's `WirelessConfig`; call sites say
+`radio.send_tree(key, tree)` instead of threading
+`(quant_bits, snr_db, fading, perfect)` positionally through every
+`transmit_*` call. Each send returns a `Delivery` carrying the received
+payload plus the on-air accounting (payload bits, comm energy, drawn
+ARQ transmission counts), so payload/energy bookkeeping happens in
+exactly one place.
+
+Bits accounting uses the DRAWN per-packet transmission counts surfaced
+by the packed wire (`core/wire.py`, `return_diag=True`): without ARQ the
+drawn count is identically 1 and `Delivery.bits` equals the analytic
+`wire.payload_bits`; with ARQ it is the actual retransmission cost of
+this delivery (the analytic expectation stays available via
+`Radio.expected_tx`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+from repro.core import channel as CH
+from repro.core import energy as EN
+from repro.core import wire as W
+
+
+@functools.lru_cache(maxsize=64)
+def _expected_capacity(bandwidth_hz: float, snr_db: float,
+                       fading: bool) -> float:
+    """Cached E_f[C] (Monte-Carlo over Rayleigh |f|^2, energy.py)."""
+    return EN.channel_capacity(bandwidth_hz, snr_db, fading)
+
+
+@dataclasses.dataclass(frozen=True)
+class Delivery:
+    """One radio transmission, received side + accounting."""
+    payload: Any                # dequantized-at-receiver tree / tensor
+    bits: float                 # on-air bits, incl. drawn retransmissions
+    energy_j: float             # comm energy of this delivery (Eq. 11)
+    n_tx: float                 # total transmissions drawn across packets
+
+
+@dataclasses.dataclass(frozen=True)
+class Radio:
+    """Channel knobs, held once per run (paper Table I + beyond-paper
+    ARQ). Frozen + hashable so jitted paths can key on it."""
+    quant_bits: int = 8
+    snr_db: float = 20.0
+    fading: bool = True
+    perfect: bool = False
+    arq_attempts: int = 1
+    arq_min_f2: float = 0.25
+    bandwidth_hz: float = 100e3
+    tx_power_w: float = 1e-3
+    use_kernel: bool = False     # Pallas packed kernel for float sends
+
+    @classmethod
+    def from_wcfg(cls, wcfg, quant_bits: Optional[int] = None,
+                  use_kernel: bool = False) -> "Radio":
+        """Build from a WirelessConfig; None means an ideal (perfect,
+        non-fading) link — the no-radio baseline."""
+        if wcfg is None:
+            return cls(perfect=True, fading=False)
+        return cls(quant_bits=int(quant_bits or wcfg.quant_bits),
+                   snr_db=float(wcfg.snr_db), fading=bool(wcfg.fading),
+                   perfect=bool(wcfg.perfect_channel),
+                   arq_attempts=int(getattr(wcfg, "arq_attempts", 1)),
+                   arq_min_f2=float(getattr(wcfg, "arq_min_f2", 0.25)),
+                   bandwidth_hz=float(wcfg.bandwidth_hz),
+                   tx_power_w=float(wcfg.tx_power_w),
+                   use_kernel=use_kernel)
+
+    # ----------------------------------------------------------- account
+    def expected_tx(self) -> float:
+        """Analytic expected transmissions per packet under outage-ARQ."""
+        return W.expected_arq_tx(self.arq_attempts, self.arq_min_f2,
+                                 self.fading, self.perfect)
+
+    def payload_bits(self, tree) -> float:
+        """Analytic one-transmission payload of `tree` at this radio's
+        quantization (wire.payload_bits — the one accounting helper)."""
+        return W.payload_bits(tree, self.quant_bits)
+
+    def energy_j(self, bits: float) -> float:
+        """Comm energy of `bits` on this link: bits * P / E[C]."""
+        cap = _expected_capacity(self.bandwidth_hz, self.snr_db,
+                                 self.fading)
+        return float(bits) * self.tx_power_w / cap
+
+    def _impl(self) -> str:
+        return "kernel" if (self.use_kernel and not self.perfect) \
+            else "packed"
+
+    def _deliver(self, payload, n_tx, sizes) -> Delivery:
+        n_tx = np.asarray(n_tx, np.float64)
+        sizes = np.asarray(sizes, np.float64)
+        bits = float(self.quant_bits) * float((sizes * n_tx).sum())
+        return Delivery(payload, bits, self.energy_j(bits),
+                        float(n_tx.sum()))
+
+    # -------------------------------------------------------------- send
+    def send_tree(self, key, tree) -> Delivery:
+        """Transmit every leaf of a pytree (one packet per tensor) via
+        the fused packed wire. SL legs, single-user weight uploads."""
+        payload, diag = W.transmit_tree(
+            key, tree, self.quant_bits, self.snr_db, fading=self.fading,
+            perfect=self.perfect, arq_attempts=self.arq_attempts,
+            arq_min_f2=self.arq_min_f2, impl=self._impl(),
+            return_diag=True)
+        sizes = [int(l.size) for l in jax.tree.leaves(tree)]
+        return self._deliver(payload, diag["n_tx"], sizes)
+
+    def send_stacked(self, key, tree) -> Delivery:
+        """Transmit a tree whose leaves carry a leading user axis
+        [N, ...] — FL's whole N-user upload in one fused pass, one
+        packet (fade + scale) per (user, tensor). The payload keeps the
+        user axis; aggregation is the caller's (scheme's) job."""
+        leaves = jax.tree.leaves(tree)
+        payload, diag = W.transmit_stacked(
+            key, tree, self.quant_bits, self.snr_db, fading=self.fading,
+            perfect=self.perfect, arq_attempts=self.arq_attempts,
+            arq_min_f2=self.arq_min_f2, impl=self._impl(),
+            return_diag=True)
+        sizes = [int(l.size) // int(l.shape[0]) for l in leaves]
+        return self._deliver(payload, diag["n_tx"], sizes)
+
+    def send_tokens(self, key, tokens, vocab_size: int,
+                    labels=None) -> Delivery:
+        """CL uplink: raw token ids as fixed-width codewords, one packet
+        (fade) per row. Labels ride a 1-bit control channel. Bits — and
+        one transmission per row in `n_tx` — are charged perfect or
+        not: a perfect link is noiseless, not free, so the dataset
+        crossing is billed either way (the one CL convention)."""
+        from repro.core.centralized import token_bits
+        n_bits = token_bits(vocab_size)
+        if self.perfect:
+            payload = tokens
+        else:
+            payload = CH.transmit_tokens(key, tokens, vocab_size,
+                                         snr_db=self.snr_db,
+                                         fading=self.fading)
+        bits = W.payload_bits(tokens, n_bits)
+        if labels is not None:
+            bits += W.payload_bits(labels, 1)
+        n_rows = tokens.shape[0] if getattr(tokens, "ndim", 1) > 1 else 1
+        return Delivery(payload, bits, self.energy_j(bits), float(n_rows))

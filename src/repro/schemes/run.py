@@ -1,0 +1,90 @@
+"""`Experiment` — the ONE driver loop for every Scheme, plus
+`build_scheme` to map a WirelessConfig onto its paradigm.
+
+Replaces the three copy-pasted `train_cl`/`train_fl`/`train_sl` loops
+in benchmarks/common.py (now thin wrappers over this). The loop
+reproduces their RNG streams exactly — data rng `seed+1`, per-step keys
+`fold(seed+2, step)` for CL/SL, per-cycle keys `fold(seed+3, cycle)`
+for FL, CL upload key `seed+7` — so fixed-seed trajectories are
+unchanged (tests/test_scheme_parity.py pins this against goldens
+captured from the pre-refactor drivers).
+
+    scheme = build_scheme(WirelessConfig(mode="fl", quant_bits=8))
+    res = Experiment(scheme, cycles=7).run()     # -> RunResult
+
+Per-cycle accounting lands in `Experiment.reports` (RoundReport each);
+`RunResult.total_bits` is their sum (plus any init-time data upload),
+normalized per-user for FL as the paper tables do.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import numpy as np
+
+from repro.schemes.base import (N_TEST, N_TRAIN, RoundReport, RunResult,
+                                corpus, lr_at)
+from repro.schemes.centralized import CentralizedScheme
+from repro.schemes.federated import FederatedScheme
+from repro.schemes.radio import Delivery
+from repro.schemes.split import SplitScheme
+
+
+def build_scheme(wcfg=None, capture: bool = False, **kwargs):
+    """WirelessConfig -> Scheme. None means the no-radio CL baseline.
+    Extra kwargs go to the scheme constructor (e.g. FL's `shards`,
+    `dp_sigma`, `prox_mu`; SL's `protocol`, `capture_every`)."""
+    mode = wcfg.mode if wcfg is not None else "cl"
+    if mode == "cl":
+        return CentralizedScheme(wcfg, capture=capture, **kwargs)
+    if mode == "fl":
+        return FederatedScheme(wcfg, capture=capture, **kwargs)
+    if mode == "sl":
+        return SplitScheme(wcfg, capture=capture, **kwargs)
+    raise ValueError(f"unknown scheme mode {mode!r}")
+
+
+@dataclasses.dataclass
+class Experiment:
+    """Drive a Scheme for `cycles` communication cycles."""
+    scheme: Any
+    cycles: int
+    seed: int = 0
+    n_train: int = N_TRAIN
+    n_test: int = N_TEST
+    lr_scale: float = 1.0
+    # optional ((xtr, ytr), (xte, yte)) override of the default corpus
+    data: Optional[tuple] = None
+    # called as on_cycle(cycle, test_acc, RoundReport) after each cycle
+    on_cycle: Optional[Callable[[int, float, RoundReport], None]] = None
+    # filled by run():
+    reports: list = dataclasses.field(default_factory=list)
+    init_delivery: Optional[Delivery] = None
+    final_state: Any = None
+
+    def run(self) -> RunResult:
+        (xtr, ytr), (xte, yte) = self.data if self.data is not None \
+            else corpus(self.n_train, self.n_test, self.seed)
+        state, self.init_delivery = self.scheme.init(self.seed, xtr, ytr)
+        total_bits = self.init_delivery.bits if self.init_delivery else 0.0
+        rng = np.random.default_rng(self.seed + 1)
+        accs, losses = [], []
+        for cyc in range(self.cycles):
+            lr = lr_at(state.epoch) * self.lr_scale
+            batch = self.scheme.cycle_batches(state, rng, cyc)
+            key = self.scheme.round_key(self.seed, cyc)
+            state, rep = self.scheme.round(state, batch, key, lr)
+            self.reports.append(rep)
+            total_bits += rep.bits
+            acc = self.scheme.evaluate(state, xte, yte)
+            accs.append(acc)
+            losses.append(rep.loss)
+            if self.on_cycle is not None:
+                self.on_cycle(cyc, acc, rep)
+        self.final_state = state
+        user_f, server_f = self.scheme.flops(state.steps)
+        return RunResult(accs, losses,
+                         total_bits / self.scheme.bits_normalizer,
+                         user_flops=user_f, server_flops=server_f,
+                         captures=self.scheme.captures)

@@ -1,0 +1,204 @@
+"""SplitScheme: the paper's SL (Alg. 2) behind the Scheme API.
+
+Two protocols, one interface:
+
+* ``protocol="fused"`` (default) — the whole SL cycle is one jitted XLA
+  program (`core/split.py` + `channel_crossing`, which now rides the
+  packed wire). Right for benchmarking; this is what the legacy
+  `train_sl` driver ran, reproduced exactly (fixed-seed parity tests).
+* ``protocol="two_party"`` — user and server are separate parties
+  exchanging explicit `Delivery` messages (`runtime/sl_runtime.py`
+  `SLSession`, itself rewired onto `Radio`). The deployment shape; the
+  lr schedule is fixed at LR0 here because the session's jitted closures
+  capture the lr (matching the legacy two-party example).
+
+Payload per fused step: compressed activation up + tau-clipped gradient
+down (2 legs x B x T_pool x C/4 floats at quant_bits each).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import WirelessConfig
+from repro.core import semantic
+from repro.core import wire as W
+from repro.core.split import split_forward
+from repro.models import lstm_tiny
+from repro.runtime.train_step import init_train_state, make_train_step
+from repro.schemes.base import (BATCH, CFG, LR0, MOMENTUM, RoundReport,
+                                SchemeState, batches_of, step_flops,
+                                train_shape, user_side_flops_sl)
+from repro.schemes.radio import Radio
+
+
+def _wcfg_key(wcfg) -> tuple:
+    return tuple(sorted(dataclasses.asdict(wcfg).items()))
+
+
+@functools.lru_cache(maxsize=8)
+def _sl_eval_fn(wcfg_key):
+    """SL eval must run the DEPLOYED function — user partition + codec +
+    (noiseless) link + server partition — not the raw model without the
+    codec, which is a different function once the codec trains away from
+    its identity init."""
+    wcfg = WirelessConfig(**dict(wcfg_key))
+    wp = dataclasses.replace(wcfg, perfect_channel=True)
+
+    @jax.jit
+    def ev(trainable, tokens, labels):
+        logits, _ = split_forward(trainable["model"], trainable["codec"],
+                                  {"tokens": tokens}, CFG, wp,
+                                  jax.random.PRNGKey(0))
+        return (lstm_tiny.accuracy(logits, labels),
+                lstm_tiny.bce_loss(logits, labels))
+    return ev
+
+
+def evaluate_sl(trainable, wcfg, xte, yte, batch: int = 2048):
+    ev = _sl_eval_fn(_wcfg_key(wcfg))
+    accs = []
+    for i in range(0, max(len(xte) - batch + 1, 1), batch):
+        a, _ = ev(trainable, jnp.asarray(xte[i:i + batch]),
+                  jnp.asarray(yte[i:i + batch]))
+        accs.append(float(a))
+    return float(np.mean(accs))
+
+
+def _sl_observe_fn(wcfg):
+    """What the SERVER receives on the SL uplink: encode -> wire (the
+    same packed-wire crossing the fused train step uses)."""
+    @jax.jit
+    def obs(trainable, tokens, key):
+        smashed = lstm_tiny.user_forward(trainable["model"], tokens)
+        z = semantic.encode(trainable["codec"], smashed)
+        return W.transmit_tree(key, z, bits=wcfg.quant_bits,
+                               snr_db=wcfg.snr_db,
+                               fading=wcfg.fading,
+                               perfect=wcfg.perfect_channel)
+    return obs
+
+
+class SplitScheme:
+    mode = "sl"
+    epochs_per_cycle = 1
+    bits_normalizer = 1.0
+
+    def __init__(self, wcfg=None, capture: bool = False,
+                 capture_every: int = 8, protocol: str = "fused"):
+        self.wcfg = wcfg or WirelessConfig(mode="sl", quant_bits=16)
+        self.radio = Radio.from_wcfg(self.wcfg)
+        self.capture = capture
+        self.capture_every = capture_every
+        self.captures = {"smashed": [], "original": []} if capture else {}
+        if protocol not in ("fused", "two_party"):
+            raise ValueError(protocol)
+        self.protocol = protocol
+        self._steps: dict = {}
+        self._cap_fn = _sl_observe_fn(self.wcfg) if capture else None
+        # payload per fused step: compressed activation up + clipped
+        # gradient down, through the radio's quantizer
+        t_pool = (30 - lstm_tiny.CONV_K + 1) // 2
+        c = lstm_tiny.CONV_F // self.wcfg.compress_factor
+        self.bits_per_batch = 2.0 * BATCH * t_pool * c \
+            * self.radio.quant_bits
+
+    # ------------------------------------------------------------- setup
+    def init(self, seed: int, xtr, ytr):
+        if self.protocol == "two_party":
+            from repro.runtime.sl_runtime import SLSession
+            sess = SLSession(CFG, self.wcfg, jax.random.PRNGKey(seed),
+                             lr=LR0, momentum=MOMENTUM)
+            return SchemeState(train=sess, data=(np.asarray(xtr),
+                                                 np.asarray(ytr))), None
+        state = init_train_state(jax.random.PRNGKey(seed), CFG, self.wcfg,
+                                 "sgd")
+        return SchemeState(train=state, data=(np.asarray(xtr),
+                                              np.asarray(ytr))), None
+
+    def cycle_batches(self, state, rng, cycle):
+        xtr, ytr = state.data
+        return batches_of(xtr, ytr, BATCH, rng)
+
+    def round_key(self, seed: int, cycle: int):
+        return jax.random.PRNGKey(seed + 2)
+
+    # ------------------------------------------------------------- round
+    def _step_for(self, lr: float):
+        if lr not in self._steps:
+            self._steps[lr] = jax.jit(make_train_step(
+                CFG, train_shape(), self.wcfg, optimizer="sgd", lr=lr,
+                momentum=MOMENTUM))
+        return self._steps[lr]
+
+    def round(self, state, batch, key, lr):
+        if self.protocol == "two_party":
+            return self._round_two_party(state, batch, key)
+        step = self._step_for(lr)
+        st, steps, m = state.train, state.steps, None
+        bits = 0.0
+        for b in batch:
+            kb = jax.random.fold_in(key, steps)
+            st, m = step(st, b, kb)
+            bits += self.bits_per_batch
+            if self.capture and steps % self.capture_every == 0:
+                z = self._cap_fn(st.trainable, b["tokens"],
+                                 jax.random.fold_in(kb, 12345))
+                self.captures["smashed"].append(np.asarray(z))
+                self.captures["original"].append(np.asarray(b["tokens"]))
+            steps += 1
+        n = steps - state.steps
+        new = SchemeState(st, state.data, steps, state.epoch + 1)
+        # fused-path n_tx is the ANALYTIC expectation (2 legs/step): the
+        # crossings happen inside the jitted step, which exposes no
+        # per-step diagnostics — see RoundReport docstring
+        return new, RoundReport(
+            loss=float(m["loss"]), steps=n, bits=bits,
+            n_tx=2.0 * n * self.radio.expected_tx(),
+            energy_j=self.radio.energy_j(bits))
+
+    def _round_two_party(self, state, batch, key):
+        sess, steps = state.train, state.steps
+        bits0, bits, n_tx = sess.total_bits, 0.0, 0.0
+        for b in batch:
+            kb = jax.random.fold_in(key, steps)
+            up = sess.user_uplink(jnp.asarray(b["tokens"]), kb)
+            down = sess.server_step(up, jnp.asarray(b["labels"]),
+                                    jax.random.fold_in(kb, 1))
+            sess.user_downlink(down)
+            n_tx += up.n_tx + down.n_tx
+            if self.capture and steps % self.capture_every == 0:
+                self.captures["smashed"].append(np.asarray(up.payload))
+                self.captures["original"].append(np.asarray(b["tokens"]))
+            steps += 1
+        bits = sess.total_bits - bits0
+        new = SchemeState(sess, state.data, steps, state.epoch + 1)
+        return new, RoundReport(
+            loss=float(sess.last_loss), steps=steps - state.steps,
+            bits=bits, n_tx=n_tx, energy_j=self.radio.energy_j(bits))
+
+    # -------------------------------------------------------------- eval
+    def evaluate(self, state, xte, yte) -> float:
+        if self.protocol == "two_party":
+            return self._evaluate_two_party(state.train, xte, yte)
+        return evaluate_sl(state.train.trainable, self.wcfg, xte, yte)
+
+    def _evaluate_two_party(self, sess, xte, yte, batch: int = 2048):
+        accs = []
+        for i in range(0, max(len(xte) - batch + 1, 1), batch):
+            logits = sess.predict(jnp.asarray(xte[i:i + batch]),
+                                  jax.random.PRNGKey(999 + i))
+            accs.append(float(lstm_tiny.accuracy(
+                logits, jnp.asarray(yte[i:i + batch]))))
+        return float(np.mean(accs))
+
+    def flops(self, steps_total: int):
+        user = user_side_flops_sl(self.wcfg.compress_factor) * steps_total
+        server = (step_flops("sl", _wcfg_key(self.wcfg))
+                  - user_side_flops_sl(self.wcfg.compress_factor)) \
+            * steps_total
+        return user, server
