@@ -1,0 +1,111 @@
+"""Heterogeneous-population sweep: FL:SL mix ratio x SNR spread ->
+accuracy / payload bits / comm energy (BENCH_population.json).
+
+The paper's comparison holds the fleet homogeneous; this benchmark
+makes heterogeneity the sweep axis (FedNLP's benchmark framing): a
+4-client fleet whose FL:SL composition ranges from all-FL to all-SL,
+at link budgets that are either uniform (every client at 20 dB) or
+spread (clients fanned symmetrically around 20 dB), every crossing
+billed through that client's own `Radio`.
+
+Quick mode (CI) runs only the 2-client mixed smoke case — 1 FL + 1 SL
+with distinct SNRs — and records per-round wall time + bits so the new
+subsystem's perf trajectory is tracked run-over-run like BENCH_wire.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.configs.base import WirelessConfig
+from repro.schemes import ClientSpec, Experiment, build_scheme
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+MIXES = ((4, 0), (3, 1), (2, 2), (1, 3), (0, 4))   # (n_fl, n_sl)
+SPREADS = (0.0, 14.0)          # total SNR fan around the 20 dB center
+SNR_CENTER = 20.0
+
+
+def _fleet(n_fl: int, n_sl: int, spread_db: float):
+    """n_fl + n_sl clients, SNRs fanned evenly across
+    [center - spread/2, center + spread/2] in population order."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    n = n_fl + n_sl
+    snrs = [SNR_CENTER + spread_db * ((i / (n - 1)) - 0.5) if n > 1
+            else SNR_CENTER for i in range(n)]
+    clients = [ClientSpec.fl(base, snr_db=snrs[i], name=f"fl{i}")
+               for i in range(n_fl)]
+    clients += [ClientSpec.sl(base, snr_db=snrs[n_fl + i], quant_bits=16,
+                              name=f"sl{i}") for i in range(n_sl)]
+    return base, clients
+
+
+def _run_case(base, clients, cycles, seed, n_train, n_test):
+    walls, t0 = [], [time.perf_counter()]
+
+    def tick(cyc, acc, rep):
+        walls.append(time.perf_counter() - t0[0])
+        t0[0] = time.perf_counter()
+
+    exp = Experiment(build_scheme(base, clients=clients), cycles=cycles,
+                     seed=seed, n_train=n_train, n_test=n_test,
+                     on_cycle=tick)
+    res = exp.run()
+    return {
+        "final_accuracy": res.final_accuracy,
+        # FLEET totals across the sweep (RunResult.total_bits switches
+        # to the paper's per-user convention for all-FL fleets, which
+        # would put a spurious 1/N cliff at the sweep's all-FL endpoint)
+        "total_bits": sum(r.bits for r in exp.reports),
+        "energy_j": sum(r.energy_j for r in exp.reports),
+        "round_wall_s": [round(w, 4) for w in walls],
+        "round_bits": [r.bits for r in exp.reports],
+        "per_client_bits": [
+            {c.name: c.bits for c in rep.clients} for rep in exp.reports],
+    }
+
+
+def run(full: bool = False, seed: int = 0) -> dict:
+    cycles = 6 if full else 2
+    n_train = 8_192 if full else 2_048
+    n_test = 1_024 if full else 512
+    out = {"cycles": cycles, "n_train": n_train, "cases": {}}
+
+    # CI smoke: the smallest mixed fleet, distinct SNRs (per-round wall
+    # time + bits is the perf trajectory for the population subsystem)
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    smoke = [ClientSpec.fl(base, snr_db=20.0, name="fl0"),
+             ClientSpec.sl(base, snr_db=10.0, quant_bits=16, name="sl0")]
+    out["cases"]["smoke_1fl_1sl"] = _run_case(
+        base, smoke, cycles, seed, n_train, n_test)
+
+    if full:
+        for n_fl, n_sl in MIXES:
+            for spread in SPREADS:
+                base, clients = _fleet(n_fl, n_sl, spread)
+                name = f"mix_{n_fl}fl_{n_sl}sl_spread{spread:g}dB"
+                out["cases"][name] = _run_case(
+                    base, clients, cycles, seed, n_train, n_test)
+    return out
+
+
+def main(full: bool = False) -> list[str]:
+    res = run(full)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_population.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    rows = []
+    for case, rec in res["cases"].items():
+        rows.append(f"population,{case},final_accuracy,"
+                    f"{rec['final_accuracy']:.4f}")
+        rows.append(f"population,{case},total_bits,{rec['total_bits']:.0f}")
+        rows.append(f"population,{case},energy_j,{rec['energy_j']:.6f}")
+        mean_wall = sum(rec["round_wall_s"]) / len(rec["round_wall_s"])
+        rows.append(f"population,{case},mean_round_wall_s,{mean_wall:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -55,6 +55,11 @@ def _bench_wire(full):
     return wire_bench.main(full)
 
 
+def _bench_population(full):
+    from benchmarks import population
+    return population.main(full)
+
+
 BENCHES = {
     "fig3a": _bench_fig3a,
     "fig3b": _bench_fig3b,
@@ -64,6 +69,7 @@ BENCHES = {
     "roofline": _bench_roofline,
     "extensions": _bench_extensions,
     "wire": _bench_wire,
+    "population": _bench_population,
 }
 
 

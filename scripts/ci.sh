@@ -1,12 +1,17 @@
 #!/usr/bin/env bash
-# Smoke CI: tier-1 test suite + the packed-wire perf benchmark.
+# Smoke CI: tier-1 test suite + the packed-wire perf benchmark + the
+# mixed-population smoke run.
 #
 #     bash scripts/ci.sh
 #
 # The wire bench writes benchmarks/results/BENCH_wire.json so the
 # packed-wire speedup trajectory stays tracked run-over-run (ROADMAP
 # open item); the acceptance gate below exits nonzero if the packed
-# path loses its >=3x advantage over the jitted per-leaf loop.
+# path loses its >=3x advantage over the jitted per-leaf loop. The
+# population bench (quick mode = a 2-client 1 FL + 1 SL fleet) writes
+# benchmarks/results/BENCH_population.json with per-round wall time +
+# bits so the heterogeneous-population subsystem's perf trajectory is
+# tracked the same way.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,4 +30,16 @@ res = json.load(open("benchmarks/results/BENCH_wire.json"))
 speed = res["cases"]["fl_tinylstm_n3"]["speedup_vs_per_leaf_jit"]
 print(f"fl_tinylstm_n3 packed speedup vs per-leaf jit: {speed:.2f}x")
 sys.exit(0 if speed >= 3.0 else 1)
+EOF
+
+echo "=== mixed-population smoke (2-client fleet, BENCH_population.json) ==="
+python -m benchmarks.run --only population
+python - <<'EOF'
+import json, sys
+res = json.load(open("benchmarks/results/BENCH_population.json"))
+rec = res["cases"]["smoke_1fl_1sl"]
+wall = sum(rec["round_wall_s"]) / len(rec["round_wall_s"])
+print(f"smoke_1fl_1sl: {len(rec['round_bits'])} rounds, "
+      f"mean {wall:.2f}s/round, {rec['total_bits']:.0f} bits total")
+sys.exit(0 if rec["total_bits"] > 0 and rec["final_accuracy"] > 0 else 1)
 EOF

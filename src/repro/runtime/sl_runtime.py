@@ -84,7 +84,7 @@ class SLSession:
 
     # ----------------------------------------------------------- server
     def _server_step_core(self, server_params, server_codec, opt, z_hat,
-                          labels):
+                          labels, lr):
         def loss_fn(sp, sc, z):
             smashed_hat = semantic.decode(sc, z)
             logits = lstm_tiny.server_forward(sp, smashed_hat)
@@ -94,24 +94,26 @@ class SLSession:
             loss_fn, argnums=(0, 1, 2))(server_params, server_codec, z_hat)
         tree, opt = self._opt_update({"p": grads_p, "c": grads_c}, opt,
                                      {"p": server_params, "c": server_codec},
-                                     self.lr)
+                                     lr)
         grad_z = clip_array_by_norm(grad_z, self.wcfg.grad_clip)
         return tree["p"], tree["c"], opt, grad_z, loss
 
-    def server_step(self, up: Message, labels, key) -> Message:
+    def server_step(self, up: Message, labels, key, lr=None) -> Message:
         """SERVER: decompress, finish forward, update server weights,
         transmit the tau-clipped activation gradient back (Alg. 2
-        lines 9-14)."""
+        lines 9-14). `lr` is a TRACED argument of the jitted step (one
+        executable follows the whole schedule); None uses the session's
+        construction-time lr."""
         (self.server_params, self.server_codec, self._server_opt,
          grad_z, self.last_loss) = self._jit_server(
             self.server_params, self.server_codec, self._server_opt,
-            up.payload, labels)
+            up.payload, labels, self.lr if lr is None else lr)
         msg = self.radio.send_tree(key, grad_z)
         self.total_bits += msg.bits
         return msg
 
     # ------------------------------------------------------ user (bwd)
-    def _user_bwd(self, user_params, user_codec, opt, tokens, g_z):
+    def _user_bwd(self, user_params, user_codec, opt, tokens, g_z, lr):
         def z_of(up, uc):
             smashed = lstm_tiny.user_forward(up, tokens)
             return semantic.encode(uc, smashed)
@@ -122,15 +124,17 @@ class SLSession:
             g, self.wcfg.grad_clip), g_p)
         tree, opt = self._opt_update({"p": g_p, "c": g_c}, opt,
                                      {"p": user_params, "c": user_codec},
-                                     self.lr)
+                                     lr)
         return tree["p"], tree["c"], opt
 
-    def user_downlink(self, down: Message) -> None:
-        """USER: receive the gradient, backprop the local partition."""
+    def user_downlink(self, down: Message, lr=None) -> None:
+        """USER: receive the gradient, backprop the local partition
+        (`lr` traced as in `server_step`)."""
         tokens, _, _ = self._cached_smashed
         (self.user_params, self.user_codec, self._user_opt) = \
             self._jit_user_bwd(self.user_params, self.user_codec,
-                               self._user_opt, tokens, down.payload)
+                               self._user_opt, tokens, down.payload,
+                               self.lr if lr is None else lr)
 
     # ----------------------------------------------------------- infer
     def predict(self, tokens, key) -> jax.Array:

@@ -91,15 +91,19 @@ def trainable_axes(cfg, wcfg=None):
 def make_train_step(cfg, shape_cfg, wcfg=None, optimizer: str = "adamw",
                     lr: float = 3e-4, momentum: float = 0.9,
                     n_data_shards: int = 16):
-    """Returns train_step(state, batch, key) -> (state, metrics). Gradient
-    accumulation: lax.scan over microbatches, fp32 accumulators."""
+    """Returns train_step(state, batch, key[, lr]) -> (state, metrics).
+    Gradient accumulation: lax.scan over microbatches, fp32 accumulators.
+    The builder's `lr` is only the default of the step's optional 4th
+    argument — pass lr per call (a traced value under jit) to follow a
+    schedule with ONE compiled executable."""
     window = window_for(cfg, shape_cfg)
     n_micro = auto_microbatch(cfg, shape_cfg, n_data_shards)
     _, opt_update = (adamw() if optimizer == "adamw"
                      else sgd_momentum(momentum))
     tax = trainable_axes(cfg, wcfg)     # grad-accumulator sharding (§Perf-1)
 
-    def train_step(state: TrainState, batch: dict, key: jax.Array):
+    def train_step(state: TrainState, batch: dict, key: jax.Array,
+                   lr=lr):
         if wcfg is not None and wcfg.mode == "cl" and not wcfg.perfect_channel \
                 and cfg.family == "tiny":
             batch, _ = centralized.upload_batch(key, batch, cfg.vocab_size, wcfg)

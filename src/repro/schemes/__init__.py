@@ -8,21 +8,24 @@ See schemes/base.py for the Scheme protocol and schemes/radio.py for
 the Radio/Delivery accounting contract.
 """
 from repro.schemes.base import (BATCH, CFG, LR0, LR_DECAY, LR_EVERY,
-                                MOMENTUM, N_TEST, N_TRAIN, RoundReport,
-                                RunResult, Scheme, SchemeState, batches_of,
-                                corpus, evaluate, lr_at, step_flops,
-                                train_shape, user_side_flops_sl)
+                                MOMENTUM, N_TEST, N_TRAIN, ClientReport,
+                                RoundReport, RunResult, Scheme,
+                                SchemeState, batches_of, corpus, evaluate,
+                                lr_at, step_flops, train_shape,
+                                user_side_flops_sl)
 from repro.schemes.centralized import CentralizedScheme
 from repro.schemes.federated import FederatedScheme
+from repro.schemes.population import ClientSpec, PopulationScheme
 from repro.schemes.radio import Delivery, Radio
 from repro.schemes.run import Experiment, build_scheme
 from repro.schemes.split import SplitScheme, evaluate_sl
 
 __all__ = [
     "BATCH", "CFG", "LR0", "LR_DECAY", "LR_EVERY", "MOMENTUM", "N_TEST",
-    "N_TRAIN", "RoundReport", "RunResult", "Scheme", "SchemeState",
-    "batches_of", "corpus", "evaluate", "lr_at", "step_flops",
-    "train_shape", "user_side_flops_sl", "CentralizedScheme",
-    "FederatedScheme", "SplitScheme", "evaluate_sl", "Delivery", "Radio",
-    "Experiment", "build_scheme",
+    "N_TRAIN", "ClientReport", "RoundReport", "RunResult", "Scheme",
+    "SchemeState", "batches_of", "corpus", "evaluate", "lr_at",
+    "step_flops", "train_shape", "user_side_flops_sl",
+    "CentralizedScheme", "FederatedScheme", "SplitScheme", "evaluate_sl",
+    "ClientSpec", "PopulationScheme", "Delivery", "Radio", "Experiment",
+    "build_scheme",
 ]

@@ -158,22 +158,47 @@ class RunResult:
 
 
 @dataclasses.dataclass
+class ClientReport:
+    """One client's slice of a population round (heterogeneous fleets:
+    schemes/population.py). `bits`/`n_tx`/`energy_j` are what crossed
+    THIS client's own Radio; `weight` is the sample-count aggregation
+    weight its update carried into the mixed FedAvg."""
+    name: str
+    paradigm: str           # "fl" | "sl"
+    loss: float
+    steps: int              # optimizer steps this client took this round
+    bits: float = 0.0
+    n_tx: float = 0.0
+    energy_j: float = 0.0
+    weight: float = 0.0
+
+
+@dataclasses.dataclass
 class RoundReport:
     """Accounting of ONE communication cycle of any scheme.
 
     `n_tx` is the DRAWN transmission count wherever the wire surfaces
     it (FL's stacked sync, two-party SL legs, CL's per-row uplink); the
     FUSED SL path reports the analytic expectation instead — its
-    crossings live inside the jitted train step, which does not expose
-    per-step diagnostics. Cross-paradigm comparisons should treat fused
-    SL's n_tx as E[tx], exact only without ARQ (where both equal one
-    transmission per packet)."""
+    crossings live inside the jitted train step (`channel_crossing`),
+    which exposes no per-step diagnostics AND does not simulate ARQ at
+    all (the redraw knobs stop at the wire call), so under
+    arq_attempts > 1 its n_tx is the E[tx] of the link the two-party
+    protocol actually runs while its bits/energy stay unscaled (ROADMAP
+    open item). Cross-paradigm comparisons are exact only without ARQ,
+    where both counts equal one transmission per packet.
+
+    For a heterogeneous population round, the scheme-level fields are
+    fleet totals (weighted mean for `loss`) and `clients` carries the
+    per-client breakdown, one `ClientReport` per client in population
+    order (empty for the homogeneous CL/FL/SL schemes)."""
     loss: float             # train loss (last step for CL/SL, mean for FL)
     steps: int              # optimizer steps taken this round (per user)
     bits: float = 0.0       # on-air payload this round (drawn-ARQ actual)
     n_tx: float = 0.0       # transmissions across the round's packets
     energy_j: float = 0.0   # comm energy of this round's deliveries
     metrics: dict = dataclasses.field(default_factory=dict)
+    clients: tuple = ()     # per-client ClientReports (population rounds)
 
 
 @dataclasses.dataclass

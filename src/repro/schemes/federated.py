@@ -39,6 +39,57 @@ def _local_step(lr: float):
     return make_local_step_tiny(CFG, None, lr, MOMENTUM)
 
 
+# --------------------------------------------- per-client-group round body
+def draw_local_epochs(xu, yu, local_epochs: int, rng):
+    """One FL client's round of training data: `local_epochs` sequential
+    shuffled epochs of BATCH-sized batches -> ([J, B, S], [J, B]). The
+    ONE implementation of the FL batch stream: `FederatedScheme` (per
+    user) and `PopulationScheme` (per client) must consume the
+    experiment rng identically for the all-FL degeneracy to stay
+    bit-exact."""
+    j = local_epochs * (len(xu) // BATCH)
+    toks = np.empty((j, BATCH, xu.shape[1]), np.int32)
+    labs = np.empty((j, BATCH), np.int32)
+    bi = 0
+    for _ in range(local_epochs):
+        for b in batches_of(xu, yu, BATCH, rng):
+            toks[bi] = np.asarray(b["tokens"])
+            labs[bi] = np.asarray(b["labels"])
+            bi += 1
+    return toks, labs
+
+
+def fl_local_phase(train_states, batch, key, lr, prox_mu: float = 0.0,
+                   anchor=None):
+    """The FL round's local phase (Alg. 1 lines 3-7) for ONE group of
+    users: J vmapped local epochs from the group's stacked TrainState.
+    Batch leaves are [N, J, B, ...]; the key is split exactly as the
+    homogeneous `FederatedScheme.round` always did, so a single group
+    covering the whole population reproduces the pure-FL RNG stream
+    bit-for-bit. Factored out so `PopulationScheme` can drive
+    heterogeneous FL sub-populations through the identical code."""
+    jb = {"tokens": jnp.asarray(batch["tokens"]),
+          "labels": jnp.asarray(batch["labels"])}
+    n, j = jb["tokens"].shape[:2]
+    if prox_mu:
+        local_step = make_local_step_tiny(
+            CFG, None, lr, prox_mu=prox_mu,
+            anchor={"model": anchor, "codec": {}})
+    else:
+        local_step = _local_step(lr)
+    keys = jax.random.split(key, n * j).reshape(n, j, 2)
+    return FED.local_steps_vmapped(local_step, train_states, (jb, keys))
+
+
+def fl_upload(radio, key, user_params):
+    """The FL round's quantized sync upload (Alg. 1 lines 8-11): a
+    group's whole stacked model through ONE fused packed-wire pass on
+    the group's own `Radio`; the channel-key fold matches the legacy
+    driver, so group 0 of a population reproduces the pure-FL channel
+    stream. The Delivery carries the per-user bits/n_tx split."""
+    return radio.send_stacked(jax.random.fold_in(key, 999), user_params)
+
+
 def _flat_uploads(received, pre_broadcast):
     """[N, P] received weight-delta (vs the cycle's broadcast weights)."""
     pre_leaves = jax.tree.leaves(pre_broadcast)
@@ -106,12 +157,8 @@ class FederatedScheme:
                     toks[u, bi] = xu[idx]
                     labs[u, bi] = yu[idx]
             else:
-                bi = 0
-                for _ in range(self.local_epochs):
-                    for b in batches_of(xu, yu, BATCH, rng):
-                        toks[u, bi] = np.asarray(b["tokens"])
-                        labs[u, bi] = np.asarray(b["labels"])
-                        bi += 1
+                toks[u], labs[u] = draw_local_epochs(
+                    xu, yu, self.local_epochs, rng)
         return {"tokens": toks, "labels": labs}
 
     def round_key(self, seed: int, cycle: int):
@@ -120,34 +167,28 @@ class FederatedScheme:
     # ------------------------------------------------------------- round
     def round(self, state, batch, key, lr):
         j = batch["tokens"].shape[1]
-        jb = {"tokens": jnp.asarray(batch["tokens"]),
-              "labels": jnp.asarray(batch["labels"])}
         broadcast = jax.tree.map(lambda p: p[0],
                                  state.train.trainable["model"])
 
         # --- local phase (Alg. 1 lines 3-7), vmapped over users
-        if self.prox_mu:
-            anchor = {"model": broadcast, "codec": {}}
-            local_step = make_local_step_tiny(CFG, None, lr,
-                                              prox_mu=self.prox_mu,
-                                              anchor=anchor)
-        else:
-            local_step = _local_step(lr)
-        keys = jax.random.split(key, self.n_users * j).reshape(
-            self.n_users, j, 2)
-        states, metrics = FED.local_steps_vmapped(
-            local_step, state.train, (jb, keys))
+        states, metrics = fl_local_phase(state.train, batch, key, lr,
+                                         prox_mu=self.prox_mu,
+                                         anchor=broadcast)
 
         # --- quantized channel upload + aggregation (Alg. 1 lines 8-17)
         user_params = states.trainable["model"]
-        kch = jax.random.fold_in(key, 999)
         if self.dp_sigma > 0:
+            kch = jax.random.fold_in(key, 999)
             synced, bits, self.last_epsilon = dp.fedavg_dp_through_channel(
                 kch, user_params, broadcast, self.wcfg,
                 clip_c=self.dp_clip, sigma=self.dp_sigma)
-            bits, n_tx, energy = float(bits), 0.0, self.radio.energy_j(bits)
+            # the DP upload path surfaces no per-packet diagnostics, so
+            # report the analytic expected transmissions (cf. fused SL)
+            n_tx = (self.n_users * len(jax.tree.leaves(user_params))
+                    * self.radio.expected_tx())
+            bits, energy = float(bits), self.radio.energy_j(bits)
         else:
-            dlv = self.radio.send_stacked(kch, user_params)
+            dlv = fl_upload(self.radio, key, user_params)
             if self.capture:
                 self.captures["deltas"].append(
                     _flat_uploads(dlv.payload, broadcast))

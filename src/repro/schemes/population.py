@@ -1,0 +1,405 @@
+"""Heterogeneous client populations: per-client `Radio`, mixed FL/SL
+aggregation, one `Experiment`.
+
+The paper compares CL/FL/SL as three homogeneous populations on one
+shared channel. A deployed fleet is not that: every device has its own
+link budget (SNR, fading, quantizer) and compute class (full local
+training vs a split cycle), and the server aggregates across paradigms
+— SEMFED's semantic-aware heterogeneous-client FL (PAPERS.md). This
+module makes that fleet a first-class `Scheme`:
+
+    base = WirelessConfig(quant_bits=8)
+    clients = [ClientSpec.fl(base, snr_db=20.0),
+               ClientSpec.fl(base, snr_db=6.0, quant_bits=4),
+               ClientSpec.sl(base, snr_db=12.0, quant_bits=16),
+               ClientSpec.sl(base, snr_db=0.0)]
+    res = Experiment(build_scheme(base, clients=clients), cycles=7).run()
+
+One round:
+
+1. every FL client runs its J local epochs from the current global
+   model and uploads its weights through ITS OWN radio (clients with
+   identical (radio, steps-per-round) are grouped so the upload stays
+   one fused packed-wire pass per group — `fl_local_phase`/`fl_upload`,
+   the round bodies factored out of `FederatedScheme`);
+2. every SL client runs one split cycle (`sl_cycle`, factored out of
+   `SplitScheme`) against the shared server trunk, its activation and
+   gradient legs billed through its own radio at its own quantizer;
+3. mixed aggregation: sample-count-weighted FedAvg over the clients'
+   resulting full models —
+
+       theta <- sum_c (n_c / sum n) * theta_c
+
+   where theta_c is the channel-RECEIVED weights for an FL client and
+   the post-cycle weights for an SL client (user part updated on
+   device, trunk updated server-side; the weights themselves never
+   cross the radio). The semantic codec is averaged over SL clients
+   only (FL clients neither hold nor train one), with weights
+   renormalized among them.
+
+Every crossing lands in one `RoundReport` whose `clients` tuple carries
+the per-client breakdown (`ClientReport`: bits / n_tx / energy / loss /
+weight). Degenerate populations reproduce the pure schemes bit-for-bit:
+all-FL with one (radio, J) group runs the identical vmapped local phase
+and stacked upload on the identical RNG stream as `FederatedScheme`;
+all-SL with one client is `SplitScheme`'s fused loop (pinned against
+the same goldens in tests/test_scheme_parity.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import WirelessConfig
+from repro.runtime.train_step import TrainState, init_train_state
+from repro.schemes.base import (BATCH, CFG, ClientReport, RoundReport,
+                                SchemeState, batches_of, evaluate,
+                                step_flops, user_side_flops_sl)
+from repro.schemes.federated import (draw_local_epochs, fl_local_phase,
+                                     fl_upload)
+from repro.schemes.radio import Radio
+from repro.schemes.split import (_wcfg_key, evaluate_sl, sl_bits_per_step,
+                                 sl_cycle, sl_train_step)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ClientSpec:
+    """One device of a heterogeneous population: its paradigm, its own
+    channel (a per-client `WirelessConfig` -> `Radio`), its local-epoch
+    count, and its data shard (explicit arrays, an `n_samples` slice of
+    the corpus, or 0 = an equal share). Build with the `fl`/`sl`
+    constructors: keyword overrides are WirelessConfig fields applied on
+    top of the shared base config."""
+    paradigm: str                     # "fl" | "sl"
+    wcfg: WirelessConfig              # this client's channel knobs
+    local_epochs: int = 1             # J for FL; epochs per round for SL
+    n_samples: int = 0                # shard size (0 = equal share)
+    name: str = ""
+    shard: Optional[tuple] = None     # explicit (x, y) data override
+
+    @property
+    def radio(self) -> Radio:
+        return Radio.from_wcfg(self.wcfg)
+
+    @classmethod
+    def fl(cls, base: Optional[WirelessConfig] = None, local_epochs: int = 0,
+           n_samples: int = 0, name: str = "", shard=None,
+           **overrides) -> "ClientSpec":
+        wcfg = dataclasses.replace(base or WirelessConfig(mode="fl"),
+                                   mode="fl", **overrides)
+        return cls("fl", wcfg, local_epochs or wcfg.local_steps,
+                   n_samples, name, shard)
+
+    @classmethod
+    def sl(cls, base: Optional[WirelessConfig] = None,
+           local_epochs: int = 1, n_samples: int = 0, name: str = "",
+           shard=None, **overrides) -> "ClientSpec":
+        wcfg = dataclasses.replace(
+            base or WirelessConfig(mode="sl", quant_bits=16),
+            mode="sl", **overrides)
+        return cls("sl", wcfg, local_epochs, n_samples, name, shard)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Group:
+    """FL clients sharing (radio, steps-per-round): one vmapped local
+    phase + one fused stacked upload per round."""
+    radio: Radio
+    members: tuple                    # client indices, population order
+
+
+@dataclasses.dataclass
+class _PopState:
+    """Per-round population state (rides SchemeState.train)."""
+    groups: list                      # per _Group: stacked TrainState
+    sl_states: list                   # per SL client: TrainState
+    sl_steps: list                    # per SL client: cumulative steps
+    global_trainable: dict            # aggregated {"model", "codec"}
+    client_steps: list                # cumulative optimizer steps each
+
+
+class PopulationScheme:
+    """A heterogeneous client fleet behind the standard Scheme protocol
+    — `Experiment` drives it unchanged (that is the point of PR 2's
+    boundary). See the module docstring for the round structure and the
+    mixed-aggregation rule."""
+    mode = "population"
+
+    def __init__(self, wcfg=None, clients: Sequence[ClientSpec] = (),
+                 capture: bool = False):
+        if not clients:
+            raise ValueError("PopulationScheme needs at least one "
+                             "ClientSpec")
+        if capture:
+            raise ValueError("capture is not supported for population "
+                             "runs; capture on the pure scheme instead")
+        for spec in clients:
+            if spec.paradigm not in ("fl", "sl"):
+                raise ValueError(f"unknown paradigm {spec.paradigm!r}")
+        self.wcfg = wcfg or WirelessConfig(mode="fl")
+        for cfg in [self.wcfg] + [s.wcfg for s in clients]:
+            if getattr(cfg, "aggregate", "mean") != "mean":
+                raise ValueError(
+                    "population aggregation is sample-weighted FedAvg; "
+                    "aggregate='median' is not supported (base or "
+                    "per-client override)")
+        self.clients = tuple(clients)
+        self.radio = Radio.from_wcfg(self.wcfg)    # server-side reference
+        self._sl_idx = [i for i, s in enumerate(self.clients)
+                        if s.paradigm == "sl"]
+        self._fl_idx = [i for i, s in enumerate(self.clients)
+                        if s.paradigm == "fl"]
+        cfs = {self.clients[i].wcfg.compress_factor for i in self._sl_idx}
+        if len(cfs) > 1:
+            raise ValueError("SL clients must share compress_factor "
+                             f"(one codec shape), got {sorted(cfs)}")
+        # the eval-time deployed function: codec + noiseless link, but
+        # quantization stays active — pin it to the fleet's highest-
+        # fidelity SL quantizer so accuracy does not depend on which SL
+        # client happens to be listed first
+        self._sl_wcfg = (dataclasses.replace(
+            self.clients[self._sl_idx[0]].wcfg,
+            quant_bits=max(self.clients[i].wcfg.quant_bits
+                           for i in self._sl_idx))
+            if self._sl_idx else None)
+        # lr schedule: one Experiment cycle advances the fleet by the
+        # largest per-client epoch count, so degenerate populations keep
+        # the pure schemes' schedule (J for all-FL, 1 for all-SL)
+        self.epochs_per_cycle = max(s.local_epochs for s in self.clients)
+        # pure-FL convention is per-user bits (paper tables); mixed and
+        # SL-bearing fleets report TOTAL system bits — the per-client
+        # split lives in RoundReport.clients
+        self.bits_normalizer = (float(len(self.clients))
+                                if not self._sl_idx else 1.0)
+        self.captures: dict = {}
+        self._key_ctx = None
+        self._final_client_steps = [0] * len(self.clients)
+
+    # ------------------------------------------------------------- setup
+    def _shards_for(self, xtr, ytr):
+        """Assign shards in population order: explicit `spec.shard`
+        wins; otherwise sequential `n_samples` slices, with n_samples=0
+        clients splitting the remainder equally — identical to
+        `partition_users` when every spec is default."""
+        claimed = sum(s.n_samples for s in self.clients
+                      if s.shard is None)
+        n_default = sum(1 for s in self.clients
+                        if s.shard is None and not s.n_samples)
+        default = (len(xtr) - claimed) // n_default if n_default else 0
+        if default < 0:
+            default = 0
+        shards, cursor = [], 0
+        for spec in self.clients:
+            if spec.shard is not None:
+                shards.append((np.asarray(spec.shard[0]),
+                               np.asarray(spec.shard[1])))
+                continue
+            n = spec.n_samples or default
+            if cursor + n > len(xtr):
+                raise ValueError(f"client shards exceed the corpus "
+                                 f"({cursor + n} > {len(xtr)})")
+            shards.append((xtr[cursor:cursor + n], ytr[cursor:cursor + n]))
+            cursor += n
+        for spec, (xs, _) in zip(self.clients, shards):
+            if len(xs) < BATCH:
+                raise ValueError(
+                    f"client {spec.name or spec.paradigm!r} shard has "
+                    f"{len(xs)} samples < one batch ({BATCH})")
+        return shards
+
+    def init(self, seed: int, xtr, ytr):
+        xtr, ytr = np.asarray(xtr), np.asarray(ytr)
+        shards = self._shards_for(xtr, ytr)
+        self._spe = [len(xs) // BATCH for xs, _ in shards]
+        # group FL clients by (radio, steps-per-round): rectangular
+        # batches for the vmapped local phase, one stacked upload each
+        groups, by_key = [], {}
+        for i in self._fl_idx:
+            spec = self.clients[i]
+            gk = (spec.radio, spec.local_epochs * self._spe[i])
+            if gk not in by_key:
+                by_key[gk] = len(groups)
+                groups.append([])
+            groups[by_key[gk]].append(i)
+        self._groups = [_Group(self.clients[m[0]].radio, tuple(m))
+                        for m in groups]
+
+        # same init keys as the pure schemes: model from kp of
+        # PRNGKey(seed) (shared), codec from kc (SL present only)
+        fl_full = init_train_state(jax.random.PRNGKey(seed), CFG, None,
+                                   "sgd")
+        if self._sl_idx:
+            sl_full = init_train_state(jax.random.PRNGKey(seed), CFG,
+                                       self._sl_wcfg, "sgd")
+        group_states = [
+            jax.tree.map(lambda p: jnp.broadcast_to(
+                p, (len(g.members),) + p.shape), fl_full)
+            for g in self._groups]
+        sl_states = [sl_full for _ in self._sl_idx]
+        glob = {"model": fl_full.trainable["model"],
+                "codec": (sl_full.trainable["codec"] if self._sl_idx
+                          else {})}
+        pop = _PopState(group_states, sl_states, [0] * len(self._sl_idx),
+                        glob, [0] * len(self.clients))
+        return SchemeState(train=pop, data=shards), None
+
+    def cycle_batches(self, state, rng, cycle):
+        """Per-client cycle data, drawn in population order from the ONE
+        experiment rng — an all-FL population consumes the stream
+        exactly as `FederatedScheme.cycle_batches` (per-user epoch
+        loops), an all-SL one exactly as `SplitScheme` (one epoch)."""
+        out = []
+        for i, spec in enumerate(self.clients):
+            xu, yu = state.data[i]
+            if spec.paradigm == "fl":
+                toks, labs = draw_local_epochs(xu, yu, spec.local_epochs,
+                                               rng)
+                out.append({"tokens": toks, "labels": labs})
+            else:
+                bs = []
+                for _ in range(spec.local_epochs):
+                    bs.extend(batches_of(xu, yu, BATCH, rng))
+                out.append(bs)
+        return out
+
+    def round_key(self, seed: int, cycle: int):
+        # the FL stream (matches FederatedScheme for group 0); the SL
+        # clients' PRNGKey(seed+2) stream is derived in round() from the
+        # (seed, cycle) stashed here
+        self._key_ctx = (seed, cycle)
+        return jax.random.fold_in(jax.random.PRNGKey(seed + 3), cycle)
+
+    # ------------------------------------------------------------- round
+    def _aggregate(self, trees, weights):
+        """Sample-count-weighted FedAvg of per-client trees. Equal
+        weights collapse to jnp.mean — bitwise the pure-FL FedAvg."""
+        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+        if np.all(weights == weights[0]):
+            return jax.tree.map(lambda s: jnp.mean(s, axis=0), stacked)
+        w = jnp.asarray(weights, jnp.float32) / float(np.sum(weights))
+        return jax.tree.map(
+            lambda s: jnp.tensordot(w, s.astype(jnp.float32), axes=1)
+            .astype(s.dtype), stacked)
+
+    def round(self, state, batch, key, lr):
+        if self._key_ctx is None:
+            raise RuntimeError("call round_key(seed, cycle) before "
+                               "round(): the SL clients' key stream is "
+                               "derived from it (Experiment does this)")
+        seed, cycle = self._key_ctx
+        pop: _PopState = state.train
+        n = len(self.clients)
+        sizes = np.asarray([len(xs) for xs, _ in state.data], np.float64)
+        weights = sizes / sizes.sum()
+        models = [None] * n
+        reports = [None] * n
+        new_groups, new_sl, new_sl_steps = [], [], []
+        client_steps = list(pop.client_steps)
+
+        # --- FL groups: vmapped local phase + one stacked upload each
+        for gi, group in enumerate(self._groups):
+            gk = key if gi == 0 else jax.random.fold_in(key, 101 + gi)
+            gb = {"tokens": np.stack([batch[i]["tokens"]
+                                      for i in group.members]),
+                  "labels": np.stack([batch[i]["labels"]
+                                      for i in group.members])}
+            states, metrics = fl_local_phase(pop.groups[gi], gb, gk, lr)
+            dlv = fl_upload(group.radio, gk, states.trainable["model"])
+            losses = np.asarray(metrics["loss"])           # [N_g, J]
+            for u, i in enumerate(group.members):
+                models[i] = jax.tree.map(lambda p, u=u: p[u], dlv.payload)
+                j = losses.shape[1]
+                client_steps[i] += j
+                reports[i] = ClientReport(
+                    name=self.clients[i].name or f"fl{i}", paradigm="fl",
+                    loss=float(losses[u].mean()), steps=j,
+                    bits=dlv.user_bits[u], n_tx=dlv.user_n_tx[u],
+                    energy_j=group.radio.energy_j(dlv.user_bits[u]),
+                    weight=float(weights[i]))
+            new_groups.append(states)
+
+        # --- SL clients: one fused split cycle each, own radio/quantizer
+        sl_base = jax.random.PRNGKey(seed + 2)
+        for si, i in enumerate(self._sl_idx):
+            spec = self.clients[i]
+            sk = sl_base if si == 0 else jax.random.fold_in(sl_base,
+                                                            201 + si)
+            step = sl_train_step(_wcfg_key(spec.wcfg), lr)
+            st, m, steps = sl_cycle(step, pop.sl_states[si], batch[i], sk,
+                                    pop.sl_steps[si])
+            n_steps = steps - pop.sl_steps[si]
+            radio = spec.radio
+            bits = n_steps * sl_bits_per_step(spec.wcfg, radio.quant_bits)
+            models[i] = st.trainable["model"]
+            client_steps[i] += n_steps
+            reports[i] = ClientReport(
+                name=spec.name or f"sl{i}", paradigm="sl",
+                loss=float(m["loss"]), steps=n_steps, bits=bits,
+                n_tx=2.0 * n_steps * radio.expected_tx(),
+                energy_j=radio.energy_j(bits), weight=float(weights[i]))
+            new_sl.append(st)
+            new_sl_steps.append(steps)
+
+        # --- mixed aggregation (module docstring: weighted FedAvg over
+        # received FL weights + server-side-updated SL trunks)
+        agg_model = self._aggregate(models, weights)
+        if self._sl_idx:
+            agg_codec = self._aggregate(
+                [new_sl[si].trainable["codec"] for si in
+                 range(len(self._sl_idx))],
+                weights[self._sl_idx])
+        else:
+            agg_codec = {}
+
+        # --- broadcast back: every client re-anchors on the new global
+        new_groups = [
+            TrainState(dict(s.trainable, model=jax.tree.map(
+                lambda p: jnp.broadcast_to(
+                    p, (len(g.members),) + p.shape), agg_model)),
+                s.opt_state, s.step)
+            for g, s in zip(self._groups, new_groups)]
+        new_sl = [TrainState({"model": agg_model, "codec": agg_codec},
+                             s.opt_state, s.step) for s in new_sl]
+
+        glob = {"model": agg_model, "codec": agg_codec}
+        new_pop = _PopState(new_groups, new_sl, new_sl_steps, glob,
+                            client_steps)
+        self._final_client_steps = client_steps
+        total_steps = sum(r.steps for r in reports)
+        new = SchemeState(new_pop, state.data,
+                          state.steps + total_steps,
+                          state.epoch + self.epochs_per_cycle)
+        return new, RoundReport(
+            loss=float(sum(r.loss * r.weight for r in reports)),
+            steps=total_steps,
+            bits=float(sum(r.bits for r in reports)),
+            n_tx=float(sum(r.n_tx for r in reports)),
+            energy_j=float(sum(r.energy_j for r in reports)),
+            clients=tuple(reports))
+
+    # -------------------------------------------------------------- eval
+    def evaluate(self, state, xte, yte) -> float:
+        glob = state.train.global_trainable
+        if self._sl_idx:
+            # the deployed function includes the trained codec
+            return evaluate_sl(glob, self._sl_wcfg, xte, yte)
+        return evaluate(glob["model"], xte, yte)[0]
+
+    def flops(self, steps_total: int):
+        """Per-client accounting (steps_total is the fleet sum, which
+        cannot be split by paradigm — the internal counters can)."""
+        user = server = 0.0
+        for i, spec in enumerate(self.clients):
+            steps = self._final_client_steps[i]
+            if spec.paradigm == "fl":
+                user += step_flops("cl") * steps
+            else:
+                u = user_side_flops_sl(spec.wcfg.compress_factor)
+                user += u * steps
+                server += (step_flops("sl", _wcfg_key(spec.wcfg)) - u) \
+                    * steps
+        return user, server

@@ -44,6 +44,12 @@ class Delivery:
     bits: float                 # on-air bits, incl. drawn retransmissions
     energy_j: float             # comm energy of this delivery (Eq. 11)
     n_tx: float                 # total transmissions drawn across packets
+    # stacked sends only: per-user slice of the accounting above, in the
+    # leading-axis order of the transmitted tree (None for flat sends).
+    # Lets a population scheme bill ONE fused N-user pass back to the
+    # individual clients that rode it.
+    user_bits: Optional[tuple] = None
+    user_n_tx: Optional[tuple] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,22 +65,29 @@ class Radio:
     bandwidth_hz: float = 100e3
     tx_power_w: float = 1e-3
     use_kernel: bool = False     # Pallas packed kernel for float sends
+    wire_dtype: str = "float32"  # "int8": byte codewords on-wire (Q<=8)
 
     @classmethod
     def from_wcfg(cls, wcfg, quant_bits: Optional[int] = None,
-                  use_kernel: bool = False) -> "Radio":
+                  use_kernel: bool = False, **overrides) -> "Radio":
         """Build from a WirelessConfig; None means an ideal (perfect,
-        non-fading) link — the no-radio baseline."""
+        non-fading) link — the no-radio baseline. Extra keyword
+        `overrides` replace individual Radio fields on top of the base
+        config (``Radio.from_wcfg(wcfg, snr_db=5.0, fading=False)``) —
+        the one-liner a heterogeneous client population uses to give
+        every client its own link budget."""
         if wcfg is None:
-            return cls(perfect=True, fading=False)
-        return cls(quant_bits=int(quant_bits or wcfg.quant_bits),
-                   snr_db=float(wcfg.snr_db), fading=bool(wcfg.fading),
-                   perfect=bool(wcfg.perfect_channel),
-                   arq_attempts=int(getattr(wcfg, "arq_attempts", 1)),
-                   arq_min_f2=float(getattr(wcfg, "arq_min_f2", 0.25)),
-                   bandwidth_hz=float(wcfg.bandwidth_hz),
-                   tx_power_w=float(wcfg.tx_power_w),
-                   use_kernel=use_kernel)
+            base = cls(perfect=True, fading=False)
+        else:
+            base = cls(quant_bits=int(quant_bits or wcfg.quant_bits),
+                       snr_db=float(wcfg.snr_db), fading=bool(wcfg.fading),
+                       perfect=bool(wcfg.perfect_channel),
+                       arq_attempts=int(getattr(wcfg, "arq_attempts", 1)),
+                       arq_min_f2=float(getattr(wcfg, "arq_min_f2", 0.25)),
+                       bandwidth_hz=float(wcfg.bandwidth_hz),
+                       tx_power_w=float(wcfg.tx_power_w),
+                       use_kernel=use_kernel)
+        return dataclasses.replace(base, **overrides) if overrides else base
 
     # ----------------------------------------------------------- account
     def expected_tx(self) -> float:
@@ -101,8 +114,13 @@ class Radio:
         n_tx = np.asarray(n_tx, np.float64)
         sizes = np.asarray(sizes, np.float64)
         bits = float(self.quant_bits) * float((sizes * n_tx).sum())
+        user_bits = user_n_tx = None
+        if n_tx.ndim == 2:      # stacked send: keep the per-user split
+            user_bits = tuple(float(b) for b in
+                              self.quant_bits * (sizes * n_tx).sum(axis=1))
+            user_n_tx = tuple(float(t) for t in n_tx.sum(axis=1))
         return Delivery(payload, bits, self.energy_j(bits),
-                        float(n_tx.sum()))
+                        float(n_tx.sum()), user_bits, user_n_tx)
 
     # -------------------------------------------------------------- send
     def send_tree(self, key, tree) -> Delivery:
@@ -112,7 +130,7 @@ class Radio:
             key, tree, self.quant_bits, self.snr_db, fading=self.fading,
             perfect=self.perfect, arq_attempts=self.arq_attempts,
             arq_min_f2=self.arq_min_f2, impl=self._impl(),
-            return_diag=True)
+            return_diag=True, wire_dtype=self.wire_dtype)
         sizes = [int(l.size) for l in jax.tree.leaves(tree)]
         return self._deliver(payload, diag["n_tx"], sizes)
 
@@ -126,7 +144,7 @@ class Radio:
             key, tree, self.quant_bits, self.snr_db, fading=self.fading,
             perfect=self.perfect, arq_attempts=self.arq_attempts,
             arq_min_f2=self.arq_min_f2, impl=self._impl(),
-            return_diag=True)
+            return_diag=True, wire_dtype=self.wire_dtype)
         sizes = [int(l.size) // int(l.shape[0]) for l in leaves]
         return self._deliver(payload, diag["n_tx"], sizes)
 

@@ -27,14 +27,20 @@ from repro.schemes.base import (N_TEST, N_TRAIN, RoundReport, RunResult,
                                 corpus, lr_at)
 from repro.schemes.centralized import CentralizedScheme
 from repro.schemes.federated import FederatedScheme
+from repro.schemes.population import PopulationScheme
 from repro.schemes.radio import Delivery
 from repro.schemes.split import SplitScheme
 
 
-def build_scheme(wcfg=None, capture: bool = False, **kwargs):
+def build_scheme(wcfg=None, capture: bool = False, clients=None, **kwargs):
     """WirelessConfig -> Scheme. None means the no-radio CL baseline.
-    Extra kwargs go to the scheme constructor (e.g. FL's `shards`,
-    `dp_sigma`, `prox_mu`; SL's `protocol`, `capture_every`)."""
+    A `clients` list of ClientSpecs selects a heterogeneous
+    `PopulationScheme` (wcfg is then the shared base config the specs
+    were built from). Extra kwargs go to the scheme constructor (e.g.
+    FL's `shards`, `dp_sigma`, `prox_mu`; SL's `protocol`,
+    `capture_every`)."""
+    if clients is not None:
+        return PopulationScheme(wcfg, clients, capture=capture, **kwargs)
     mode = wcfg.mode if wcfg is not None else "cl"
     if mode == "cl":
         return CentralizedScheme(wcfg, capture=capture, **kwargs)

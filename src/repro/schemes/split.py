@@ -8,9 +8,9 @@ Two protocols, one interface:
   `train_sl` driver ran, reproduced exactly (fixed-seed parity tests).
 * ``protocol="two_party"`` — user and server are separate parties
   exchanging explicit `Delivery` messages (`runtime/sl_runtime.py`
-  `SLSession`, itself rewired onto `Radio`). The deployment shape; the
-  lr schedule is fixed at LR0 here because the session's jitted closures
-  capture the lr (matching the legacy two-party example).
+  `SLSession`, itself rewired onto `Radio`). The deployment shape.
+  `lr` is a traced argument of the session's jitted closures, so this
+  protocol follows the same lr schedule as the fused path.
 
 Payload per fused step: compressed activation up + tau-clipped gradient
 down (2 legs x B x T_pool x C/4 floats at quant_bits each).
@@ -38,6 +38,50 @@ from repro.schemes.radio import Radio
 
 def _wcfg_key(wcfg) -> tuple:
     return tuple(sorted(dataclasses.asdict(wcfg).items()))
+
+
+# --------------------------------------------------- per-client round body
+@functools.lru_cache(maxsize=64)
+def _sl_step_exe(wcfg_key: tuple):
+    """ONE jitted fused SL train step per wcfg; lr rides as the step's
+    traced 4th argument, so the whole lr schedule — and every client of
+    a population sharing this link — reuses one compiled executable
+    (heterogeneous SNR/quant clients each get their own: the channel
+    knobs are baked into the fused program)."""
+    wcfg = WirelessConfig(**dict(wcfg_key))
+    return jax.jit(make_train_step(CFG, train_shape(), wcfg,
+                                   optimizer="sgd", lr=LR0,
+                                   momentum=MOMENTUM))
+
+
+def sl_train_step(wcfg_key: tuple, lr: float):
+    step = _sl_step_exe(wcfg_key)
+    return lambda st, b, k: step(st, b, k, lr)
+
+
+def sl_bits_per_step(wcfg, quant_bits: int) -> float:
+    """On-air payload of ONE fused SL step: compressed activation up +
+    tau-clipped gradient down (2 legs x B x T_pool x C/compress floats
+    at quant_bits each)."""
+    t_pool = (30 - lstm_tiny.CONV_K + 1) // 2
+    c = lstm_tiny.CONV_F // wcfg.compress_factor
+    return 2.0 * BATCH * t_pool * c * float(quant_bits)
+
+
+def sl_cycle(step, train_state, batches, key, steps: int, on_step=None):
+    """One client's fused split cycle: every batch through the jitted
+    split step, per-step keys folded from the client's cumulative step
+    counter (the pre-population `SplitScheme.round` loop, factored out
+    so `PopulationScheme` can run each SL client's cycle through the
+    identical code). Returns (state, last_metrics, steps)."""
+    m = None
+    for b in batches:
+        kb = jax.random.fold_in(key, steps)
+        train_state, m = step(train_state, b, kb)
+        if on_step is not None:
+            on_step(steps, train_state, b, kb)
+        steps += 1
+    return train_state, m, steps
 
 
 @functools.lru_cache(maxsize=8)
@@ -98,14 +142,11 @@ class SplitScheme:
         if protocol not in ("fused", "two_party"):
             raise ValueError(protocol)
         self.protocol = protocol
-        self._steps: dict = {}
         self._cap_fn = _sl_observe_fn(self.wcfg) if capture else None
         # payload per fused step: compressed activation up + clipped
         # gradient down, through the radio's quantizer
-        t_pool = (30 - lstm_tiny.CONV_K + 1) // 2
-        c = lstm_tiny.CONV_F // self.wcfg.compress_factor
-        self.bits_per_batch = 2.0 * BATCH * t_pool * c \
-            * self.radio.quant_bits
+        self.bits_per_batch = sl_bits_per_step(self.wcfg,
+                                               self.radio.quant_bits)
 
     # ------------------------------------------------------------- setup
     def init(self, seed: int, xtr, ytr):
@@ -128,30 +169,22 @@ class SplitScheme:
         return jax.random.PRNGKey(seed + 2)
 
     # ------------------------------------------------------------- round
-    def _step_for(self, lr: float):
-        if lr not in self._steps:
-            self._steps[lr] = jax.jit(make_train_step(
-                CFG, train_shape(), self.wcfg, optimizer="sgd", lr=lr,
-                momentum=MOMENTUM))
-        return self._steps[lr]
+    def _capture_step(self, steps, st, b, kb):
+        if steps % self.capture_every == 0:
+            z = self._cap_fn(st.trainable, b["tokens"],
+                             jax.random.fold_in(kb, 12345))
+            self.captures["smashed"].append(np.asarray(z))
+            self.captures["original"].append(np.asarray(b["tokens"]))
 
     def round(self, state, batch, key, lr):
         if self.protocol == "two_party":
-            return self._round_two_party(state, batch, key)
-        step = self._step_for(lr)
-        st, steps, m = state.train, state.steps, None
-        bits = 0.0
-        for b in batch:
-            kb = jax.random.fold_in(key, steps)
-            st, m = step(st, b, kb)
-            bits += self.bits_per_batch
-            if self.capture and steps % self.capture_every == 0:
-                z = self._cap_fn(st.trainable, b["tokens"],
-                                 jax.random.fold_in(kb, 12345))
-                self.captures["smashed"].append(np.asarray(z))
-                self.captures["original"].append(np.asarray(b["tokens"]))
-            steps += 1
+            return self._round_two_party(state, batch, key, lr)
+        step = sl_train_step(_wcfg_key(self.wcfg), lr)
+        st, m, steps = sl_cycle(
+            step, state.train, batch, key, state.steps,
+            on_step=self._capture_step if self.capture else None)
         n = steps - state.steps
+        bits = n * self.bits_per_batch
         new = SchemeState(st, state.data, steps, state.epoch + 1)
         # fused-path n_tx is the ANALYTIC expectation (2 legs/step): the
         # crossings happen inside the jitted step, which exposes no
@@ -161,15 +194,15 @@ class SplitScheme:
             n_tx=2.0 * n * self.radio.expected_tx(),
             energy_j=self.radio.energy_j(bits))
 
-    def _round_two_party(self, state, batch, key):
+    def _round_two_party(self, state, batch, key, lr):
         sess, steps = state.train, state.steps
         bits0, bits, n_tx = sess.total_bits, 0.0, 0.0
         for b in batch:
             kb = jax.random.fold_in(key, steps)
             up = sess.user_uplink(jnp.asarray(b["tokens"]), kb)
             down = sess.server_step(up, jnp.asarray(b["labels"]),
-                                    jax.random.fold_in(kb, 1))
-            sess.user_downlink(down)
+                                    jax.random.fold_in(kb, 1), lr=lr)
+            sess.user_downlink(down, lr=lr)
             n_tx += up.n_tx + down.n_tx
             if self.capture and steps % self.capture_every == 0:
                 self.captures["smashed"].append(np.asarray(up.payload))

@@ -1,0 +1,145 @@
+"""Heterogeneous population scheme: a mixed FL/SL fleet with per-client
+radios trains end-to-end through the unchanged `Experiment` runner, the
+per-client accounting in each `RoundReport` is consistent with the
+fleet totals, and the spec/grouping plumbing holds its invariants.
+Degenerate (all-FL / all-SL) golden parity lives in
+tests/test_scheme_parity.py."""
+import numpy as np
+import pytest
+
+from repro.configs.base import WirelessConfig
+from repro.schemes import (BATCH, ClientSpec, Experiment,
+                           PopulationScheme, Radio, build_scheme)
+
+N_TRAIN, N_TEST = 2048, 512
+
+
+def _mixed_clients(base):
+    return [ClientSpec.fl(base, snr_db=20.0, name="fl-good"),
+            ClientSpec.fl(base, snr_db=6.0, quant_bits=4, name="fl-weak"),
+            ClientSpec.sl(base, snr_db=12.0, quant_bits=16, name="sl-mid"),
+            ClientSpec.sl(base, snr_db=20.0, name="sl-good")]
+
+
+def test_mixed_population_trains_with_per_client_accounting():
+    """Acceptance: 2 FL + 2 SL clients with distinct SNRs through
+    Experiment.run(), per-client bits/energy in every RoundReport."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    exp = Experiment(build_scheme(base, clients=_mixed_clients(base)),
+                     cycles=2, seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    res = exp.run()
+    assert len(res.accuracy) == 2 and all(0.0 < a < 1.0
+                                          for a in res.accuracy)
+    assert res.user_flops > 0 and res.server_flops > 0
+    for rep in exp.reports:
+        names = [c.name for c in rep.clients]
+        assert names == ["fl-good", "fl-weak", "sl-mid", "sl-good"]
+        for c in rep.clients:
+            assert c.bits > 0 and c.energy_j > 0 and c.n_tx > 0
+            assert c.weight == pytest.approx(0.25)
+        # fleet totals reassemble from the per-client breakdown
+        assert rep.bits == pytest.approx(sum(c.bits for c in rep.clients))
+        assert rep.energy_j == pytest.approx(
+            sum(c.energy_j for c in rep.clients))
+        assert rep.loss == pytest.approx(
+            sum(c.loss * c.weight for c in rep.clients))
+        # heterogeneity is visible in the bill: the Q4 FL client pays
+        # half the Q8 one; the Q16 SL client pays double the Q8 one
+        by = {c.name: c for c in rep.clients}
+        assert by["fl-weak"].bits == by["fl-good"].bits / 2
+        assert by["sl-mid"].bits == 2 * by["sl-good"].bits
+    assert res.total_bits == pytest.approx(
+        sum(r.bits for r in exp.reports))      # bits_normalizer == 1
+
+
+def test_sample_count_weighting_and_custom_shards():
+    """n_samples drives both the shard slicing and the aggregation
+    weights (the SEMFED-style weighting rule)."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.fl(base, n_samples=3 * BATCH, name="big"),
+               ClientSpec.sl(base, n_samples=BATCH, name="small")]
+    exp = Experiment(build_scheme(base, clients=clients), cycles=1,
+                     seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    exp.run()
+    (rep,) = exp.reports
+    by = {c.name: c for c in rep.clients}
+    assert by["big"].weight == pytest.approx(0.75)
+    assert by["small"].weight == pytest.approx(0.25)
+    # FL client: J local epochs x 3 batches; SL client: 1 epoch x 1 batch
+    assert by["big"].steps == base.local_steps * 3
+    assert by["small"].steps == 1
+
+
+def test_sl_client_local_epochs_are_honored():
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.fl(base, n_samples=BATCH, name="f"),
+               ClientSpec.sl(base, local_epochs=2, n_samples=BATCH,
+                             name="s")]
+    exp = Experiment(build_scheme(base, clients=clients), cycles=1,
+                     seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    exp.run()
+    by = {c.name: c for c in exp.reports[0].clients}
+    assert by["s"].steps == 2          # 2 epochs x 1 batch per epoch
+
+
+def test_identical_fl_clients_share_one_stacked_upload():
+    """FL clients with the same (radio, J, shard size) form one group —
+    one fused stacked send — while a distinct-SNR client gets its own."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    scheme = PopulationScheme(base, [
+        ClientSpec.fl(base), ClientSpec.fl(base),
+        ClientSpec.fl(base, snr_db=0.0)])
+    from repro.schemes import corpus
+    (xtr, ytr), _ = corpus(N_TRAIN, N_TEST, 0)
+    scheme.init(0, xtr, ytr)
+    assert [len(g.members) for g in scheme._groups] == [2, 1]
+    assert scheme._groups[0].radio.snr_db == 20.0
+    assert scheme._groups[1].radio.snr_db == 0.0
+
+
+def test_eval_quantizer_is_order_independent():
+    """The eval-time deployed function pins the fleet's highest-fidelity
+    SL quantizer, so accuracy must not depend on SL client order."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    a = PopulationScheme(base, [ClientSpec.sl(base, quant_bits=4),
+                                ClientSpec.sl(base, quant_bits=16)])
+    b = PopulationScheme(base, [ClientSpec.sl(base, quant_bits=16),
+                                ClientSpec.sl(base, quant_bits=4)])
+    assert a._sl_wcfg.quant_bits == b._sl_wcfg.quant_bits == 16
+
+
+def test_client_spec_radio_overrides():
+    base = WirelessConfig(mode="fl", quant_bits=8, snr_db=20.0)
+    spec = ClientSpec.fl(base, snr_db=3.0, quant_bits=4, fading=False)
+    assert spec.radio == Radio.from_wcfg(base, snr_db=3.0, quant_bits=4,
+                                         fading=False)
+    assert spec.radio.snr_db == 3.0 and spec.radio.quant_bits == 4
+    assert spec.local_epochs == base.local_steps
+    sl = ClientSpec.sl(base, snr_db=5.0)
+    assert sl.wcfg.mode == "sl" and sl.local_epochs == 1
+
+
+def test_population_validations():
+    base = WirelessConfig(mode="fl")
+    with pytest.raises(ValueError, match="at least one"):
+        PopulationScheme(base, [])
+    with pytest.raises(ValueError, match="compress_factor"):
+        PopulationScheme(base, [
+            ClientSpec.sl(base, compress_factor=4),
+            ClientSpec.sl(base, compress_factor=2)])
+    with pytest.raises(ValueError, match="median"):
+        PopulationScheme(WirelessConfig(mode="fl", aggregate="median"),
+                         [ClientSpec.fl(base)])
+    with pytest.raises(ValueError, match="median"):
+        # per-client override must be rejected too, not silently meaned
+        PopulationScheme(base, [ClientSpec.fl(base, aggregate="median")])
+    with pytest.raises(ValueError, match="capture"):
+        PopulationScheme(base, [ClientSpec.fl(base)], capture=True)
+    # shards that don't fit the corpus fail loudly at init, not in round
+    scheme = PopulationScheme(base, [
+        ClientSpec.fl(base, n_samples=N_TRAIN),
+        ClientSpec.fl(base, n_samples=N_TRAIN)])
+    from repro.schemes import corpus
+    (xtr, ytr), _ = corpus(N_TRAIN, N_TEST, 0)
+    with pytest.raises(ValueError, match="exceed"):
+        scheme.init(0, xtr, ytr)

@@ -24,9 +24,9 @@ import pytest
 from benchmarks.common import train_cl, train_fl, train_sl
 from repro.configs.base import WirelessConfig
 from repro.core import wire as W
-from repro.schemes import (CentralizedScheme, Delivery, Experiment,
-                           FederatedScheme, Radio, SplitScheme,
-                           build_scheme)
+from repro.schemes import (CentralizedScheme, ClientSpec, Delivery,
+                           Experiment, FederatedScheme, PopulationScheme,
+                           Radio, SplitScheme, build_scheme)
 
 N_TRAIN, N_TEST = 3072, 512
 
@@ -112,6 +112,49 @@ def test_sl_noisy_bits_parity(golden):
         golden["sl_noisy_bits"]["total_bits"])
 
 
+# ------------------------------------------- population degeneracy
+def test_population_all_fl_matches_federated_golden(golden):
+    """An all-FL population with one (radio, J) group runs the identical
+    vmapped local phase + stacked upload on the identical RNG stream as
+    FederatedScheme: payload bits bit-for-bit, accuracy exact (the
+    aggregated params are bitwise equal), loss within float32
+    reduction-order tolerance (per-client means vs one flat mean)."""
+    wcfg = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.fl(wcfg) for _ in range(wcfg.n_users)]
+    scheme = build_scheme(wcfg, clients=clients)
+    assert isinstance(scheme, PopulationScheme)
+    exp = Experiment(scheme, cycles=2, seed=0, n_train=N_TRAIN,
+                     n_test=N_TEST)
+    res = exp.run()
+    want = golden["fl_q8"]
+    assert res.total_bits == want["total_bits"]          # bit-for-bit
+    np.testing.assert_array_equal(res.accuracy, want["accuracy"])
+    np.testing.assert_allclose(res.loss, want["loss"], rtol=1e-5)
+    _reports_cover_bits(exp, res)
+    for rep in exp.reports:
+        assert len(rep.clients) == wcfg.n_users
+        assert sum(c.bits for c in rep.clients) == rep.bits
+        assert all(c.paradigm == "fl" for c in rep.clients)
+
+
+def test_population_all_sl_matches_split_golden(golden):
+    """A single-client all-SL population is SplitScheme's fused loop:
+    the aggregation of one weight-1 client is the identity, so the whole
+    trajectory is bitwise the golden one."""
+    wcfg = WirelessConfig(mode="sl", quant_bits=16, perfect_channel=True)
+    exp = Experiment(build_scheme(wcfg, clients=[ClientSpec.sl(wcfg)]),
+                     cycles=2, seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    res = exp.run()
+    want = golden["sl_perfect"]
+    assert res.total_bits == want["total_bits"]          # bit-for-bit
+    np.testing.assert_array_equal(res.accuracy, want["accuracy"])
+    np.testing.assert_array_equal(res.loss, want["loss"])
+    _reports_cover_bits(exp, res)
+    rep = exp.reports[0]
+    assert len(rep.clients) == 1 and rep.clients[0].paradigm == "sl"
+    assert rep.clients[0].weight == 1.0
+
+
 # -------------------------------------------------- Radio accounting
 def test_radio_delivery_matches_wire_payload_bits():
     tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (64, 32)),
@@ -180,6 +223,23 @@ def test_fl_capture_with_dp_is_rejected():
     with pytest.raises(ValueError, match="capture"):
         FederatedScheme(WirelessConfig(mode="fl"), capture=True,
                         dp_sigma=0.5)
+
+
+def test_fl_dp_round_reports_expected_transmissions():
+    """The DP upload path exposes no per-packet diagnostics, but N users
+    x P packets still crossed the channel: the report carries the
+    analytic expectation, not 0."""
+    from repro.schemes import corpus
+    (xtr, ytr), _ = corpus(N_TRAIN, N_TEST, 0)
+    scheme = FederatedScheme(WirelessConfig(mode="fl", quant_bits=8),
+                             dp_sigma=0.5)
+    state, _ = scheme.init(0, xtr, ytr)
+    batch = scheme.cycle_batches(state, np.random.default_rng(1), 0)
+    _, rep = scheme.round(state, batch, scheme.round_key(0, 0), 0.1)
+    n_packets = scheme.n_users * len(jax.tree.leaves(
+        state.train.trainable["model"]))
+    assert rep.n_tx == n_packets * scheme.radio.expected_tx() > 0
+    assert rep.bits > 0
 
 
 def test_wire_diag_does_not_change_payload():

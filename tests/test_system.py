@@ -130,6 +130,34 @@ def test_sl_session_protocol_bits_accounting():
     assert logits.shape == (512, 1)
 
 
+def test_sl_session_lr_is_traced_not_pinned():
+    """`lr` rides the jitted closures as a traced argument: stepping a
+    session built with lr=0.1 at lr=0.02 must produce bitwise the same
+    parameters as a session built with lr=0.02 (the ROADMAP item that
+    pinned two-party SL to LR0)."""
+    wcfg = WirelessConfig(mode="sl", quant_bits=16)
+    b = _batch(256)
+
+    def one_step(construct_lr, step_lr):
+        sess = SLSession(CFG, wcfg, jax.random.PRNGKey(0), lr=construct_lr)
+        up = sess.user_uplink(b["tokens"], jax.random.PRNGKey(1))
+        down = sess.server_step(up, b["labels"], jax.random.PRNGKey(2),
+                                lr=step_lr)
+        sess.user_downlink(down, lr=step_lr)
+        return sess
+
+    a = one_step(0.1, 0.02)
+    ref = one_step(0.02, None)          # None -> construction lr
+    for x, y in zip(jax.tree.leaves((a.server_params, a.user_params)),
+                    jax.tree.leaves((ref.server_params, ref.user_params))):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # and a different lr produces a different update (not a no-op arg)
+    c = one_step(0.1, 0.1)
+    assert any(not np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a.server_params),
+                               jax.tree.leaves(c.server_params)))
+
+
 def test_privacy_ordering_cl_below_sl():
     """The structural privacy claim at unit scale: direct read of raw
     (CL) reconstructs better than a decoder on compressed+noisy smashed

@@ -74,6 +74,45 @@ def test_packed_arq_bit_exact_vs_per_leaf():
     _assert_tree_equal(a, b)
 
 
+# -------------------------------------------------------- int8 on-wire dtype
+@pytest.mark.parametrize("bits", [4, 8])
+def test_int8_wire_bit_exact_vs_float(bits):
+    """The byte-codeword on-wire buffer must be a pure storage change:
+    same codes, same flip mask, bit-identical received tree."""
+    tree = _ragged_tree(6)
+    key = jax.random.PRNGKey(13)
+    f32 = W.transmit_tree(key, tree, bits, 6.0)
+    i8 = W.transmit_tree(key, tree, bits, 6.0, wire_dtype="int8")
+    _assert_tree_equal(f32, i8)
+    stacked = jax.tree.map(lambda p: jnp.stack([p, 2 * p]), tree)
+    f32 = W.transmit_stacked(key, stacked, bits, 6.0)
+    i8 = W.transmit_stacked(key, stacked, bits, 6.0, wire_dtype="int8")
+    _assert_tree_equal(f32, i8)
+
+
+def test_int8_wire_rejects_wide_codewords_and_other_impls():
+    tree = _ragged_tree(6)
+    key = jax.random.PRNGKey(13)
+    with pytest.raises(ValueError, match="8-bit"):
+        W.transmit_tree(key, tree, 16, 6.0, wire_dtype="int8")
+    with pytest.raises(ValueError, match="packed"):
+        W.transmit_tree(key, tree, 8, 6.0, wire_dtype="int8",
+                        impl="kernel")
+
+
+def test_radio_int8_wire_same_delivery():
+    """Radio(wire_dtype="int8") delivers the identical payload and
+    bills the identical bits as the float32 wire at Q8."""
+    from repro.schemes.radio import Radio
+    tree = _ragged_tree(7)
+    key = jax.random.PRNGKey(21)
+    a = Radio(quant_bits=8, snr_db=6.0).send_tree(key, tree)
+    b = Radio(quant_bits=8, snr_db=6.0, wire_dtype="int8").send_tree(key,
+                                                                     tree)
+    _assert_tree_equal(a.payload, b.payload)
+    assert a.bits == b.bits and a.n_tx == b.n_tx
+
+
 def test_perfect_channel_is_per_tensor_quantization():
     tree = _ragged_tree(5)
     out = W.transmit_tree(jax.random.PRNGKey(0), tree, 8, 0.0, perfect=True)
