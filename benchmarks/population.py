@@ -1,16 +1,24 @@
-"""Heterogeneous-population sweep: FL:SL mix ratio x SNR spread ->
+"""Heterogeneous-population sweep: FL:SL mix ratio x SNR spread, plus
+fleet dynamics (client sampling / deadline stragglers) ->
 accuracy / payload bits / comm energy (BENCH_population.json).
 
-The paper's comparison holds the fleet homogeneous; this benchmark
-makes heterogeneity the sweep axis (FedNLP's benchmark framing): a
-4-client fleet whose FL:SL composition ranges from all-FL to all-SL,
-at link budgets that are either uniform (every client at 20 dB) or
-spread (clients fanned symmetrically around 20 dB), every crossing
-billed through that client's own `Radio`.
+The paper's comparison holds the fleet homogeneous with full
+participation; this benchmark makes heterogeneity the sweep axis
+(FedNLP's benchmark framing): a 4-client fleet whose FL:SL composition
+ranges from all-FL to all-SL, at link budgets that are either uniform
+(every client at 20 dB) or spread (clients fanned symmetrically around
+20 dB), every crossing billed through that client's own `Radio`. Full
+mode adds a participation sweep (uniform-k sampling at k = 4..1 on the
+spread fleet) — the bits/accuracy trade of training fewer clients per
+round.
 
-Quick mode (CI) runs only the 2-client mixed smoke case — 1 FL + 1 SL
-with distinct SNRs — and records per-round wall time + bits so the new
-subsystem's perf trajectory is tracked run-over-run like BENCH_wire.
+Quick mode (CI) runs two smoke cases: the 2-client mixed fleet
+(per-round wall time + bits tracked run-over-run like BENCH_wire) and
+a fleet-dynamics smoke — uniform-3 sampling over the 4-client
+2 FL + 1 SL + laggard fleet, with the laggard deadline-dropped
+whenever sampled — asserting the dropped clients bill zero bits.
+
+    PYTHONPATH=src python -m benchmarks.population --quick
 """
 from __future__ import annotations
 
@@ -19,7 +27,8 @@ import os
 import time
 
 from repro.configs.base import WirelessConfig
-from repro.schemes import ClientSpec, Experiment, build_scheme
+from repro.schemes import (ClientSpec, Experiment, ParticipationPolicy,
+                           build_scheme)
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 MIXES = ((4, 0), (3, 1), (2, 2), (1, 3), (0, 4))   # (n_fl, n_sl)
@@ -41,16 +50,16 @@ def _fleet(n_fl: int, n_sl: int, spread_db: float):
     return base, clients
 
 
-def _run_case(base, clients, cycles, seed, n_train, n_test):
+def _run_case(base, clients, cycles, seed, n_train, n_test, **scheme_kw):
     walls, t0 = [], [time.perf_counter()]
 
     def tick(cyc, acc, rep):
         walls.append(time.perf_counter() - t0[0])
         t0[0] = time.perf_counter()
 
-    exp = Experiment(build_scheme(base, clients=clients), cycles=cycles,
-                     seed=seed, n_train=n_train, n_test=n_test,
-                     on_cycle=tick)
+    exp = Experiment(build_scheme(base, clients=clients, **scheme_kw),
+                     cycles=cycles, seed=seed, n_train=n_train,
+                     n_test=n_test, on_cycle=tick)
     res = exp.run()
     return {
         "final_accuracy": res.final_accuracy,
@@ -59,11 +68,32 @@ def _run_case(base, clients, cycles, seed, n_train, n_test):
         # would put a spurious 1/N cliff at the sweep's all-FL endpoint)
         "total_bits": sum(r.bits for r in exp.reports),
         "energy_j": sum(r.energy_j for r in exp.reports),
+        "init_bits": exp.init_delivery.bits if exp.init_delivery else 0.0,
         "round_wall_s": [round(w, 4) for w in walls],
         "round_bits": [r.bits for r in exp.reports],
         "per_client_bits": [
             {c.name: c.bits for c in rep.clients} for rep in exp.reports],
+        "per_client_status": [
+            {c.name: c.status for c in rep.clients}
+            for rep in exp.reports],
+        "n_active": [rep.metrics.get("n_active", len(rep.clients))
+                     for rep in exp.reports],
     }
+
+
+def _dynamics_fleet():
+    """The fleet-dynamics smoke: 2 FL + 1 SL plus one compute-bound FL
+    client, under uniform-3 sampling of the 4; the laggard misses the
+    deadline whenever sampled (billed as zero-bit straggler rounds)."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.fl(base, name="fl0"),
+               ClientSpec.fl(base, snr_db=14.0, name="fl1"),
+               ClientSpec.sl(base, snr_db=10.0, quant_bits=16,
+                             name="sl0"),
+               ClientSpec.fl(base, compute_s_per_step=1e6,
+                             name="laggard")]
+    return base, clients, dict(policy=ParticipationPolicy.uniform(3),
+                               deadline_s=3600.0)
 
 
 def run(full: bool = False, seed: int = 0) -> dict:
@@ -80,13 +110,26 @@ def run(full: bool = False, seed: int = 0) -> dict:
     out["cases"]["smoke_1fl_1sl"] = _run_case(
         base, smoke, cycles, seed, n_train, n_test)
 
+    # CI smoke: fleet dynamics — sampling + one straggler; the dropped
+    # clients MUST bill zero (the ci.sh gate checks this record)
+    dbase, dclients, dkw = _dynamics_fleet()
+    out["cases"]["smoke_fleet_dynamics"] = _run_case(
+        dbase, dclients, cycles, seed, n_train, n_test, **dkw)
+
     if full:
         for n_fl, n_sl in MIXES:
             for spread in SPREADS:
-                base, clients = _fleet(n_fl, n_sl, spread)
+                fbase, clients = _fleet(n_fl, n_sl, spread)
                 name = f"mix_{n_fl}fl_{n_sl}sl_spread{spread:g}dB"
                 out["cases"][name] = _run_case(
-                    base, clients, cycles, seed, n_train, n_test)
+                    fbase, clients, cycles, seed, n_train, n_test)
+        # participation sweep: fewer clients per round on the spread
+        # mixed fleet — the partial-participation bits/accuracy trade
+        fbase, clients = _fleet(2, 2, 14.0)
+        for k in (4, 3, 2, 1):
+            out["cases"][f"sample_uniform{k}_2fl_2sl"] = _run_case(
+                fbase, clients, cycles, seed, n_train, n_test,
+                policy=ParticipationPolicy.uniform(k))
     return out
 
 
@@ -107,5 +150,13 @@ def main(full: bool = False) -> list[str]:
 
 
 if __name__ == "__main__":
-    for r in main():
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke cases only (the default unless "
+                         "--full)")
+    ap.add_argument("--full", action="store_true",
+                    help="the whole mix x spread + participation sweep")
+    args = ap.parse_args()
+    for r in main(full=args.full and not args.quick):
         print(r)

@@ -1,0 +1,64 @@
+"""Docs-consistency gate (scripts/ci.sh): every public symbol of the
+`repro.schemes` API must appear in docs/ARCHITECTURE.md's API table,
+so the table cannot silently rot as the API grows.
+
+    PYTHONPATH=src python scripts/check_docs.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DOC = os.path.join(ROOT, "docs", "ARCHITECTURE.md")
+
+
+def api_table_symbols(text: str) -> set:
+    """Symbol names from the 'Public API' table: backticked tokens in
+    the first column, comma-separated groups allowed."""
+    syms = set()
+    in_table = False
+    for line in text.splitlines():
+        if line.startswith("| symbol"):
+            in_table = True
+            continue
+        if in_table:
+            if not line.startswith("|"):
+                in_table = False
+                continue
+            first = line.split("|")[1]
+            for tok in re.findall(r"`([^`]+)`", first):
+                for name in tok.split(","):
+                    syms.add(name.strip())
+    return syms
+
+
+def main() -> int:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    import repro.schemes as schemes
+
+    with open(DOC) as f:
+        documented = api_table_symbols(f.read())
+    public = set(schemes.__all__)
+    missing = sorted(public - documented)
+    if missing:
+        print(f"docs/ARCHITECTURE.md API table is missing "
+              f"{len(missing)} public repro.schemes symbol(s):")
+        for name in missing:
+            print(f"  - {name}")
+        print("add them to the 'Public API' table (see docs/"
+              "ARCHITECTURE.md) or unexport them from schemes/__init__.")
+        return 1
+    stale = sorted(documented - public)
+    if stale:
+        # documented-but-gone symbols are a warning, not a failure:
+        # the table may legitimately describe non-exported helpers
+        print(f"note: documented but not in repro.schemes.__all__: "
+              f"{', '.join(stale)}")
+    print(f"docs OK: all {len(public)} repro.schemes symbols documented")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,17 +1,20 @@
 #!/usr/bin/env bash
-# Smoke CI: tier-1 test suite + the packed-wire perf benchmark + the
-# mixed-population smoke run.
+# Smoke CI: tier-1 test suite + docs-consistency gate + the packed-wire
+# perf benchmark + the population fleet smoke.
 #
 #     bash scripts/ci.sh
 #
-# The wire bench writes benchmarks/results/BENCH_wire.json so the
-# packed-wire speedup trajectory stays tracked run-over-run (ROADMAP
-# open item); the acceptance gate below exits nonzero if the packed
-# path loses its >=3x advantage over the jitted per-leaf loop. The
-# population bench (quick mode = a 2-client 1 FL + 1 SL fleet) writes
-# benchmarks/results/BENCH_population.json with per-round wall time +
-# bits so the heterogeneous-population subsystem's perf trajectory is
-# tracked the same way.
+# The docs gate (scripts/check_docs.py) fails if a public
+# repro.schemes symbol is missing from docs/ARCHITECTURE.md's API
+# table. The wire bench writes benchmarks/results/BENCH_wire.json so
+# the packed-wire speedup trajectory stays tracked run-over-run; the
+# acceptance gate below exits nonzero if the packed path loses its
+# >=3x advantage over the jitted per-leaf loop. The population fleet
+# smoke (quick mode: a 2-client 1 FL + 1 SL fleet PLUS a
+# fleet-dynamics case — uniform-k sampling with one deadline-dropped
+# straggler) writes benchmarks/results/BENCH_population.json with
+# per-round wall time + bits, and the gate checks the dropped clients
+# billed zero.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,6 +22,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "=== tier-1 pytest ==="
 python -m pytest -x -q
+
+echo "=== docs-consistency gate (schemes API vs docs/ARCHITECTURE.md) ==="
+python scripts/check_docs.py
 
 echo "=== packed-wire perf benchmark ==="
 python -m benchmarks.run --only wire
@@ -32,8 +38,8 @@ print(f"fl_tinylstm_n3 packed speedup vs per-leaf jit: {speed:.2f}x")
 sys.exit(0 if speed >= 3.0 else 1)
 EOF
 
-echo "=== mixed-population smoke (2-client fleet, BENCH_population.json) ==="
-python -m benchmarks.run --only population
+echo "=== population fleet smoke (sampling + straggler, BENCH_population.json) ==="
+python -m benchmarks.population --quick
 python - <<'EOF'
 import json, sys
 res = json.load(open("benchmarks/results/BENCH_population.json"))
@@ -41,5 +47,24 @@ rec = res["cases"]["smoke_1fl_1sl"]
 wall = sum(rec["round_wall_s"]) / len(rec["round_wall_s"])
 print(f"smoke_1fl_1sl: {len(rec['round_bits'])} rounds, "
       f"mean {wall:.2f}s/round, {rec['total_bits']:.0f} bits total")
-sys.exit(0 if rec["total_bits"] > 0 and rec["final_accuracy"] > 0 else 1)
+ok = rec["total_bits"] > 0 and rec["final_accuracy"] > 0
+dyn = res["cases"]["smoke_fleet_dynamics"]
+dropped = [n for statuses in dyn["per_client_status"]
+           for n, s in statuses.items() if s != "ok"]
+zero_billed = all(
+    bits[n] == 0.0
+    for statuses, bits in zip(dyn["per_client_status"],
+                              dyn["per_client_bits"])
+    for n, s in statuses.items() if s != "ok")
+print(f"smoke_fleet_dynamics: n_active per round {dyn['n_active']}, "
+      f"{len(dropped)} dropped client-rounds, zero-billed={zero_billed}")
+ok = ok and dyn["final_accuracy"] > 0 and len(dropped) > 0 and zero_billed
+# the laggard never trains: deadline-dropped whenever sampled (rounds
+# where the policy left it unsampled are legitimately "sampled_out"),
+# and it must actually straggle at least once
+ok = ok and all(s["laggard"] in ("straggler", "sampled_out")
+                for s in dyn["per_client_status"])
+ok = ok and any(s["laggard"] == "straggler"
+                for s in dyn["per_client_status"])
+sys.exit(0 if ok else 1)
 EOF

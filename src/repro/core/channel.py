@@ -129,8 +129,9 @@ def transmit_tokens(key, tokens: jax.Array, vocab_size: int, snr_db: float,
 
 
 # --------------------------------------------------------------- SL link
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
-def channel_crossing(x, key, bits, snr_db, fading, grad_clip, perfect):
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+def channel_crossing(x, key, bits, snr_db, fading, grad_clip, perfect,
+                     arq_attempts=1, arq_min_f2=0.25):
     """The SL radio boundary (Alg. 2): the forward activation AND the
     backward gradient both traverse quantize->BPSK->Rayleigh+AWGN.
     The gradient is norm-clipped to `grad_clip` (tau) before transmission.
@@ -138,21 +139,32 @@ def channel_crossing(x, key, bits, snr_db, fading, grad_clip, perfect):
     Both legs go through the packed wire (core/wire.py), so the jitted
     SL train step and the two-party `SLSession` share ONE wire
     implementation: same per-tensor scale, same Murmur3 bit-plane RNG,
-    same fused quantize/bit-flip/dequantize pass.
+    same fused quantize/bit-flip/dequantize pass — including the
+    link-layer ARQ redraw of deep fades (`arq_attempts`/`arq_min_f2`),
+    so the fused path runs the SAME link the two-party protocol does.
+    The drawn retransmission counts cannot escape the jitted step;
+    accounting replays them outside via `wire.drawn_tree_tx` (see
+    schemes/split.py `sl_cycle_drawn_tx`).
     """
     return W.transmit_tree(key, x, bits=bits, snr_db=snr_db, fading=fading,
-                           perfect=perfect)
+                           perfect=perfect, arq_attempts=arq_attempts,
+                           arq_min_f2=arq_min_f2)
 
 
-def _cc_fwd(x, key, bits, snr_db, fading, grad_clip, perfect):
-    return channel_crossing(x, key, bits, snr_db, fading, grad_clip, perfect), key
+def _cc_fwd(x, key, bits, snr_db, fading, grad_clip, perfect,
+            arq_attempts, arq_min_f2):
+    return channel_crossing(x, key, bits, snr_db, fading, grad_clip,
+                            perfect, arq_attempts, arq_min_f2), key
 
 
-def _cc_bwd(bits, snr_db, fading, grad_clip, perfect, key, g):
+def _cc_bwd(bits, snr_db, fading, grad_clip, perfect, arq_attempts,
+            arq_min_f2, key, g):
     from repro.optim.clip import clip_array_by_norm
     g = clip_array_by_norm(g, grad_clip)
     g_hat = W.transmit_tree(jax.random.fold_in(key, 1), g, bits=bits,
-                            snr_db=snr_db, fading=fading, perfect=perfect)
+                            snr_db=snr_db, fading=fading, perfect=perfect,
+                            arq_attempts=arq_attempts,
+                            arq_min_f2=arq_min_f2)
     # receiver-side re-clip: a deep Rayleigh fade flips high-order bits
     # and can blow the received norm to tau*sqrt(N); the receiver knows
     # tau, so clipping again on arrival bounds the impulse (without it,

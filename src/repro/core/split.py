@@ -34,7 +34,8 @@ def init_codec(key, cfg, wcfg):
 def _link(codec, x, wcfg, key):
     z = semantic.encode(codec, x)
     z = channel_crossing(z, key, wcfg.quant_bits, wcfg.snr_db, wcfg.fading,
-                         wcfg.grad_clip, wcfg.perfect_channel)
+                         wcfg.grad_clip, wcfg.perfect_channel,
+                         wcfg.arq_attempts, wcfg.arq_min_f2)
     return semantic.decode(codec, z)
 
 

@@ -190,6 +190,25 @@ def expected_arq_tx(attempts: int = 1, min_f2: float = 0.25,
     return (1.0 - p_out ** attempts) / (1.0 - p_out)
 
 
+def drawn_tree_tx(key, n_packets: int = 1, fading: bool = True,
+                  perfect: bool = False, arq_attempts: int = 1,
+                  arq_min_f2: float = 0.25):
+    """Total DRAWN transmissions of a `transmit_tree(key, tree, ...)`
+    call whose tree has `n_packets` leaves, WITHOUT transmitting: the
+    per-packet fade/ARQ redraw is a pure function of the key (same
+    `split`, same uniform stream as `_packet_fades`), so a crossing
+    that happened inside a jitted train step — where the diagnostics
+    cannot escape — can still be billed at its actual retransmission
+    cost by replaying the draw outside. Returns an int32 scalar
+    (vmap-friendly); equals `n_packets` without ARQ/fading."""
+    if perfect or not fading or arq_attempts <= 1:
+        return jnp.int32(n_packets)
+    kf, _ = jax.random.split(key)
+    _, n_tx = _packet_fades(kf, 1, n_packets, fading, arq_attempts,
+                            arq_min_f2)
+    return n_tx.sum().astype(jnp.int32)
+
+
 def payload_bits(tree, bits: int, expected_tx: float = 1.0) -> float:
     """On-air payload of transmitting every leaf of `tree` at b-bit
     quantization, scaled by the expected (ARQ) transmission count.

@@ -22,6 +22,8 @@ dry-run lowers with the pod axis as the user/server boundary.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 
 from repro.core import semantic
@@ -137,9 +139,16 @@ class SLSession:
                                self.lr if lr is None else lr)
 
     # ----------------------------------------------------------- infer
-    def predict(self, tokens, key) -> jax.Array:
-        """Full inference pass through the deployed split (radio included)."""
-        up = self.user_uplink(tokens, key)
-        self.total_bits -= up.bits          # inference not counted as train
+    def predict(self, tokens, key, perfect: bool = False) -> jax.Array:
+        """Full inference pass through the deployed split, radio
+        included — the SL eval convention (schemes/split.py
+        `evaluate_sl`). `perfect=True` is the `perfect_eval` escape
+        hatch: a noiseless (still quantized) link. Inference is not
+        billed as training traffic."""
+        _, z = self._jit_user_fwd(self.user_params, self.user_codec,
+                                  tokens)
+        radio = (dataclasses.replace(self.radio, perfect=True)
+                 if perfect else self.radio)
+        up = radio.send_tree(key, z)
         smashed_hat = semantic.decode(self.server_codec, up.payload)
         return lstm_tiny.server_forward(self.server_params, smashed_hat)

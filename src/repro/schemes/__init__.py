@@ -11,11 +11,12 @@ from repro.schemes.base import (BATCH, CFG, LR0, LR_DECAY, LR_EVERY,
                                 MOMENTUM, N_TEST, N_TRAIN, ClientReport,
                                 RoundReport, RunResult, Scheme,
                                 SchemeState, batches_of, corpus, evaluate,
-                                lr_at, step_flops, train_shape,
-                                user_side_flops_sl)
+                                lr_at, step_flops, train_cycle,
+                                train_shape, user_side_flops_sl)
 from repro.schemes.centralized import CentralizedScheme
 from repro.schemes.federated import FederatedScheme
-from repro.schemes.population import ClientSpec, PopulationScheme
+from repro.schemes.population import (ClientSpec, ParticipationPolicy,
+                                      PopulationScheme)
 from repro.schemes.radio import Delivery, Radio
 from repro.schemes.run import Experiment, build_scheme
 from repro.schemes.split import SplitScheme, evaluate_sl
@@ -24,8 +25,8 @@ __all__ = [
     "BATCH", "CFG", "LR0", "LR_DECAY", "LR_EVERY", "MOMENTUM", "N_TEST",
     "N_TRAIN", "ClientReport", "RoundReport", "RunResult", "Scheme",
     "SchemeState", "batches_of", "corpus", "evaluate", "lr_at",
-    "step_flops", "train_shape", "user_side_flops_sl",
+    "step_flops", "train_cycle", "train_shape", "user_side_flops_sl",
     "CentralizedScheme", "FederatedScheme", "SplitScheme", "evaluate_sl",
-    "ClientSpec", "PopulationScheme", "Delivery", "Radio", "Experiment",
-    "build_scheme",
+    "ClientSpec", "ParticipationPolicy", "PopulationScheme", "Delivery",
+    "Radio", "Experiment", "build_scheme",
 ]

@@ -78,6 +78,24 @@ def batches_of(x: np.ndarray, y: np.ndarray, batch: int,
         yield {"tokens": jnp.asarray(x[s]), "labels": jnp.asarray(y[s])}
 
 
+# ------------------------------------------------------------------- cycle
+def train_cycle(step, train_state, batches, key, steps: int, on_step=None):
+    """One client's training cycle: every batch through the jitted
+    `step`, per-step keys folded from the client's CUMULATIVE step
+    counter — the one epoch-loop shape shared by the CL round, the
+    fused SL round, and every member of a `PopulationScheme` fleet
+    (identical fold stream => the degenerate-population parity holds
+    bit-for-bit). Returns (state, last_metrics, steps)."""
+    m = None
+    for b in batches:
+        kb = jax.random.fold_in(key, steps)
+        train_state, m = step(train_state, b, kb)
+        if on_step is not None:
+            on_step(steps, train_state, b, kb)
+        steps += 1
+    return train_state, m, steps
+
+
 # --------------------------------------------------------------------- eval
 @functools.lru_cache(maxsize=8)
 def _eval_fn():
@@ -162,31 +180,41 @@ class ClientReport:
     """One client's slice of a population round (heterogeneous fleets:
     schemes/population.py). `bits`/`n_tx`/`energy_j` are what crossed
     THIS client's own Radio; `weight` is the sample-count aggregation
-    weight its update carried into the mixed FedAvg."""
+    weight its update carried into the mixed FedAvg (renormalized over
+    this round's participants; 0 for clients that sat the round out).
+
+    Fleet dynamics (docs/ACCOUNTING.md §Fleet): `status` is "ok" for a
+    participant, "sampled_out" when the round's `ParticipationPolicy`
+    left the client unsampled, "straggler" when its estimated round
+    time exceeded the deadline — both non-participant cases are billed
+    as zero-bit, zero-energy, zero-step rounds. `est_round_s` is the
+    deadline model's estimate (compute + payload/link-rate) for the
+    radio-bearing paradigms, 0.0 when no deadline model applies."""
     name: str
-    paradigm: str           # "fl" | "sl"
+    paradigm: str           # "fl" | "sl" | "cl"
     loss: float
     steps: int              # optimizer steps this client took this round
     bits: float = 0.0
     n_tx: float = 0.0
     energy_j: float = 0.0
     weight: float = 0.0
+    status: str = "ok"      # "ok" | "sampled_out" | "straggler"
+    est_round_s: float = 0.0
 
 
 @dataclasses.dataclass
 class RoundReport:
     """Accounting of ONE communication cycle of any scheme.
 
-    `n_tx` is the DRAWN transmission count wherever the wire surfaces
-    it (FL's stacked sync, two-party SL legs, CL's per-row uplink); the
-    FUSED SL path reports the analytic expectation instead — its
-    crossings live inside the jitted train step (`channel_crossing`),
-    which exposes no per-step diagnostics AND does not simulate ARQ at
-    all (the redraw knobs stop at the wire call), so under
-    arq_attempts > 1 its n_tx is the E[tx] of the link the two-party
-    protocol actually runs while its bits/energy stay unscaled (ROADMAP
-    open item). Cross-paradigm comparisons are exact only without ARQ,
-    where both counts equal one transmission per packet.
+    `n_tx` is the DRAWN transmission count everywhere (docs/
+    ACCOUNTING.md): FL's stacked sync, two-party SL legs, and CL's
+    per-row uplink surface it from the wire directly; the FUSED SL
+    path — whose crossings live inside the jitted train step
+    (`channel_crossing`) and expose no diagnostics — replays the
+    fade/ARQ draw outside the jit (`split.sl_cycle_drawn_tx`) and
+    bills bits/energy scaled by the same drawn counts, matching the
+    two-party protocol. The one remaining expectation-billed path is
+    FL's DP sync (no per-packet diagnostics from the DP upload).
 
     For a heterogeneous population round, the scheme-level fields are
     fleet totals (weighted mean for `loss`) and `clients` carries the

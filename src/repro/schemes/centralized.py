@@ -6,6 +6,8 @@ One `round` = one server epoch over the (possibly corrupted) corpus.
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -13,8 +15,18 @@ import numpy as np
 from repro.runtime.train_step import init_train_state, make_train_step
 from repro.schemes.base import (BATCH, CFG, MOMENTUM, RoundReport,
                                 SchemeState, batches_of, evaluate,
-                                step_flops, train_shape)
+                                step_flops, train_cycle, train_shape)
 from repro.schemes.radio import Radio
+
+
+@functools.lru_cache(maxsize=32)
+def cl_train_step(lr: float):
+    """ONE jitted no-radio train step per lr — the CL round body, shared
+    by `CentralizedScheme` and a `PopulationScheme`'s CL members (their
+    server-side epochs run the identical executable)."""
+    return jax.jit(make_train_step(CFG, train_shape(), None,
+                                   optimizer="sgd", lr=lr,
+                                   momentum=MOMENTUM))
 
 
 class CentralizedScheme:
@@ -27,7 +39,6 @@ class CentralizedScheme:
         self.radio = Radio.from_wcfg(wcfg)
         self.capture = capture
         self.captures: dict = {}
-        self._steps: dict = {}          # lr -> jitted train step
 
     # ------------------------------------------------------------- setup
     def init(self, seed: int, xtr, ytr):
@@ -50,19 +61,9 @@ class CentralizedScheme:
         return jax.random.PRNGKey(seed + 2)
 
     # ------------------------------------------------------------- round
-    def _step_for(self, lr: float):
-        if lr not in self._steps:
-            self._steps[lr] = jax.jit(make_train_step(
-                CFG, train_shape(), None, optimizer="sgd", lr=lr,
-                momentum=MOMENTUM))
-        return self._steps[lr]
-
     def round(self, state, batch, key, lr):
-        step = self._step_for(lr)
-        st, steps, m = state.train, state.steps, None
-        for b in batch:
-            st, m = step(st, b, jax.random.fold_in(key, steps))
-            steps += 1
+        st, m, steps = train_cycle(cl_train_step(lr), state.train, batch,
+                                   key, state.steps)
         new = SchemeState(st, state.data, steps, state.epoch + 1)
         # the data upload was charged at init; rounds are radio-silent
         return new, RoundReport(loss=float(m["loss"]),

@@ -90,13 +90,31 @@ def fl_upload(radio, key, user_params):
     return radio.send_stacked(jax.random.fold_in(key, 999), user_params)
 
 
-def _flat_uploads(received, pre_broadcast):
-    """[N, P] received weight-delta (vs the cycle's broadcast weights)."""
+def flat_uploads(received, pre_broadcast):
+    """[N, P] received weight-delta (vs the cycle's broadcast weights) —
+    the observation the FL privacy capture records from the SAME
+    stacked channel pass the sync consumes (so capturing never
+    perturbs the trajectory)."""
     pre_leaves = jax.tree.leaves(pre_broadcast)
     rx_leaves = jax.tree.leaves(received)
     return np.asarray(jnp.concatenate(
         [(r - p[None]).reshape(r.shape[0], -1)
          for r, p in zip(rx_leaves, pre_leaves)], axis=1))
+
+
+def fl_capture(captures, received, broadcast, user_tokens):
+    """Record one FL sync's privacy observations: the received weight
+    deltas off the upload pass itself (`flat_uploads`) and, as the
+    reconstruction target, each user's mean normalized token vector
+    (the update aggregates the whole local dataset). `user_tokens` is
+    the round's token batch per captured user, leading user axis. The
+    ONE definition of the FL reconstruction study's (observation,
+    target) pair — `FederatedScheme` and `PopulationScheme` must stay
+    in lockstep or the pure-FL and mixed-fleet studies measure
+    different things."""
+    captures["deltas"].append(flat_uploads(received, broadcast))
+    captures["targets"].append(np.stack(
+        [t.reshape(-1, t.shape[-1]).mean(0) for t in user_tokens]))
 
 
 class FederatedScheme:
@@ -190,13 +208,9 @@ class FederatedScheme:
         else:
             dlv = fl_upload(self.radio, key, user_params)
             if self.capture:
-                self.captures["deltas"].append(
-                    _flat_uploads(dlv.payload, broadcast))
-                # target: the mean normalized token vector of the user's
-                # shard (the update aggregates the whole local dataset)
-                self.captures["targets"].append(np.stack(
-                    [batch["tokens"][u].reshape(-1, batch["tokens"].shape[-1])
-                     .mean(0) for u in range(self.n_users)]))
+                fl_capture(self.captures, dlv.payload, broadcast,
+                           [batch["tokens"][u]
+                            for u in range(self.n_users)])
             if getattr(self.wcfg, "aggregate", "mean") == "median":
                 avg = jax.tree.map(lambda r: jnp.median(r, axis=0),
                                    dlv.payload)

@@ -1,49 +1,79 @@
-"""Heterogeneous client populations: per-client `Radio`, mixed FL/SL
-aggregation, one `Experiment`.
+"""Heterogeneous client fleets: per-client `Radio`, mixed CL/FL/SL
+aggregation, fleet dynamics — one `Experiment`.
 
 The paper compares CL/FL/SL as three homogeneous populations on one
-shared channel. A deployed fleet is not that: every device has its own
-link budget (SNR, fading, quantizer) and compute class (full local
-training vs a split cycle), and the server aggregates across paradigms
-— SEMFED's semantic-aware heterogeneous-client FL (PAPERS.md). This
+shared channel, every device participating in every round. A deployed
+fleet is not that: every device has its own link budget (SNR, fading,
+quantizer) and compute class (raw upload vs full local training vs a
+split cycle), the server samples a SUBSET of clients per round
+(FedNLP's partial-participation benchmarks), and devices that cannot
+finish inside the round deadline are dropped as stragglers. This
 module makes that fleet a first-class `Scheme`:
 
     base = WirelessConfig(quant_bits=8)
     clients = [ClientSpec.fl(base, snr_db=20.0),
                ClientSpec.fl(base, snr_db=6.0, quant_bits=4),
                ClientSpec.sl(base, snr_db=12.0, quant_bits=16),
-               ClientSpec.sl(base, snr_db=0.0)]
-    res = Experiment(build_scheme(base, clients=clients), cycles=7).run()
+               ClientSpec.cl(base, snr_db=18.0)]
+    scheme = build_scheme(base, clients=clients,
+                          policy=ParticipationPolicy.uniform(2),
+                          deadline_s=120.0)
+    res = Experiment(scheme, cycles=7).run()
 
 One round:
 
-1. every FL client runs its J local epochs from the current global
-   model and uploads its weights through ITS OWN radio (clients with
-   identical (radio, steps-per-round) are grouped so the upload stays
-   one fused packed-wire pass per group — `fl_local_phase`/`fl_upload`,
-   the round bodies factored out of `FederatedScheme`);
-2. every SL client runs one split cycle (`sl_cycle`, factored out of
-   `SplitScheme`) against the shared server trunk, its activation and
-   gradient legs billed through its own radio at its own quantizer;
-3. mixed aggregation: sample-count-weighted FedAvg over the clients'
-   resulting full models —
+0. the round's `ParticipationPolicy` draws the active subset from its
+   own key stream (`fold_in(PRNGKey(seed + 5), cycle)` — seed-
+   deterministic, disjoint from every training stream); then the
+   deadline model estimates each active radio-bearing client's round
+   time (compute + payload / link rate, `Radio.rate_bps`) and drops
+   stragglers over `deadline_s`. Dropped clients — sampled-out or
+   straggling — are billed as ZERO-bit, zero-energy, zero-step rounds
+   in their `ClientReport` (`status` records why);
+1. every active FL client runs its J local epochs from the current
+   global model and uploads its weights through ITS OWN radio (clients
+   with identical (radio, steps-per-round) are grouped so the upload
+   stays one fused packed-wire pass per group — `fl_local_phase` /
+   `fl_upload`, the round bodies factored out of `FederatedScheme`);
+2. every active SL client runs one split cycle (`sl_cycle`, factored
+   out of `SplitScheme`) against the shared server trunk, its
+   activation and gradient legs billed through its own radio at its
+   own quantizer (DRAWN ARQ counts via `sl_cycle_drawn_tx`);
+3. every active CL member's server-side shard — its raw corpus crossed
+   the radio ONCE at `init` (billed there, like `CentralizedScheme`) —
+   is trained for its epochs on the server (`cl_train_step`); its
+   rounds are radio-silent;
+4. mixed aggregation: sample-count-weighted FedAvg over the round's
+   PARTICIPANTS' resulting full models —
 
-       theta <- sum_c (n_c / sum n) * theta_c
+       theta <- sum_{c in active} (n_c / sum_active n) * theta_c
 
-   where theta_c is the channel-RECEIVED weights for an FL client and
-   the post-cycle weights for an SL client (user part updated on
-   device, trunk updated server-side; the weights themselves never
-   cross the radio). The semantic codec is averaged over SL clients
-   only (FL clients neither hold nor train one), with weights
-   renormalized among them.
+   where theta_c is the channel-RECEIVED weights for an FL client, the
+   post-cycle weights for an SL client (user part updated on device,
+   trunk updated server-side; the weights themselves never cross the
+   radio), and the post-epoch server-side weights for a CL member. The
+   semantic codec is averaged over the round's SL participants only,
+   weights renormalized among them (unchanged when none participate).
+   Everyone — participant or not — re-anchors on the new global model
+   (the downlink broadcast is unbilled, the paper's convention).
+
+With `capture=True` the privacy observations ride the SAME passes the
+round already makes, so capturing never perturbs the trajectory: FL
+deltas/targets from the stacked sync upload (`fl_capture`), SL
+smashed/original pairs from a separate observation key
+(`capture_every` steps apart), CL received/original corpora at init.
+Keys in `captures`: "deltas"/"targets" (FL), "smashed"/"original"
+(SL), "cl_received"/"cl_original" (CL).
 
 Every crossing lands in one `RoundReport` whose `clients` tuple carries
 the per-client breakdown (`ClientReport`: bits / n_tx / energy / loss /
-weight). Degenerate populations reproduce the pure schemes bit-for-bit:
+weight / status / est_round_s). Degenerate fleets — full participation,
+no deadline, no CL members — reproduce the pure schemes bit-for-bit:
 all-FL with one (radio, J) group runs the identical vmapped local phase
 and stacked upload on the identical RNG stream as `FederatedScheme`;
 all-SL with one client is `SplitScheme`'s fused loop (pinned against
-the same goldens in tests/test_scheme_parity.py).
+the same goldens in tests/test_scheme_parity.py). Billing rules:
+docs/ACCOUNTING.md; layer map: docs/ARCHITECTURE.md.
 """
 from __future__ import annotations
 
@@ -58,28 +88,94 @@ from repro.configs.base import WirelessConfig
 from repro.runtime.train_step import TrainState, init_train_state
 from repro.schemes.base import (BATCH, CFG, ClientReport, RoundReport,
                                 SchemeState, batches_of, evaluate,
-                                step_flops, user_side_flops_sl)
-from repro.schemes.federated import (draw_local_epochs, fl_local_phase,
-                                     fl_upload)
-from repro.schemes.radio import Radio
-from repro.schemes.split import (_wcfg_key, evaluate_sl, sl_bits_per_step,
-                                 sl_cycle, sl_train_step)
+                                step_flops, train_cycle,
+                                user_side_flops_sl)
+from repro.schemes.centralized import cl_train_step
+from repro.schemes.federated import (draw_local_epochs, fl_capture,
+                                     fl_local_phase, fl_upload)
+from repro.schemes.radio import Delivery, Radio
+from repro.schemes.split import (_sl_observe_fn, _wcfg_key, evaluate_sl,
+                                 sl_bits_per_step, sl_cycle,
+                                 sl_cycle_drawn_tx, sl_train_step)
+
+
+@dataclasses.dataclass(frozen=True)
+class ParticipationPolicy:
+    """Which clients take part in a round (fleet partial participation).
+
+    Three kinds, built with the classmethod constructors:
+
+    * ``ParticipationPolicy.full()`` — every client, every round (the
+      paper's setting and the default; degenerate fleets stay bit-for-
+      bit with the pure schemes because no policy RNG is drawn at all);
+    * ``ParticipationPolicy.uniform(k)`` — exactly ``k`` clients drawn
+      uniformly without replacement each round (FedAvg's classic
+      client sampling);
+    * ``ParticipationPolicy.bernoulli(p)`` — each client independently
+      with probability ``p`` (a round CAN end up empty: the global
+      model is then unchanged and every report bills zero).
+
+    The round's subset is drawn from ``fold_in(PRNGKey(seed + 5),
+    cycle)`` — seeded from the Experiment seed, disjoint from the data
+    / channel / step key streams, so sampling is reproducible per seed
+    and independent of fleet composition."""
+    kind: str = "full"          # "full" | "uniform" | "bernoulli"
+    k: int = 0                  # uniform: clients per round
+    p: float = 1.0              # bernoulli: per-client probability
+
+    @classmethod
+    def full(cls) -> "ParticipationPolicy":
+        return cls("full")
+
+    @classmethod
+    def uniform(cls, k: int) -> "ParticipationPolicy":
+        return cls("uniform", k=int(k))
+
+    @classmethod
+    def bernoulli(cls, p: float) -> "ParticipationPolicy":
+        return cls("bernoulli", p=float(p))
+
+    def validate(self, n_clients: int) -> None:
+        if self.kind not in ("full", "uniform", "bernoulli"):
+            raise ValueError(f"unknown participation kind {self.kind!r}")
+        if self.kind == "uniform" and not 1 <= self.k <= n_clients:
+            raise ValueError(
+                f"uniform-k sampling needs 1 <= k <= {n_clients} "
+                f"clients, got k={self.k}")
+        if self.kind == "bernoulli" and not 0.0 < self.p <= 1.0:
+            raise ValueError(
+                f"bernoulli sampling needs 0 < p <= 1, got p={self.p}")
+
+    def active(self, key, n: int) -> np.ndarray:
+        """Boolean participation mask for one round ([n], host-side)."""
+        if self.kind == "full":
+            return np.ones(n, bool)
+        if self.kind == "uniform":
+            idx = np.asarray(jax.random.choice(key, n, (self.k,),
+                                               replace=False))
+            mask = np.zeros(n, bool)
+            mask[idx] = True
+            return mask
+        return np.asarray(jax.random.bernoulli(key, self.p, (n,)))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class ClientSpec:
     """One device of a heterogeneous population: its paradigm, its own
     channel (a per-client `WirelessConfig` -> `Radio`), its local-epoch
-    count, and its data shard (explicit arrays, an `n_samples` slice of
-    the corpus, or 0 = an equal share). Build with the `fl`/`sl`
-    constructors: keyword overrides are WirelessConfig fields applied on
-    top of the shared base config."""
-    paradigm: str                     # "fl" | "sl"
+    count, its data shard (explicit arrays, an `n_samples` slice of
+    the corpus, or 0 = an equal share), and its compute class
+    (`compute_s_per_step`, seconds per optimizer step — the deadline
+    model's compute term; 0 = compute-free, comm-bound). Build with
+    the `fl`/`sl`/`cl` constructors: keyword overrides are
+    WirelessConfig fields applied on top of the shared base config."""
+    paradigm: str                     # "fl" | "sl" | "cl"
     wcfg: WirelessConfig              # this client's channel knobs
-    local_epochs: int = 1             # J for FL; epochs per round for SL
+    local_epochs: int = 1             # J for FL; epochs per round for SL/CL
     n_samples: int = 0                # shard size (0 = equal share)
     name: str = ""
     shard: Optional[tuple] = None     # explicit (x, y) data override
+    compute_s_per_step: float = 0.0   # device seconds per optimizer step
 
     @property
     def radio(self) -> Radio:
@@ -88,20 +184,37 @@ class ClientSpec:
     @classmethod
     def fl(cls, base: Optional[WirelessConfig] = None, local_epochs: int = 0,
            n_samples: int = 0, name: str = "", shard=None,
-           **overrides) -> "ClientSpec":
+           compute_s_per_step: float = 0.0, **overrides) -> "ClientSpec":
         wcfg = dataclasses.replace(base or WirelessConfig(mode="fl"),
                                    mode="fl", **overrides)
         return cls("fl", wcfg, local_epochs or wcfg.local_steps,
-                   n_samples, name, shard)
+                   n_samples, name, shard, compute_s_per_step)
 
     @classmethod
     def sl(cls, base: Optional[WirelessConfig] = None,
            local_epochs: int = 1, n_samples: int = 0, name: str = "",
-           shard=None, **overrides) -> "ClientSpec":
+           shard=None, compute_s_per_step: float = 0.0,
+           **overrides) -> "ClientSpec":
         wcfg = dataclasses.replace(
             base or WirelessConfig(mode="sl", quant_bits=16),
             mode="sl", **overrides)
-        return cls("sl", wcfg, local_epochs, n_samples, name, shard)
+        return cls("sl", wcfg, local_epochs, n_samples, name, shard,
+                   compute_s_per_step)
+
+    @classmethod
+    def cl(cls, base: Optional[WirelessConfig] = None,
+           local_epochs: int = 1, n_samples: int = 0, name: str = "",
+           shard=None, compute_s_per_step: float = 0.0,
+           **overrides) -> "ClientSpec":
+        """A raw-upload member: its corpus crosses its radio ONCE at
+        init (bit errors corrupt token ids — the paper's CL), then its
+        shard lives server-side and is trained there every round it
+        participates. No per-round radio traffic, so the deadline
+        model never drops it."""
+        wcfg = dataclasses.replace(base or WirelessConfig(mode="cl"),
+                                   mode="cl", **overrides)
+        return cls("cl", wcfg, local_epochs, n_samples, name, shard,
+                   compute_s_per_step)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,25 +233,28 @@ class _PopState:
     sl_steps: list                    # per SL client: cumulative steps
     global_trainable: dict            # aggregated {"model", "codec"}
     client_steps: list                # cumulative optimizer steps each
+    cl_states: list                   # per CL member: TrainState
+    cl_steps: list                    # per CL member: cumulative steps
 
 
 class PopulationScheme:
     """A heterogeneous client fleet behind the standard Scheme protocol
     — `Experiment` drives it unchanged (that is the point of PR 2's
-    boundary). See the module docstring for the round structure and the
-    mixed-aggregation rule."""
+    boundary). See the module docstring for the round structure, the
+    fleet dynamics (sampling / stragglers / capture / CL members) and
+    the mixed-aggregation rule."""
     mode = "population"
 
     def __init__(self, wcfg=None, clients: Sequence[ClientSpec] = (),
-                 capture: bool = False):
+                 capture: bool = False, capture_every: int = 8,
+                 policy: Optional[ParticipationPolicy] = None,
+                 deadline_s: Optional[float] = None,
+                 perfect_eval: bool = False):
         if not clients:
             raise ValueError("PopulationScheme needs at least one "
                              "ClientSpec")
-        if capture:
-            raise ValueError("capture is not supported for population "
-                             "runs; capture on the pure scheme instead")
         for spec in clients:
-            if spec.paradigm not in ("fl", "sl"):
+            if spec.paradigm not in ("fl", "sl", "cl"):
                 raise ValueError(f"unknown paradigm {spec.paradigm!r}")
         self.wcfg = wcfg or WirelessConfig(mode="fl")
         for cfg in [self.wcfg] + [s.wcfg for s in clients]:
@@ -148,35 +264,48 @@ class PopulationScheme:
                     "aggregate='median' is not supported (base or "
                     "per-client override)")
         self.clients = tuple(clients)
+        self.policy = policy or ParticipationPolicy.full()
+        self.policy.validate(len(self.clients))
+        self.deadline_s = deadline_s
+        self.perfect_eval = perfect_eval
         self.radio = Radio.from_wcfg(self.wcfg)    # server-side reference
         self._sl_idx = [i for i, s in enumerate(self.clients)
                         if s.paradigm == "sl"]
         self._fl_idx = [i for i, s in enumerate(self.clients)
                         if s.paradigm == "fl"]
+        self._cl_idx = [i for i, s in enumerate(self.clients)
+                        if s.paradigm == "cl"]
         cfs = {self.clients[i].wcfg.compress_factor for i in self._sl_idx}
         if len(cfs) > 1:
             raise ValueError("SL clients must share compress_factor "
                              f"(one codec shape), got {sorted(cfs)}")
-        # the eval-time deployed function: codec + noiseless link, but
-        # quantization stays active — pin it to the fleet's highest-
-        # fidelity SL quantizer so accuracy does not depend on which SL
-        # client happens to be listed first
+        # the eval-time deployed function runs the REAL channel (SL eval
+        # convention, schemes/split.py) — pin it to the fleet's highest-
+        # fidelity SL link (max quantizer, max SNR) so accuracy does not
+        # depend on which SL client happens to be listed first
         self._sl_wcfg = (dataclasses.replace(
             self.clients[self._sl_idx[0]].wcfg,
             quant_bits=max(self.clients[i].wcfg.quant_bits
-                           for i in self._sl_idx))
+                           for i in self._sl_idx),
+            snr_db=max(self.clients[i].wcfg.snr_db for i in self._sl_idx))
             if self._sl_idx else None)
         # lr schedule: one Experiment cycle advances the fleet by the
         # largest per-client epoch count, so degenerate populations keep
         # the pure schemes' schedule (J for all-FL, 1 for all-SL)
         self.epochs_per_cycle = max(s.local_epochs for s in self.clients)
         # pure-FL convention is per-user bits (paper tables); mixed and
-        # SL-bearing fleets report TOTAL system bits — the per-client
+        # SL/CL-bearing fleets report TOTAL system bits — the per-client
         # split lives in RoundReport.clients
         self.bits_normalizer = (float(len(self.clients))
-                                if not self._sl_idx else 1.0)
+                                if not self._sl_idx and not self._cl_idx
+                                else 1.0)
+        self.capture = capture
+        self.capture_every = capture_every
         self.captures: dict = {}
+        self._sl_cap_fns = ([_sl_observe_fn(self.clients[i].wcfg)
+                             for i in self._sl_idx] if capture else [])
         self._key_ctx = None
+        self._est_round_s: Optional[list] = None
         self._final_client_steps = [0] * len(self.clients)
 
     # ------------------------------------------------------------- setup
@@ -211,10 +340,44 @@ class PopulationScheme:
                     f"{len(xs)} samples < one batch ({BATCH})")
         return shards
 
+    def _estimate_round_s(self, i: int) -> float:
+        """The deadline model: one round's estimated wall seconds for
+        client i — local compute (steps x compute_s_per_step) plus the
+        round's expected on-air payload over this client's expected
+        link rate (`Radio.rate_bps`). No deadline model applies to CL
+        members — their rounds are radio-silent and the per-round
+        compute is the SERVER's — so their estimate is 0.0 and they
+        are never droppable. Deterministic per client, so the same
+        fleet drops the same stragglers every round."""
+        spec = self.clients[i]
+        radio = spec.radio
+        steps = spec.local_epochs * self._spe[i]
+        comp = steps * spec.compute_s_per_step
+        if spec.paradigm == "fl":
+            bits = (float(self._model_elems) * radio.quant_bits
+                    * radio.expected_tx())
+        elif spec.paradigm == "sl":
+            bits = (steps * sl_bits_per_step(spec.wcfg, radio.quant_bits)
+                    * radio.expected_tx())
+        else:            # cl: billed at init, rounds radio-silent,
+            return 0.0   # compute server-side — no deadline applies
+        return comp + bits / radio.rate_bps()
+
+    def estimated_round_s(self, i: int) -> float:
+        """Client i's deadline-model round-time estimate (post-init)."""
+        if self._est_round_s is None:
+            raise RuntimeError("estimated_round_s needs init() first "
+                               "(shard sizes fix the steps per round)")
+        return self._est_round_s[i]
+
     def init(self, seed: int, xtr, ytr):
         xtr, ytr = np.asarray(xtr), np.asarray(ytr)
         shards = self._shards_for(xtr, ytr)
         self._spe = [len(xs) // BATCH for xs, _ in shards]
+        if self.capture:
+            self.captures = {"deltas": [], "targets": [], "smashed": [],
+                             "original": [], "cl_received": [],
+                             "cl_original": []}
         # group FL clients by (radio, steps-per-round): rectangular
         # batches for the vmapped local phase, one stacked upload each
         groups, by_key = [], {}
@@ -235,23 +398,58 @@ class PopulationScheme:
         if self._sl_idx:
             sl_full = init_train_state(jax.random.PRNGKey(seed), CFG,
                                        self._sl_wcfg, "sgd")
+        self._model_elems = sum(int(l.size) for l in jax.tree.leaves(
+            fl_full.trainable["model"]))
+        self._est_round_s = [self._estimate_round_s(i)
+                             for i in range(len(self.clients))]
+
+        # CL members: the raw corpus crosses each member's OWN radio
+        # once, billed here (the one CL convention — perfect links are
+        # noiseless, not free); the received (possibly corrupted) shard
+        # is what the server trains on. Key stream mirrors
+        # CentralizedScheme's PRNGKey(seed + 7) upload key.
+        init_dlv = None
+        if self._cl_idx:
+            k7 = jax.random.PRNGKey(seed + 7)
+            bits = energy = n_tx = 0.0
+            for ci, i in enumerate(self._cl_idx):
+                spec = self.clients[i]
+                kc = k7 if ci == 0 else jax.random.fold_in(k7, 500 + ci)
+                xs, ys = shards[i]
+                dlv = spec.radio.send_tokens(kc, jnp.asarray(xs),
+                                             CFG.vocab_size, labels=ys)
+                rx = np.asarray(dlv.payload)
+                if self.capture:
+                    self.captures["cl_received"].append(rx.copy())
+                    self.captures["cl_original"].append(
+                        np.asarray(xs).copy())
+                shards[i] = (rx, np.asarray(ys))
+                bits += dlv.bits
+                energy += dlv.energy_j
+                n_tx += dlv.n_tx
+            init_dlv = Delivery(None, bits, energy, n_tx)
+
         group_states = [
             jax.tree.map(lambda p: jnp.broadcast_to(
                 p, (len(g.members),) + p.shape), fl_full)
             for g in self._groups]
         sl_states = [sl_full for _ in self._sl_idx]
+        cl_states = [fl_full for _ in self._cl_idx]
         glob = {"model": fl_full.trainable["model"],
                 "codec": (sl_full.trainable["codec"] if self._sl_idx
                           else {})}
         pop = _PopState(group_states, sl_states, [0] * len(self._sl_idx),
-                        glob, [0] * len(self.clients))
-        return SchemeState(train=pop, data=shards), None
+                        glob, [0] * len(self.clients), cl_states,
+                        [0] * len(self._cl_idx))
+        return SchemeState(train=pop, data=shards), init_dlv
 
     def cycle_batches(self, state, rng, cycle):
         """Per-client cycle data, drawn in population order from the ONE
         experiment rng — an all-FL population consumes the stream
         exactly as `FederatedScheme.cycle_batches` (per-user epoch
-        loops), an all-SL one exactly as `SplitScheme` (one epoch)."""
+        loops), an all-SL one exactly as `SplitScheme` (one epoch).
+        Data is drawn for EVERY client, participant or not, so the
+        stream does not depend on the round's sampling draw."""
         out = []
         for i, spec in enumerate(self.clients):
             xu, yu = state.data[i]
@@ -267,11 +465,35 @@ class PopulationScheme:
         return out
 
     def round_key(self, seed: int, cycle: int):
-        # the FL stream (matches FederatedScheme for group 0); the SL
-        # clients' PRNGKey(seed+2) stream is derived in round() from the
-        # (seed, cycle) stashed here
+        # the FL stream (matches FederatedScheme for group 0); the SL/CL
+        # clients' PRNGKey(seed+2) streams and the participation stream
+        # PRNGKey(seed+5) are derived in round() from the (seed, cycle)
+        # stashed here
         self._key_ctx = (seed, cycle)
         return jax.random.fold_in(jax.random.PRNGKey(seed + 3), cycle)
+
+    # --------------------------------------------------- fleet dynamics
+    def _participants(self, seed: int, cycle: int):
+        """The round's participation mask + per-client status: the
+        policy samples first (its own key stream), then the deadline
+        model drops active radio-bearing stragglers."""
+        n = len(self.clients)
+        status = ["ok"] * n
+        if self.policy.kind == "full":
+            part = np.ones(n, bool)     # no policy RNG drawn at all
+        else:
+            pk = jax.random.fold_in(jax.random.PRNGKey(seed + 5), cycle)
+            part = np.asarray(self.policy.active(pk, n)).copy()
+            for i in range(n):
+                if not part[i]:
+                    status[i] = "sampled_out"
+        if self.deadline_s is not None:
+            for i in range(n):
+                if (part[i] and self.clients[i].paradigm in ("fl", "sl")
+                        and self._est_round_s[i] > self.deadline_s):
+                    part[i] = False
+                    status[i] = "straggler"
+        return part, status
 
     # ------------------------------------------------------------- round
     def _aggregate(self, trees, weights):
@@ -285,32 +507,61 @@ class PopulationScheme:
             lambda s: jnp.tensordot(w, s.astype(jnp.float32), axes=1)
             .astype(s.dtype), stacked)
 
+    def _sl_capture_cb(self, si: int):
+        """Observation hook for one SL client's cycle: what the server
+        receives on the uplink, drawn on a DISJOINT key fold (12345) so
+        capturing never advances a training stream."""
+        fn = self._sl_cap_fns[si]
+
+        def cb(steps, st, b, kb):
+            if steps % self.capture_every == 0:
+                z = fn(st.trainable, b["tokens"],
+                       jax.random.fold_in(kb, 12345))
+                self.captures["smashed"].append(np.asarray(z))
+                self.captures["original"].append(np.asarray(b["tokens"]))
+        return cb
+
     def round(self, state, batch, key, lr):
         if self._key_ctx is None:
             raise RuntimeError("call round_key(seed, cycle) before "
-                               "round(): the SL clients' key stream is "
-                               "derived from it (Experiment does this)")
+                               "round(): the SL/CL clients' key streams "
+                               "are derived from it (Experiment does "
+                               "this)")
         seed, cycle = self._key_ctx
         pop: _PopState = state.train
         n = len(self.clients)
         sizes = np.asarray([len(xs) for xs, _ in state.data], np.float64)
         weights = sizes / sizes.sum()
+        part, status = self._participants(seed, cycle)
         models = [None] * n
-        reports = [None] * n
+        reports: list = [None] * n
         new_groups, new_sl, new_sl_steps = [], [], []
+        new_cl, new_cl_steps = [], []
         client_steps = list(pop.client_steps)
+        broadcast = pop.global_trainable["model"]
 
-        # --- FL groups: vmapped local phase + one stacked upload each
+        # --- FL groups: vmapped local phase + one stacked upload each.
+        # A partially-sampled group runs (and uploads) only its active
+        # slice; untouched members keep their optimizer state.
         for gi, group in enumerate(self._groups):
             gk = key if gi == 0 else jax.random.fold_in(key, 101 + gi)
-            gb = {"tokens": np.stack([batch[i]["tokens"]
-                                      for i in group.members]),
-                  "labels": np.stack([batch[i]["labels"]
-                                      for i in group.members])}
-            states, metrics = fl_local_phase(pop.groups[gi], gb, gk, lr)
+            sel = [u for u, i in enumerate(group.members) if part[i]]
+            if not sel:
+                new_groups.append(pop.groups[gi])
+                continue
+            whole = len(sel) == len(group.members)
+            mem = [group.members[u] for u in sel]
+            gstate = pop.groups[gi] if whole else jax.tree.map(
+                lambda a: a[np.asarray(sel)], pop.groups[gi])
+            gb = {"tokens": np.stack([batch[i]["tokens"] for i in mem]),
+                  "labels": np.stack([batch[i]["labels"] for i in mem])}
+            states, metrics = fl_local_phase(gstate, gb, gk, lr)
             dlv = fl_upload(group.radio, gk, states.trainable["model"])
-            losses = np.asarray(metrics["loss"])           # [N_g, J]
-            for u, i in enumerate(group.members):
+            if self.capture:
+                fl_capture(self.captures, dlv.payload, broadcast,
+                           [batch[i]["tokens"] for i in mem])
+            losses = np.asarray(metrics["loss"])           # [N_a, J]
+            for u, i in enumerate(mem):
                 models[i] = jax.tree.map(lambda p, u=u: p[u], dlv.payload)
                 j = losses.shape[1]
                 client_steps[i] += j
@@ -319,8 +570,10 @@ class PopulationScheme:
                     loss=float(losses[u].mean()), steps=j,
                     bits=dlv.user_bits[u], n_tx=dlv.user_n_tx[u],
                     energy_j=group.radio.energy_j(dlv.user_bits[u]),
-                    weight=float(weights[i]))
-            new_groups.append(states)
+                    est_round_s=self._est_round_s[i])
+            new_groups.append(states if whole else jax.tree.map(
+                lambda old, upd: old.at[np.asarray(sel)].set(upd),
+                pop.groups[gi], states))
 
         # --- SL clients: one fused split cycle each, own radio/quantizer
         sl_base = jax.random.PRNGKey(seed + 2)
@@ -328,34 +581,86 @@ class PopulationScheme:
             spec = self.clients[i]
             sk = sl_base if si == 0 else jax.random.fold_in(sl_base,
                                                             201 + si)
+            if not part[i]:
+                new_sl.append(pop.sl_states[si])
+                new_sl_steps.append(pop.sl_steps[si])
+                continue
             step = sl_train_step(_wcfg_key(spec.wcfg), lr)
-            st, m, steps = sl_cycle(step, pop.sl_states[si], batch[i], sk,
-                                    pop.sl_steps[si])
+            st, m, steps = sl_cycle(
+                step, pop.sl_states[si], batch[i], sk, pop.sl_steps[si],
+                on_step=self._sl_capture_cb(si) if self.capture else None)
             n_steps = steps - pop.sl_steps[si]
             radio = spec.radio
-            bits = n_steps * sl_bits_per_step(spec.wcfg, radio.quant_bits)
+            n_tx = sl_cycle_drawn_tx(sk, pop.sl_steps[si], n_steps, radio)
+            bits = n_tx * (sl_bits_per_step(spec.wcfg, radio.quant_bits)
+                           / 2.0)
             models[i] = st.trainable["model"]
             client_steps[i] += n_steps
             reports[i] = ClientReport(
                 name=spec.name or f"sl{i}", paradigm="sl",
                 loss=float(m["loss"]), steps=n_steps, bits=bits,
-                n_tx=2.0 * n_steps * radio.expected_tx(),
-                energy_j=radio.energy_j(bits), weight=float(weights[i]))
+                n_tx=n_tx, energy_j=radio.energy_j(bits),
+                est_round_s=self._est_round_s[i])
             new_sl.append(st)
             new_sl_steps.append(steps)
 
-        # --- mixed aggregation (module docstring: weighted FedAvg over
-        # received FL weights + server-side-updated SL trunks)
-        agg_model = self._aggregate(models, weights)
-        if self._sl_idx:
-            agg_codec = self._aggregate(
-                [new_sl[si].trainable["codec"] for si in
-                 range(len(self._sl_idx))],
-                weights[self._sl_idx])
+        # --- CL members: server-side epochs over the received shard
+        # (uploaded + billed at init); rounds are radio-silent
+        cl_base = jax.random.PRNGKey(seed + 2)
+        for ci, i in enumerate(self._cl_idx):
+            spec = self.clients[i]
+            ck = jax.random.fold_in(cl_base, 301 + ci)
+            if not part[i]:
+                new_cl.append(pop.cl_states[ci])
+                new_cl_steps.append(pop.cl_steps[ci])
+                continue
+            st, m, steps = train_cycle(cl_train_step(lr),
+                                       pop.cl_states[ci], batch[i], ck,
+                                       pop.cl_steps[ci])
+            n_steps = steps - pop.cl_steps[ci]
+            models[i] = st.trainable["model"]
+            client_steps[i] += n_steps
+            reports[i] = ClientReport(
+                name=spec.name or f"cl{i}", paradigm="cl",
+                loss=float(m["loss"]), steps=n_steps)
+            new_cl.append(st)
+            new_cl_steps.append(steps)
+
+        # --- zero-bit rounds for everyone who sat this one out
+        for i in range(n):
+            if reports[i] is None:
+                reports[i] = ClientReport(
+                    name=self.clients[i].name
+                    or f"{self.clients[i].paradigm}{i}",
+                    paradigm=self.clients[i].paradigm, loss=0.0, steps=0,
+                    status=status[i], est_round_s=self._est_round_s[i])
+
+        # --- mixed aggregation over the round's PARTICIPANTS (module
+        # docstring: weighted FedAvg over received FL weights +
+        # post-cycle SL models + server-side CL models), weights
+        # renormalized among them
+        trained = [i for i in range(n) if models[i] is not None]
+        renorm = 1.0 if len(trained) == n else (
+            float(weights[np.asarray(trained)].sum()) if trained else 1.0)
+        for i in trained:
+            reports[i].weight = float(weights[i] / renorm)
+        if trained:
+            agg_model = self._aggregate([models[i] for i in trained],
+                                        weights[np.asarray(trained)])
         else:
-            agg_codec = {}
+            agg_model = broadcast      # empty round: global unchanged
+        sl_trained = [si for si, i in enumerate(self._sl_idx)
+                      if models[i] is not None]
+        if sl_trained:
+            agg_codec = self._aggregate(
+                [new_sl[si].trainable["codec"] for si in sl_trained],
+                weights[np.asarray([self._sl_idx[si]
+                                    for si in sl_trained])])
+        else:
+            agg_codec = pop.global_trainable["codec"]
 
         # --- broadcast back: every client re-anchors on the new global
+        # (participant or not — the downlink broadcast is unbilled)
         new_groups = [
             TrainState(dict(s.trainable, model=jax.tree.map(
                 lambda p: jnp.broadcast_to(
@@ -364,10 +669,12 @@ class PopulationScheme:
             for g, s in zip(self._groups, new_groups)]
         new_sl = [TrainState({"model": agg_model, "codec": agg_codec},
                              s.opt_state, s.step) for s in new_sl]
+        new_cl = [TrainState(dict(s.trainable, model=agg_model),
+                             s.opt_state, s.step) for s in new_cl]
 
         glob = {"model": agg_model, "codec": agg_codec}
         new_pop = _PopState(new_groups, new_sl, new_sl_steps, glob,
-                            client_steps)
+                            client_steps, new_cl, new_cl_steps)
         self._final_client_steps = client_steps
         total_steps = sum(r.steps for r in reports)
         new = SchemeState(new_pop, state.data,
@@ -379,6 +686,9 @@ class PopulationScheme:
             bits=float(sum(r.bits for r in reports)),
             n_tx=float(sum(r.n_tx for r in reports)),
             energy_j=float(sum(r.energy_j for r in reports)),
+            metrics={"n_active": len(trained),
+                     "n_sampled_out": status.count("sampled_out"),
+                     "n_stragglers": status.count("straggler")},
             clients=tuple(reports))
 
     # -------------------------------------------------------------- eval
@@ -386,17 +696,21 @@ class PopulationScheme:
         glob = state.train.global_trainable
         if self._sl_idx:
             # the deployed function includes the trained codec
-            return evaluate_sl(glob, self._sl_wcfg, xte, yte)
+            return evaluate_sl(glob, self._sl_wcfg, xte, yte,
+                               perfect_eval=self.perfect_eval)
         return evaluate(glob["model"], xte, yte)[0]
 
     def flops(self, steps_total: int):
         """Per-client accounting (steps_total is the fleet sum, which
-        cannot be split by paradigm — the internal counters can)."""
+        cannot be split by paradigm — the internal counters can). CL
+        members' epochs run server-side (paper: CL user compute = 0)."""
         user = server = 0.0
         for i, spec in enumerate(self.clients):
             steps = self._final_client_steps[i]
             if spec.paradigm == "fl":
                 user += step_flops("cl") * steps
+            elif spec.paradigm == "cl":
+                server += step_flops("cl") * steps
             else:
                 u = user_side_flops_sl(spec.wcfg.compress_factor)
                 user += u * steps

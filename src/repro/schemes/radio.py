@@ -100,11 +100,18 @@ class Radio:
         quantization (wire.payload_bits — the one accounting helper)."""
         return W.payload_bits(tree, self.quant_bits)
 
+    def rate_bps(self) -> float:
+        """Expected link rate E_f[C] in bits/s (Monte-Carlo ergodic
+        capacity over the Rayleigh fade, cached per link budget) — the
+        denominator of both the comm-energy rule (Eq. 11) and the fleet
+        deadline model's transfer-time estimate
+        (population.PopulationScheme, docs/ACCOUNTING.md §Fleet)."""
+        return _expected_capacity(self.bandwidth_hz, self.snr_db,
+                                  self.fading)
+
     def energy_j(self, bits: float) -> float:
         """Comm energy of `bits` on this link: bits * P / E[C]."""
-        cap = _expected_capacity(self.bandwidth_hz, self.snr_db,
-                                 self.fading)
-        return float(bits) * self.tx_power_w / cap
+        return float(bits) * self.tx_power_w / self.rate_bps()
 
     def _impl(self) -> str:
         return "kernel" if (self.use_kernel and not self.perfect) \

@@ -38,7 +38,8 @@ def build_scheme(wcfg=None, capture: bool = False, clients=None, **kwargs):
     `PopulationScheme` (wcfg is then the shared base config the specs
     were built from). Extra kwargs go to the scheme constructor (e.g.
     FL's `shards`, `dp_sigma`, `prox_mu`; SL's `protocol`,
-    `capture_every`)."""
+    `capture_every`, `perfect_eval`; the population's fleet dynamics:
+    `policy=ParticipationPolicy.uniform(k)`, `deadline_s`)."""
     if clients is not None:
         return PopulationScheme(wcfg, clients, capture=capture, **kwargs)
     mode = wcfg.mode if wcfg is not None else "cl"
@@ -53,7 +54,15 @@ def build_scheme(wcfg=None, capture: bool = False, clients=None, **kwargs):
 
 @dataclasses.dataclass
 class Experiment:
-    """Drive a Scheme for `cycles` communication cycles."""
+    """Drive a Scheme for `cycles` communication cycles: one data rng
+    (`seed + 1`), the paper's lr schedule off the scheme's epoch
+    counter, one `round` per cycle, eval after each. Per-cycle
+    accounting lands in `reports` (a `RoundReport` each, incl. the
+    per-client breakdown for fleets); any init-time crossing (CL
+    corpus uploads) in `init_delivery`; the whole run summarizes into
+    the returned `RunResult`. Works unchanged for every scheme — pure
+    CL/FL/SL or a `PopulationScheme` fleet — because all paradigm
+    structure lives behind the Scheme protocol."""
     scheme: Any
     cycles: int
     seed: int = 0

@@ -13,7 +13,13 @@ Two protocols, one interface:
   protocol follows the same lr schedule as the fused path.
 
 Payload per fused step: compressed activation up + tau-clipped gradient
-down (2 legs x B x T_pool x C/4 floats at quant_bits each).
+down (2 legs x B x T_pool x C/4 floats at quant_bits each), scaled by
+the DRAWN ARQ transmission counts (replayed outside the jit by
+`sl_cycle_drawn_tx` for the fused path — docs/ACCOUNTING.md).
+
+Eval convention (both protocols): the deployed function transmits
+through the REAL channel with fixed eval keys; `perfect_eval=True` is
+the noiseless-link escape hatch (`evaluate_sl`).
 """
 from __future__ import annotations
 
@@ -32,7 +38,8 @@ from repro.models import lstm_tiny
 from repro.runtime.train_step import init_train_state, make_train_step
 from repro.schemes.base import (BATCH, CFG, LR0, MOMENTUM, RoundReport,
                                 SchemeState, batches_of, step_flops,
-                                train_shape, user_side_flops_sl)
+                                train_cycle, train_shape,
+                                user_side_flops_sl)
 from repro.schemes.radio import Radio
 
 
@@ -68,47 +75,82 @@ def sl_bits_per_step(wcfg, quant_bits: int) -> float:
     return 2.0 * BATCH * t_pool * c * float(quant_bits)
 
 
-def sl_cycle(step, train_state, batches, key, steps: int, on_step=None):
-    """One client's fused split cycle: every batch through the jitted
-    split step, per-step keys folded from the client's cumulative step
-    counter (the pre-population `SplitScheme.round` loop, factored out
-    so `PopulationScheme` can run each SL client's cycle through the
-    identical code). Returns (state, last_metrics, steps)."""
-    m = None
-    for b in batches:
-        kb = jax.random.fold_in(key, steps)
-        train_state, m = step(train_state, b, kb)
-        if on_step is not None:
-            on_step(steps, train_state, b, kb)
-        steps += 1
-    return train_state, m, steps
+# One client's fused split cycle (the pre-population `SplitScheme.round`
+# loop): the generic per-step-key epoch loop, shared with the CL round —
+# see base.train_cycle. Kept under its SL name at the call sites.
+sl_cycle = train_cycle
+
+
+def sl_cycle_drawn_tx(key, start: int, n_steps: int, radio: Radio) -> float:
+    """DRAWN transmissions of `n_steps` fused SL steps starting at
+    cumulative step `start` under `key` (the cycle's base key, folded
+    per step as in `train_cycle`).
+
+    The fused path's two crossings per step happen INSIDE the jitted
+    train step (`channel_crossing`), which exposes no per-step
+    diagnostics — but the fade/ARQ redraw is a pure function of the
+    key, so the drawn counts are replayed here outside the jit
+    (`wire.drawn_tree_tx`) and billed exactly like the two-party
+    protocol bills its explicit Deliveries. Key stream replayed: the
+    train step folds the microbatch index (0 — the paper model runs
+    one microbatch per step) onto the step key before `_link`; the
+    gradient leg folds 1 on top (channel.py `_cc_bwd`). Without
+    ARQ/fading this is identically `2 * n_steps` (one transmission per
+    leg), matching the pre-ARQ accounting bit-for-bit."""
+    if n_steps <= 0:
+        return 0.0
+    if radio.perfect or not radio.fading or radio.arq_attempts <= 1:
+        return 2.0 * n_steps
+
+    def one(s):
+        ck = jax.random.fold_in(jax.random.fold_in(key, s), 0)
+        up = W.drawn_tree_tx(ck, 1, fading=True, perfect=False,
+                             arq_attempts=radio.arq_attempts,
+                             arq_min_f2=radio.arq_min_f2)
+        down = W.drawn_tree_tx(jax.random.fold_in(ck, 1), 1, fading=True,
+                               perfect=False,
+                               arq_attempts=radio.arq_attempts,
+                               arq_min_f2=radio.arq_min_f2)
+        return up + down
+
+    return float(jax.vmap(one)(jnp.arange(start, start + n_steps)).sum())
 
 
 @functools.lru_cache(maxsize=8)
 def _sl_eval_fn(wcfg_key):
     """SL eval must run the DEPLOYED function — user partition + codec +
-    (noiseless) link + server partition — not the raw model without the
-    codec, which is a different function once the codec trains away from
-    its identity init."""
+    link + server partition — not the raw model without the codec,
+    which is a different function once the codec trains away from its
+    identity init."""
     wcfg = WirelessConfig(**dict(wcfg_key))
-    wp = dataclasses.replace(wcfg, perfect_channel=True)
 
     @jax.jit
-    def ev(trainable, tokens, labels):
+    def ev(trainable, tokens, labels, key):
         logits, _ = split_forward(trainable["model"], trainable["codec"],
-                                  {"tokens": tokens}, CFG, wp,
-                                  jax.random.PRNGKey(0))
+                                  {"tokens": tokens}, CFG, wcfg, key)
         return (lstm_tiny.accuracy(logits, labels),
                 lstm_tiny.bce_loss(logits, labels))
     return ev
 
 
-def evaluate_sl(trainable, wcfg, xte, yte, batch: int = 2048):
+def evaluate_sl(trainable, wcfg, xte, yte, batch: int = 2048,
+                perfect_eval: bool = False):
+    """Test accuracy of the deployed split function. The ONE SL eval
+    convention: inference transmits through the REAL channel (the
+    deployed device cannot turn the noise off), with fixed per-slice
+    eval keys `PRNGKey(999 + slice_start)` — the same keys the
+    two-party `SLSession.predict` path consumes, so both protocols
+    score the same convention. `perfect_eval=True` is the escape hatch
+    that scores over a noiseless (but still quantized) link — the
+    pre-unification fused behavior, useful to separate model quality
+    from channel luck."""
+    if perfect_eval:
+        wcfg = dataclasses.replace(wcfg, perfect_channel=True)
     ev = _sl_eval_fn(_wcfg_key(wcfg))
     accs = []
     for i in range(0, max(len(xte) - batch + 1, 1), batch):
         a, _ = ev(trainable, jnp.asarray(xte[i:i + batch]),
-                  jnp.asarray(yte[i:i + batch]))
+                  jnp.asarray(yte[i:i + batch]), jax.random.PRNGKey(999 + i))
         accs.append(float(a))
     return float(np.mean(accs))
 
@@ -133,7 +175,8 @@ class SplitScheme:
     bits_normalizer = 1.0
 
     def __init__(self, wcfg=None, capture: bool = False,
-                 capture_every: int = 8, protocol: str = "fused"):
+                 capture_every: int = 8, protocol: str = "fused",
+                 perfect_eval: bool = False):
         self.wcfg = wcfg or WirelessConfig(mode="sl", quant_bits=16)
         self.radio = Radio.from_wcfg(self.wcfg)
         self.capture = capture
@@ -142,6 +185,9 @@ class SplitScheme:
         if protocol not in ("fused", "two_party"):
             raise ValueError(protocol)
         self.protocol = protocol
+        # eval convention: the deployed function transmits through the
+        # REAL channel (see evaluate_sl); perfect_eval scores noiseless
+        self.perfect_eval = perfect_eval
         self._cap_fn = _sl_observe_fn(self.wcfg) if capture else None
         # payload per fused step: compressed activation up + clipped
         # gradient down, through the radio's quantizer
@@ -184,14 +230,15 @@ class SplitScheme:
             step, state.train, batch, key, state.steps,
             on_step=self._capture_step if self.capture else None)
         n = steps - state.steps
-        bits = n * self.bits_per_batch
         new = SchemeState(st, state.data, steps, state.epoch + 1)
-        # fused-path n_tx is the ANALYTIC expectation (2 legs/step): the
-        # crossings happen inside the jitted step, which exposes no
-        # per-step diagnostics — see RoundReport docstring
+        # fused-path crossings live inside the jitted step; the DRAWN
+        # per-leg ARQ transmission counts are replayed outside the jit
+        # (sl_cycle_drawn_tx) so bits/n_tx/energy bill actual
+        # retransmissions exactly like the two-party protocol
+        n_tx = sl_cycle_drawn_tx(key, state.steps, n, self.radio)
+        bits = n_tx * (self.bits_per_batch / 2.0)
         return new, RoundReport(
-            loss=float(m["loss"]), steps=n, bits=bits,
-            n_tx=2.0 * n * self.radio.expected_tx(),
+            loss=float(m["loss"]), steps=n, bits=bits, n_tx=n_tx,
             energy_j=self.radio.energy_j(bits))
 
     def _round_two_party(self, state, batch, key, lr):
@@ -218,13 +265,15 @@ class SplitScheme:
     def evaluate(self, state, xte, yte) -> float:
         if self.protocol == "two_party":
             return self._evaluate_two_party(state.train, xte, yte)
-        return evaluate_sl(state.train.trainable, self.wcfg, xte, yte)
+        return evaluate_sl(state.train.trainable, self.wcfg, xte, yte,
+                           perfect_eval=self.perfect_eval)
 
     def _evaluate_two_party(self, sess, xte, yte, batch: int = 2048):
         accs = []
         for i in range(0, max(len(xte) - batch + 1, 1), batch):
             logits = sess.predict(jnp.asarray(xte[i:i + batch]),
-                                  jax.random.PRNGKey(999 + i))
+                                  jax.random.PRNGKey(999 + i),
+                                  perfect=self.perfect_eval)
             accs.append(float(lstm_tiny.accuracy(
                 logits, jnp.asarray(yte[i:i + batch]))))
         return float(np.mean(accs))

@@ -1,15 +1,20 @@
-"""Heterogeneous population scheme: a mixed FL/SL fleet with per-client
-radios trains end-to-end through the unchanged `Experiment` runner, the
-per-client accounting in each `RoundReport` is consistent with the
-fleet totals, and the spec/grouping plumbing holds its invariants.
-Degenerate (all-FL / all-SL) golden parity lives in
-tests/test_scheme_parity.py."""
+"""Heterogeneous population scheme: a mixed CL/FL/SL fleet with
+per-client radios trains end-to-end through the unchanged `Experiment`
+runner, the per-client accounting in each `RoundReport` is consistent
+with the fleet totals, and the spec/grouping plumbing holds its
+invariants. Fleet dynamics (ISSUE 4): participation sampling is
+seed-deterministic, deadline-dropped stragglers bill zero bits,
+capture=True leaves the trajectory untouched, and CL members are
+billed at init only. Degenerate (all-FL / all-SL) golden parity lives
+in tests/test_scheme_parity.py."""
+import jax
 import numpy as np
 import pytest
 
 from repro.configs.base import WirelessConfig
 from repro.schemes import (BATCH, ClientSpec, Experiment,
-                           PopulationScheme, Radio, build_scheme)
+                           ParticipationPolicy, PopulationScheme, Radio,
+                           build_scheme)
 
 N_TRAIN, N_TEST = 2048, 512
 
@@ -133,8 +138,19 @@ def test_population_validations():
     with pytest.raises(ValueError, match="median"):
         # per-client override must be rejected too, not silently meaned
         PopulationScheme(base, [ClientSpec.fl(base, aggregate="median")])
-    with pytest.raises(ValueError, match="capture"):
-        PopulationScheme(base, [ClientSpec.fl(base)], capture=True)
+    # participation-policy validation happens at construction
+    with pytest.raises(ValueError, match="uniform-k"):
+        PopulationScheme(base, [ClientSpec.fl(base)],
+                         policy=ParticipationPolicy.uniform(2))
+    with pytest.raises(ValueError, match="uniform-k"):
+        PopulationScheme(base, [ClientSpec.fl(base)],
+                         policy=ParticipationPolicy.uniform(0))
+    with pytest.raises(ValueError, match="bernoulli"):
+        PopulationScheme(base, [ClientSpec.fl(base)],
+                         policy=ParticipationPolicy.bernoulli(0.0))
+    with pytest.raises(ValueError, match="participation kind"):
+        PopulationScheme(base, [ClientSpec.fl(base)],
+                         policy=ParticipationPolicy("sometimes"))
     # shards that don't fit the corpus fail loudly at init, not in round
     scheme = PopulationScheme(base, [
         ClientSpec.fl(base, n_samples=N_TRAIN),
@@ -143,3 +159,168 @@ def test_population_validations():
     (xtr, ytr), _ = corpus(N_TRAIN, N_TEST, 0)
     with pytest.raises(ValueError, match="exceed"):
         scheme.init(0, xtr, ytr)
+
+
+# ------------------------------------------------------- fleet dynamics
+def test_explicit_full_policy_is_the_default_fleet():
+    """policy=full() + deadline never hit + capture off IS the PR 3
+    fleet: identical trajectory and identical billing (the degenerate
+    path draws no policy RNG and slices no group state)."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    plain = Experiment(build_scheme(base, clients=_mixed_clients(base)),
+                       cycles=2, seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    fleet = Experiment(build_scheme(base, clients=_mixed_clients(base),
+                                    policy=ParticipationPolicy.full(),
+                                    deadline_s=1e9),
+                       cycles=2, seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    rp, rf = plain.run(), fleet.run()
+    np.testing.assert_array_equal(rp.accuracy, rf.accuracy)
+    np.testing.assert_array_equal(rp.loss, rf.loss)
+    assert rp.total_bits == rf.total_bits
+    for a, b in zip(plain.reports, fleet.reports):
+        assert [c.bits for c in a.clients] == [c.bits for c in b.clients]
+        assert all(c.status == "ok" for c in b.clients)
+
+
+def test_sampling_is_seed_deterministic():
+    """uniform-k participation: the same seed draws the same subsets
+    (same trajectory, same statuses), and the policy stream actually
+    varies across cycles."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+
+    def run():
+        exp = Experiment(build_scheme(
+            base, clients=_mixed_clients(base),
+            policy=ParticipationPolicy.uniform(2)),
+            cycles=3, seed=7, n_train=N_TRAIN, n_test=N_TEST)
+        res = exp.run()
+        pattern = [tuple(c.status for c in rep.clients)
+                   for rep in exp.reports]
+        return res, pattern
+
+    (ra, pa), (rb, pb) = run(), run()
+    np.testing.assert_array_equal(ra.accuracy, rb.accuracy)
+    assert pa == pb
+    for pat in pa:                         # exactly k participate
+        assert sum(s == "ok" for s in pat) == 2
+        assert sum(s == "sampled_out" for s in pat) == 2
+    assert len(set(pa)) > 1                # subsets vary across cycles
+    # and the mask helper itself is a pure function of the key
+    pol = ParticipationPolicy.uniform(2)
+    k = jax.random.PRNGKey(3)
+    np.testing.assert_array_equal(pol.active(k, 5), pol.active(k, 5))
+
+
+def test_stragglers_bill_zero_bits():
+    """A client whose estimated round time exceeds the deadline is
+    dropped every round: zero bits / energy / steps, status
+    "straggler", weight renormalized among the participants."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.fl(base, name="fast"),
+               ClientSpec.fl(base, compute_s_per_step=1e6, name="slow"),
+               ClientSpec.sl(base, name="sl-fast")]
+    exp = Experiment(build_scheme(base, clients=clients,
+                                  deadline_s=3600.0),
+                     cycles=2, seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    exp.run()
+    scheme = exp.scheme
+    assert scheme.estimated_round_s(1) > 3600.0 > scheme.estimated_round_s(0)
+    for rep in exp.reports:
+        by = {c.name: c for c in rep.clients}
+        slow = by["slow"]
+        assert slow.status == "straggler"
+        assert slow.bits == 0.0 and slow.energy_j == 0.0
+        assert slow.steps == 0 and slow.n_tx == 0.0 and slow.weight == 0.0
+        assert slow.est_round_s > 3600.0
+        assert rep.metrics["n_stragglers"] == 1
+        # participants' aggregation weights renormalize to 1
+        assert sum(c.weight for c in rep.clients) == pytest.approx(1.0)
+        assert by["fast"].bits > 0 and by["sl-fast"].bits > 0
+
+
+def test_all_stragglers_is_a_zero_bit_round():
+    """If nobody makes the deadline the round is empty: global model
+    unchanged (constant accuracy), zero fleet bits."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.fl(base, compute_s_per_step=1e6, name=f"s{i}")
+               for i in range(2)]
+    exp = Experiment(build_scheme(base, clients=clients, deadline_s=1.0),
+                     cycles=2, seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    res = exp.run()
+    assert res.accuracy[0] == res.accuracy[1]      # nothing ever trains
+    for rep in exp.reports:
+        assert rep.bits == 0.0 and rep.steps == 0
+        assert rep.metrics["n_active"] == 0
+
+
+def test_population_capture_does_not_perturb_trajectory():
+    """Acceptance: capture=True on a mixed fleet observes the SAME
+    channel passes the round already makes — identical trajectory,
+    non-empty FL delta and SL smashed-data observations."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    cap = Experiment(build_scheme(base, clients=_mixed_clients(base),
+                                  capture=True),
+                     cycles=2, seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    ref = Experiment(build_scheme(base, clients=_mixed_clients(base)),
+                     cycles=2, seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    rc, rr = cap.run(), ref.run()
+    np.testing.assert_array_equal(rc.accuracy, rr.accuracy)
+    np.testing.assert_array_equal(rc.loss, rr.loss)
+    assert rc.total_bits == rr.total_bits
+    # one delta stack per (round, radio group): 2 rounds x 2 FL groups,
+    # covering both FL clients each round
+    assert len(rc.captures["deltas"]) == 4
+    assert sum(d.shape[0] for d in rc.captures["deltas"]) == 4
+    assert len(rc.captures["smashed"]) >= 1        # reconstruction study
+    assert rc.captures["smashed"][0].shape[0] == BATCH
+    assert not rr.captures
+
+
+def test_cl_members_are_billed_at_init_only():
+    """A ClientSpec.cl member's corpus crossing is billed once at init
+    through its own radio; its rounds are radio-silent server-side
+    epochs folded into the weighted aggregation."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.fl(base, name="f"),
+               ClientSpec.cl(base, snr_db=5.0, name="c")]
+    exp = Experiment(build_scheme(base, clients=clients, capture=True),
+                     cycles=2, seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    res = exp.run()
+    from repro.core.centralized import token_bits
+    from repro.schemes import CFG
+    shard = N_TRAIN // 2
+    want = shard * 30 * token_bits(CFG.vocab_size) + shard  # + 1b labels
+    assert exp.init_delivery.bits == want
+    for rep in exp.reports:
+        by = {c.name: c for c in rep.clients}
+        assert by["c"].paradigm == "cl"
+        assert by["c"].bits == 0.0 and by["c"].energy_j == 0.0
+        assert by["c"].steps > 0                   # it DID train
+        assert by["c"].weight == pytest.approx(0.5)
+    # the 5 dB upload corrupted token ids (the paper's CL failure mode)
+    (rx,), (orig,) = (exp.scheme.captures["cl_received"],
+                      exp.scheme.captures["cl_original"])
+    assert (rx != orig).mean() > 0.01
+    assert res.total_bits == pytest.approx(
+        exp.init_delivery.bits + sum(r.bits for r in exp.reports))
+
+
+def test_cl_member_straggler_exempt_and_sl_deadline():
+    """CL members never straggle (no round radio); an SL client's
+    comm-bound estimate follows bits / rate."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.cl(base, compute_s_per_step=1e6, name="c"),
+               ClientSpec.sl(base, name="s")]
+    scheme = build_scheme(base, clients=clients, deadline_s=3600.0)
+    exp = Experiment(scheme, cycles=1, seed=0, n_train=N_TRAIN,
+                     n_test=N_TEST)
+    exp.run()
+    by = {c.name: c for c in exp.reports[0].clients}
+    assert by["c"].status == "ok" and by["c"].steps > 0
+    assert scheme.estimated_round_s(0) == 0.0  # no deadline model for CL
+    # deadline model: SL estimate = steps * bits_per_step / rate
+    from repro.schemes.split import sl_bits_per_step
+    spec = scheme.clients[1]
+    steps = (N_TRAIN // 2) // BATCH
+    want = steps * sl_bits_per_step(spec.wcfg, 8) / spec.radio.rate_bps()
+    assert scheme.estimated_round_s(1) == pytest.approx(want)

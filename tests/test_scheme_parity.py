@@ -26,7 +26,7 @@ from repro.configs.base import WirelessConfig
 from repro.core import wire as W
 from repro.schemes import (CentralizedScheme, ClientSpec, Delivery,
                            Experiment, FederatedScheme, PopulationScheme,
-                           Radio, SplitScheme, build_scheme)
+                           Radio, SplitScheme, build_scheme, evaluate_sl)
 
 N_TRAIN, N_TEST = 3072, 512
 
@@ -240,6 +240,75 @@ def test_fl_dp_round_reports_expected_transmissions():
         state.train.trainable["model"]))
     assert rep.n_tx == n_packets * scheme.radio.expected_tx() > 0
     assert rep.bits > 0
+
+
+# ------------------------------------------- fused-SL ARQ consistency
+def test_drawn_tx_replay_matches_wire_diag():
+    """`wire.drawn_tree_tx` replays the EXACT fade/ARQ stream the
+    packed wire draws for the same key — the mechanism that lets the
+    fused SL path bill drawn retransmissions for crossings buried
+    inside the jitted train step."""
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(5)
+    z = jax.random.normal(jax.random.PRNGKey(0), (16, 13, 8))
+    _, diag = W.transmit_tree(key, z, bits=8, snr_db=5.0,
+                              arq_attempts=4, return_diag=True)
+    assert int(W.drawn_tree_tx(key, 1, arq_attempts=4)) \
+        == int(diag["n_tx"].sum())
+    # multi-leaf trees: one replayed count per packet
+    tree = {"a": z, "b": jnp.ones((7,))}
+    _, diag2 = W.transmit_tree(key, tree, bits=8, snr_db=5.0,
+                               arq_attempts=4, return_diag=True)
+    assert int(W.drawn_tree_tx(key, 2, arq_attempts=4)) \
+        == int(diag2["n_tx"].sum())
+    # and without ARQ the replay is the analytic one-per-packet count
+    assert int(W.drawn_tree_tx(key, 3)) == 3
+
+
+def test_fused_sl_arq_bills_drawn_retransmissions(golden):
+    """ROADMAP fix: under ARQ the fused SL path now simulates the
+    link-layer redraws inside the jitted step (`channel_crossing`
+    carries arq_attempts/arq_min_f2) and bills bits/energy at the
+    DRAWN n_tx replayed outside the jit — the two-party protocol's
+    convention, instead of E[tx]-n_tx over unscaled bits."""
+    wcfg = WirelessConfig(mode="sl", quant_bits=8, snr_db=5.0,
+                          arq_attempts=4)
+    scheme = build_scheme(wcfg)
+    exp = Experiment(scheme, cycles=1, seed=0, n_train=1024, n_test=512)
+    exp.run()
+    (rep,) = exp.reports
+    assert rep.n_tx > 2 * rep.steps              # deep fades were redrawn
+    assert rep.n_tx <= 2 * rep.steps * wcfg.arq_attempts
+    assert rep.bits == pytest.approx(rep.n_tx * scheme.bits_per_batch / 2)
+    assert rep.energy_j == pytest.approx(scheme.radio.energy_j(rep.bits))
+    # the analytic expectation brackets the drawn average
+    assert 1.0 < scheme.radio.expected_tx() < wcfg.arq_attempts
+
+
+# ------------------------------------------------- SL eval convention
+def test_sl_eval_convention_is_real_channel_with_escape_hatch():
+    """ONE SL eval convention (ROADMAP fix): the deployed function
+    scores through the REAL channel on fixed eval keys for both
+    protocols; `perfect_eval=True` is the noiseless escape hatch (the
+    pre-unification fused behavior)."""
+    import dataclasses
+    from repro.schemes import corpus
+    (xtr, ytr), (xte, yte) = corpus(1024, 512, 0)
+    wcfg = WirelessConfig(mode="sl", quant_bits=16, snr_db=-5.0)
+    scheme = SplitScheme(wcfg)
+    state, _ = scheme.init(0, xtr, ytr)
+    tr = state.train.trainable
+    noisy = evaluate_sl(tr, wcfg, xte, yte)
+    assert noisy == evaluate_sl(tr, wcfg, xte, yte)   # fixed eval keys
+    perfect = evaluate_sl(tr, wcfg, xte, yte, perfect_eval=True)
+    assert noisy != perfect            # at -5 dB the channel bites
+    assert scheme.evaluate(state, xte, yte) == noisy  # scheme default
+    assert SplitScheme(wcfg, perfect_eval=True).evaluate(
+        state, xte, yte) == perfect                   # escape hatch
+    # on an already-perfect link the two conventions coincide
+    wp = dataclasses.replace(wcfg, perfect_channel=True)
+    assert evaluate_sl(tr, wp, xte, yte) == \
+        evaluate_sl(tr, wp, xte, yte, perfect_eval=True)
 
 
 def test_wire_diag_does_not_change_payload():
