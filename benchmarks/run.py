@@ -60,6 +60,11 @@ def _bench_population(full):
     return population.main(full)
 
 
+def _bench_scaled(full):
+    from benchmarks import scaled
+    return scaled.main(full)
+
+
 BENCHES = {
     "fig3a": _bench_fig3a,
     "fig3b": _bench_fig3b,
@@ -70,6 +75,7 @@ BENCHES = {
     "extensions": _bench_extensions,
     "wire": _bench_wire,
     "population": _bench_population,
+    "scaled": _bench_scaled,
 }
 
 

@@ -1,0 +1,100 @@
+"""Scaled-scheme benchmark: per-cycle wall time of the unified driver —
+cl / fl / sl on a reduced assigned arch over the host-device test mesh
+(BENCH_scaled.json).
+
+The tentpole of the scaled-scheme port is that the paper model and the
+sharded architectures run the SAME Experiment loop; this benchmark
+tracks the wall cost of that loop per paradigm run-over-run, like
+BENCH_wire does for the packed wire: build scheme -> 2 (quick) or 4
+(full) communication cycles -> per-cycle wall seconds + the billed
+bits, asserting every paradigm both trains (finite loss) and bills
+(fl/sl bits > 0; cl bits at init only).
+
+    PYTHONPATH=src python -m benchmarks.scaled --quick
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig, WirelessConfig
+from repro.launch.mesh import make_test_mesh
+from repro.nn import use_mesh
+from repro.schemes import Experiment, build_scheme
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+ARCH = "qwen1.5-0.5b"
+
+
+def _wcfg(mode: str):
+    if mode == "cl":
+        return None
+    if mode == "fl":
+        return WirelessConfig(mode="fl", quant_bits=8, local_steps=2,
+                              n_users=2)
+    return WirelessConfig(mode="sl", quant_bits=16)
+
+
+def run(full: bool = False, seed: int = 0) -> dict:
+    cycles = 4 if full else 2
+    cfg = dataclasses.replace(get_arch(ARCH).reduced(), remat=False)
+    shape = ShapeConfig("bench", 32, 8, "train", microbatch=8)
+    out = {"arch": ARCH, "cycles": cycles, "seq": shape.seq_len,
+           "batch": shape.global_batch, "cases": {}}
+    with use_mesh(make_test_mesh()):
+        for mode in ("cl", "fl", "sl"):
+            walls, t0 = [], [time.perf_counter()]
+
+            def tick(cyc, acc, rep):
+                walls.append(time.perf_counter() - t0[0])
+                t0[0] = time.perf_counter()
+
+            exp = Experiment(
+                build_scheme(_wcfg(mode), cfg=cfg, shape=shape,
+                             steps_per_cycle=2),
+                cycles=cycles, seed=seed, n_train=128, n_test=32,
+                lr_schedule=lambda e: 1e-3, on_cycle=tick)
+            res = exp.run()
+            # cycle 0 pays the XLA compile of the train + eval fns;
+            # the tracked steady-state mean excludes it (it stays
+            # visible in round_wall_s / compile_wall_s)
+            steady = walls[1:] if len(walls) > 1 else walls
+            out["cases"][mode] = {
+                "compile_wall_s": round(walls[0], 4),
+                "steady_wall_s": round(sum(steady) / len(steady), 4),
+                "round_wall_s": [round(w, 4) for w in walls],
+                "round_bits": [r.bits for r in exp.reports],
+                "init_bits": (exp.init_delivery.bits
+                              if exp.init_delivery else 0.0),
+                "total_bits": res.total_bits,
+                "final_loss": res.loss[-1],
+                "final_accuracy": res.final_accuracy,
+            }
+    return out
+
+
+def main(full: bool = False):
+    res = run(full)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_scaled.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    rows = []
+    for mode, rec in res["cases"].items():
+        rows.append(f"scaled,{mode},steady_wall_s,{rec['steady_wall_s']:.4f}")
+        rows.append(f"scaled,{mode},compile_wall_s,{rec['compile_wall_s']:.4f}")
+        rows.append(f"scaled,{mode},total_bits,{rec['total_bits']:.0f}")
+        rows.append(f"scaled,{mode},final_loss,{rec['final_loss']:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for row in main(args.full and not args.quick):
+        print(row)

@@ -2,28 +2,28 @@
 hundred steps on synthetic LM data, asserting the loss drops.
 
 This exercises the full production path — config, model, optimizer,
-gradient accumulation, checkpointing — at a scale a CPU can finish.
+gradient accumulation, checkpointing — through the SAME
+`build_scheme` + `Experiment` driver the paper model and the launch
+CLI use (schemes/scaled.py), at a scale a CPU can finish.
 
     PYTHONPATH=src python examples/train_100m.py [--steps 200]
 """
 import argparse
 import dataclasses
+import math
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint.ckpt import save_checkpoint, latest_step, \
-    restore_checkpoint
+from repro.checkpoint.ckpt import save_checkpoint
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig
-from repro.data.pipeline import synthetic_lm_batches
-from repro.runtime.train_step import init_train_state, make_train_step
+from repro.schemes import Experiment, build_scheme
 
 
 def main():
@@ -31,6 +31,7 @@ def main():
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--cycle-steps", type=int, default=20)
     ap.add_argument("--ckpt-dir", default="/tmp/repro_100m")
     args = ap.parse_args()
 
@@ -47,24 +48,27 @@ def main():
 
     shape = ShapeConfig("e2e", args.seq, args.batch, "train",
                         microbatch=args.batch)
-    state = init_train_state(jax.random.PRNGKey(0), cfg, None, "adamw")
-    step = jax.jit(make_train_step(cfg, shape, None, optimizer="adamw",
-                                   lr=3e-4))
-
-    batches = synthetic_lm_batches(cfg, args.batch, args.seq, seed=0)
-    losses = []
+    scheme = build_scheme(None, cfg=cfg, shape=shape,
+                          steps_per_cycle=args.cycle_steps,
+                          optimizer="adamw")
+    cycles = max(1, math.ceil(args.steps / args.cycle_steps))
     t0 = time.time()
-    for i in range(args.steps):
-        state, metrics = step(state, next(batches), jax.random.PRNGKey(i))
-        if i % 20 == 0 or i == args.steps - 1:
-            loss = float(metrics["loss"])
-            losses.append(loss)
-            print(f"step {i:4d}  loss {loss:.4f}  "
-                  f"({(time.time() - t0) / (i + 1):.2f}s/step)", flush=True)
-            assert np.isfinite(loss)
 
-    save_checkpoint(args.ckpt_dir, args.steps, state.trainable)
-    first, last = losses[0], losses[-1]
+    def on_cycle(cyc, acc, rep):
+        steps = (cyc + 1) * args.cycle_steps
+        print(f"cycle {cyc:3d} (step {steps:4d})  loss {rep.loss:.4f}  "
+              f"acc {acc:.3f}  ({(time.time() - t0) / steps:.2f}s/step)",
+              flush=True)
+        assert np.isfinite(rep.loss)
+
+    exp = Experiment(scheme, cycles=cycles, seed=0, n_train=512,
+                     n_test=64, lr_schedule=lambda e: 3e-4,
+                     on_cycle=on_cycle)
+    res = exp.run()
+
+    save_checkpoint(args.ckpt_dir, cycles * args.cycle_steps,
+                    exp.final_state.train.trainable)
+    first, last = res.loss[0], res.loss[-1]
     print(f"loss {first:.3f} -> {last:.3f}")
     assert last < first - 0.5, "expected the LM loss to drop"
     print("end-to-end train OK")

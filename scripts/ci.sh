@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Smoke CI: tier-1 test suite + docs-consistency gate + the packed-wire
-# perf benchmark + the population fleet smoke.
+# perf benchmark + the population fleet smoke + the unified-driver /
+# scaled-scheme smokes.
 #
 #     bash scripts/ci.sh
 #
@@ -66,5 +67,33 @@ ok = ok and all(s["laggard"] in ("straggler", "sampled_out")
                 for s in dyn["per_client_status"])
 ok = ok and any(s["laggard"] == "straggler"
                 for s in dyn["per_client_status"])
+sys.exit(0 if ok else 1)
+EOF
+
+echo "=== unified driver smoke (paper model + scaled arch through Experiment) ==="
+# the paper's tiny FL through the unified launch driver (one comm cycle)
+python -m repro.launch.train --arch paper-tinylstm --mode fl --steps 2 \
+    --n-train 2048 --n-test 512
+# a scaled arch, same driver, pod-FL scheme on the degraded test mesh
+python -m repro.launch.train --arch qwen1.5-0.5b --reduced --mode fl \
+    --steps 2 --batch 4 --seq 16 --local-steps 2 --n-users 2 --mesh test
+
+echo "=== scaled-scheme benchmark (cl/fl/sl per-cycle wall, BENCH_scaled.json) ==="
+python -m benchmarks.run --only scaled
+python - <<'EOF'
+import json, sys
+res = json.load(open("benchmarks/results/BENCH_scaled.json"))
+ok = True
+for mode, rec in res["cases"].items():
+    wall = sum(rec["round_wall_s"]) / len(rec["round_wall_s"])
+    print(f"scaled {mode}: {len(rec['round_bits'])} cycles, "
+          f"mean {wall:.2f}s/cycle, {rec['total_bits']:.0f} bits")
+    import math
+    ok = ok and math.isfinite(rec["final_loss"])
+# radio paradigms must bill per round; CL bills its init upload only
+ok = ok and all(b > 0 for b in res["cases"]["fl"]["round_bits"])
+ok = ok and all(b > 0 for b in res["cases"]["sl"]["round_bits"])
+ok = ok and res["cases"]["cl"]["init_bits"] > 0
+ok = ok and all(b == 0 for b in res["cases"]["cl"]["round_bits"])
 sys.exit(0 if ok else 1)
 EOF

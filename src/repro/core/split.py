@@ -151,6 +151,26 @@ def _split_tiny(params, codec, batch, cfg, wcfg, key, window):
         {"aux_loss": jnp.zeros((), jnp.float32)}
 
 
+def crossing_elems(cfg, shape_cfg, wcfg) -> int:
+    """Element count of ONE link leg (the encoded smashed activation) of
+    one full-batch train step: B x S' x (d / compress_factor), where S'
+    is the family's sequence length at the cut (pooled for the tiny
+    model, frontend-extended for VLM, the encoder grid for enc-dec).
+    The schemes layer multiplies by quant_bits and the two legs to bill
+    the fused SL path's per-step payload."""
+    d = lstm_tiny.CONV_F if cfg.family == "tiny" else cfg.d_model
+    c = max(1, d // wcfg.compress_factor)
+    if cfg.family == "tiny":
+        s = (30 - lstm_tiny.CONV_K + 1) // 2
+    elif cfg.family == "audio":
+        s = encdec.src_len(cfg, shape_cfg.seq_len)
+    elif cfg.frontend == "vision":
+        s = shape_cfg.seq_len + cfg.n_frontend_tokens
+    else:
+        s = shape_cfg.seq_len
+    return shape_cfg.global_batch * s * c
+
+
 def split_forward(params, codec, batch, cfg, wcfg, key, window: int = 0):
     fam = cfg.family
     if fam in ("dense", "moe", "vlm"):

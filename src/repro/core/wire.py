@@ -209,6 +209,25 @@ def drawn_tree_tx(key, n_packets: int = 1, fading: bool = True,
     return n_tx.sum().astype(jnp.int32)
 
 
+def drawn_stacked_tx(key, n: int, n_packets: int, fading: bool = True,
+                     perfect: bool = False, arq_attempts: int = 1,
+                     arq_min_f2: float = 0.25) -> np.ndarray:
+    """Per-(user, packet) DRAWN transmission counts of a
+    `transmit_stacked(key, tree, ...)` call with `n` users and
+    `n_packets` leaves, WITHOUT transmitting — the stacked-send analogue
+    of `drawn_tree_tx` (same `split`, same uniform stream as
+    `_packet_fades`). Returns a host [n, n_packets] int array, so a
+    scheme can bill a sync that happened INSIDE a jitted train step
+    (the pod-mesh FL step) at its actual per-packet retransmission
+    cost. All-ones without ARQ/fading."""
+    if perfect or not fading or arq_attempts <= 1:
+        return np.ones((n, n_packets), np.int64)
+    kf, _ = jax.random.split(key)
+    _, n_tx = _packet_fades(kf, n, n_packets, fading, arq_attempts,
+                            arq_min_f2)
+    return np.asarray(n_tx)
+
+
 def payload_bits(tree, bits: int, expected_tx: float = 1.0) -> float:
     """On-air payload of transmitting every leaf of `tree` at b-bit
     quantization, scaled by the expected (ARQ) transmission count.
@@ -319,9 +338,15 @@ def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
 
     buf = jax.vmap(lambda *ls: _pack_leaves(ls, plan))(*leaves)  # [n, R, C]
     row_id = jnp.asarray(_row_ids(plan))
-    absrow = jnp.max(jnp.abs(buf), axis=2)                        # [n, R]
-    amax = jax.vmap(lambda a: jax.ops.segment_max(
-        a, row_id, num_segments=npk))(absrow)                     # [n, P]
+    # Per-packet amax from the LEAVES (plain max reductions), not a
+    # segment_max over the packed buffer: bit-identical (padding rows
+    # are zero), and SPMD-safe — the scatter-max lowering miscombined
+    # per-shard partials when XLA sharded the buffer rows on the pod
+    # mesh, scaling the dequantize by the replica count (caught by the
+    # scaled-FL pod-mesh parity check, tests/dist_checks.py).
+    amax = jnp.stack(
+        [jnp.max(jnp.abs(l.reshape(l.shape[0], -1).astype(jnp.float32)),
+                 axis=1) for l in leaves], axis=1)                # [n, P]
     scale = jnp.maximum(amax, 1e-12) / Q.qmax(bits)
     scale_row = jnp.take(scale, row_id, axis=1)[..., None]        # [n, R, 1]
     p_row = jnp.take(p, row_id, axis=1)[..., None]                # [n, R, 1]
@@ -332,7 +357,8 @@ def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
         y = packed_wire_2d(buf.reshape(n * r, c), rand.reshape(n * r, c),
                            scale_row.reshape(n * r, 1),
                            p_row.reshape(n * r, 1), bits,
-                           interpret=interpret).reshape(n, r, c)
+                           interpret=interpret,
+                           wire_dtype=wire_dtype).reshape(n, r, c)
     else:
         y = wire_transform(buf, rand, scale_row, p_row, bits,
                            code_dtype=(jnp.uint8 if wire_dtype == "int8"
@@ -348,10 +374,10 @@ def _check_wire_dtype(wire_dtype: str, bits: int, impl: str) -> str:
             raise ValueError(
                 f"int8 on-wire dtype holds at most 8-bit codewords, got "
                 f"quant_bits={bits}")
-        if impl not in ("packed",):
+        if impl not in ("packed", "kernel"):
             raise ValueError(
                 "wire_dtype='int8' is only implemented for the packed "
-                f"jnp path, not impl={impl!r}")
+                f"jnp and Pallas kernel paths, not impl={impl!r}")
     return wire_dtype
 
 

@@ -50,6 +50,21 @@ def synthetic_lm_batches(cfg, batch_size: int, seq_len: int,
         yield batch
 
 
+def synthetic_corpus(cfg, n: int, seq_len: int, seed: int = 0):
+    """Finite synthetic LM corpus for the scaled schemes: `n` Zipf token
+    rows (same distribution as `synthetic_lm_batches`) with labels =
+    tokens (next-token objective). Host arrays, so it slots into the
+    `Experiment` runner's `(x, y)` corpus contract the sentiment splits
+    fill for the paper model."""
+    rng = np.random.default_rng(seed)
+    vocab = cfg.vocab_size
+    ranks = np.arange(1, vocab)
+    p = 1.0 / ranks ** 1.1
+    p /= p.sum()
+    toks = 1 + rng.choice(vocab - 1, size=(n, seq_len), p=p).astype(np.int32)
+    return toks, toks.copy()
+
+
 def sharded_batches(x, y, batch_size, mesh=None, seed=0, **kw):
     """batches() + device_put with the batch logical sharding."""
     mesh = mesh or shd.current_mesh()

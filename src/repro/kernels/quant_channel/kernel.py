@@ -60,33 +60,42 @@ def _qc_kernel(x_ref, rand_ref, p_ref, o_ref, *, bits: int):
     o_ref[...] = (q_hat.astype(jnp.float32) * scale).astype(o_ref.dtype)
 
 
-def _packed_kernel(x_ref, rand_ref, scale_ref, p_ref, o_ref, *, bits: int):
+def _packed_kernel(x_ref, rand_ref, scale_ref, p_ref, o_ref, *, bits: int,
+                   code_dtype=jnp.uint32):
     """Packed-wire body: per-ROW quantization scale and bit-error prob
     (delivered as [bm, 1] tiles) instead of a blockwise scale — each row
-    belongs to exactly one packet (leaf / user), see core/wire.py."""
+    belongs to exactly one packet (leaf / user), see core/wire.py.
+    `code_dtype=jnp.uint8` is the on-wire int8 mode (bits <= 8): the
+    codeword tile lives as one byte per element between quantize and
+    dequantize — same codes, same flip mask, bit-identical output."""
     x = x_ref[...]
     scale = scale_ref[...]                       # [bm, 1], broadcasts
     qmax = float(2 ** (bits - 1) - 1)
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
-    code = (q + jnp.int32(qmax)).astype(jnp.uint32)
-    code = code ^ bit_flip_mask(rand_ref[...], bits, p_ref[...])
+    code = (q + jnp.int32(qmax)).astype(code_dtype)
+    code = code ^ bit_flip_mask(rand_ref[...], bits,
+                                p_ref[...]).astype(code_dtype)
     q_hat = jnp.clip(code.astype(jnp.int32) - jnp.int32(qmax), -qmax, qmax)
     o_ref[...] = (q_hat.astype(jnp.float32) * scale).astype(o_ref.dtype)
 
 
 def packed_wire_2d(buf: jax.Array, rand: jax.Array, scale_row: jax.Array,
                    p_row: jax.Array, bits: int,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True,
+                   wire_dtype: str = "float32") -> jax.Array:
     """buf [R, C] float32, rand [R, C] uint32, scale_row/p_row [R, 1]
     float32. Grid over the packed 2D view; one launch per pytree (or per
-    N-user upload when the caller stacks users into R)."""
+    N-user upload when the caller stacks users into R).
+    `wire_dtype="int8"` (bits <= 8) keeps the codeword tile in uint8 —
+    4x less VMEM for the buffer that crosses the channel."""
     R, C = buf.shape
     bm = next(b for b in (BLOCK_M, 64, 32, 16, 8, 4, 2, 1) if R % b == 0)
     bn = min(BLOCK_N, C)
     assert C % bn == 0, (R, C, bm, bn)
     grid = (R // bm, C // bn)
+    code_dtype = jnp.uint8 if wire_dtype == "int8" else jnp.uint32
     return pl.pallas_call(
-        functools.partial(_packed_kernel, bits=bits),
+        functools.partial(_packed_kernel, bits=bits, code_dtype=code_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),

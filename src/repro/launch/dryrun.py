@@ -7,14 +7,23 @@ cost_analysis, and the collective-op byte census for §Roofline.
 
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
         --shape train_4k --mesh pod
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+        --shape train_4k --mesh multipod --mode fl
     PYTHONPATH=src python -m repro.launch.dryrun --all
+
+Train-kind shapes lower the SAME step the `Experiment` driver trains:
+the scheme built by `build_scheme(wcfg, cfg=..., shape=...)` exposes
+`lower_step(mesh)` (schemes/scaled.py), so the dry-run and the training
+path cannot drift apart. `--mode fl` lowers the pod-mesh FL cycle
+(`make_fl_train_step`) with the user axis sharded onto `pod`
+(nn/sharding.py "users" rule); FL has no prefill/decode shapes, so
+non-train kinds fall back to the plain forward.
 
 Results land in benchmarks/results/dryrun/<arch>_<shape>_<mesh>[_tag].json
 (one file per combo, written incrementally so a crash loses nothing).
 """
 import argparse
 import json
-import re
 import time
 import traceback
 
@@ -25,11 +34,12 @@ from repro.configs import SHAPES, get_arch, ASSIGNED
 from repro.configs.base import WirelessConfig
 from repro.launch.mesh import make_production_mesh
 from repro.models import api as M
-from repro.nn import tree_shardings, axes_tree, named_sharding, use_mesh
-from repro.optim.adamw import AdamWState
-from repro.runtime.train_step import (TrainState, make_train_step,
-                                      make_prefill_step, trainable_axes)
+from repro.nn import axes_tree, named_sharding, use_mesh
+from repro.runtime.train_step import (axes_to_shardings, key_sds,
+                                      make_prefill_step,
+                                      train_state_sds_and_shardings)
 from repro.runtime.serve_step import make_decode_step, cache_specs
+from repro.schemes import build_scheme
 
 RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                            "benchmarks", "results", "dryrun")
@@ -55,8 +65,10 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
     t0 = time.time()
     try:
         with use_mesh(mesh):
-            if shape_cfg.kind in ("train", "prefill"):
-                lowered = _lower_train_or_prefill(cfg, shape_cfg, mesh, mode)
+            if shape_cfg.kind == "train":
+                lowered = _lower_train(cfg, shape_cfg, mesh, mode)
+            elif shape_cfg.kind == "prefill":
+                lowered = _lower_prefill(cfg, shape_cfg, mesh, mode)
             else:
                 lowered = _lower_decode(cfg, shape_cfg, mesh)
             t1 = time.time()
@@ -64,6 +76,8 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
             t2 = time.time()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, list):   # jax<=0.4.x: one dict per device
+                cost = cost[0] if cost else {}
             record["lower_s"] = round(t1 - t0, 2)
             record["compile_s"] = round(t2 - t1, 2)
             record["memory"] = {
@@ -91,69 +105,62 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
     return record
 
 
-def _key_sds():
-    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+def _wcfg_for(mode: str, mesh):
+    """The dry-run link config per mode: CL has no radio in the step;
+    FL's user count is the mesh's pod-axis extent (each user one pod
+    slice; 2 users on a single-pod mesh, replicated)."""
+    if mode == "cl":
+        return None
+    if mode == "fl":
+        return WirelessConfig(mode="fl",
+                              n_users=max(mesh.shape.get("pod", 1), 2))
+    return WirelessConfig(mode="sl")
 
 
-def _train_state_sds_and_shardings(cfg, wcfg, mesh, optimizer="adamw"):
-    from repro.runtime.train_step import init_train_state
-    sds = jax.eval_shape(
-        lambda k: init_train_state(k, cfg, wcfg, optimizer), _key_sds())
-    tax = trainable_axes(cfg, wcfg)
-    if optimizer == "adamw":
-        opt_ax = AdamWState(tax, tax, ())
-    else:
-        from repro.optim.sgd import SGDState
-        opt_ax = SGDState(tax, ())
-    state_ax = TrainState(tax, opt_ax, ())
-    shardings = _axes_to_shardings(sds, state_ax, mesh)
-    return sds, shardings
-
-
-def _axes_to_shardings(sds_tree, axes_tree_, mesh):
-    def is_axes_leaf(a):
-        return a == () or (isinstance(a, tuple) and all(
-            isinstance(e, (str, type(None))) for e in a))
-
-    return jax.tree.map(
-        lambda ax, sds: named_sharding(sds.shape, ax, mesh),
-        axes_tree_, sds_tree, is_leaf=is_axes_leaf)
-
-
-def _lower_train_or_prefill(cfg, shape_cfg, mesh, mode):
-    wcfg = (WirelessConfig(mode=mode, perfect_channel=(mode == "cl"))
-            if mode != "cl" else None)
-    batch_sds = M.input_specs(cfg, shape_cfg)
-    batch_ax = M.input_axes(cfg, shape_cfg)
-    batch_sh = _axes_to_shardings(batch_sds, batch_ax, mesh)
+def _lower_train(cfg, shape_cfg, mesh, mode):
     n_data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
-
-    if shape_cfg.kind == "train":
-        state_sds, state_sh = _train_state_sds_and_shardings(cfg, wcfg, mesh)
+    if cfg.family == "tiny":
+        # the paper model runs the tiny schemes (no lower_step); lower
+        # its generic train step directly, as the pre-port dry-run did
+        if mode == "fl":
+            raise ValueError("tiny-FL has no pod-mesh mapping; dry-run "
+                             "fl targets the assigned archs")
+        from repro.runtime.train_step import make_train_step
+        wcfg = _wcfg_for(mode, mesh)
+        state_sds, state_sh = train_state_sds_and_shardings(cfg, wcfg,
+                                                           mesh)
+        batch_sds = M.input_specs(cfg, shape_cfg)
+        batch_sh = axes_to_shardings(batch_sds,
+                                     M.input_axes(cfg, shape_cfg), mesh)
         step = make_train_step(cfg, shape_cfg, wcfg, n_data_shards=n_data)
-        fn = jax.jit(step,
-                     in_shardings=(state_sh, batch_sh, None),
-                     out_shardings=(state_sh, None),
-                     donate_argnums=(0,))
-        return fn.lower(state_sds, batch_sds, _key_sds())
+        fn = jax.jit(step, in_shardings=(state_sh, batch_sh, None),
+                     out_shardings=(state_sh, None), donate_argnums=(0,))
+        return fn.lower(state_sds, batch_sds, key_sds())
+    scheme = build_scheme(_wcfg_for(mode, mesh), cfg=cfg, shape=shape_cfg)
+    return scheme.lower_step(mesh, n_data_shards=n_data)
 
-    # prefill: forward only on trainable params
-    from repro.runtime.train_step import init_train_state
-    state_sds, state_sh = _train_state_sds_and_shardings(cfg, wcfg, mesh)
+
+def _lower_prefill(cfg, shape_cfg, mesh, mode):
+    # prefill: forward only on trainable params (fl -> plain forward)
+    wcfg = _wcfg_for(mode, mesh) if mode == "sl" else None
+    batch_sds = M.input_specs(cfg, shape_cfg)
+    batch_sh = axes_to_shardings(batch_sds, M.input_axes(cfg, shape_cfg),
+                                 mesh)
+    state_sds, state_sh = train_state_sds_and_shardings(cfg, wcfg, mesh)
     step = make_prefill_step(cfg, shape_cfg, wcfg)
     fn = jax.jit(step, in_shardings=(state_sh.trainable, batch_sh, None))
-    return fn.lower(state_sds.trainable, batch_sds, _key_sds())
+    return fn.lower(state_sds.trainable, batch_sds, key_sds())
 
 
 def _lower_decode(cfg, shape_cfg, mesh):
-    from repro.nn import init_params, shapes_tree
+    from repro.nn import shapes_tree
     spec_tree = M.param_specs(cfg)
     params_sds = shapes_tree(spec_tree)
     params_ax = axes_tree(spec_tree)
-    params_sh = _axes_to_shardings(params_sds, params_ax, mesh)
+    params_sh = axes_to_shardings(params_sds, params_ax, mesh)
 
     cache_sds, cache_ax = cache_specs(cfg, shape_cfg)
-    cache_sh = _axes_to_shardings(cache_sds, cache_ax, mesh)
+    cache_sh = axes_to_shardings(cache_sds, cache_ax, mesh)
 
     tok_sds = jax.ShapeDtypeStruct((shape_cfg.global_batch, 1), jnp.int32)
     tok_sh = named_sharding(tok_sds.shape, ("batch", None), mesh)
@@ -172,7 +179,7 @@ def main():
     ap.add_argument("--arch", default=None)
     ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
-    ap.add_argument("--mode", default="cl", choices=["cl", "sl"])
+    ap.add_argument("--mode", default="cl", choices=["cl", "fl", "sl"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--tag", default="")
     ap.add_argument("--microbatch", type=int, default=0,

@@ -26,6 +26,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
-    """Tiny mesh for CI-style tests (4 host devices)."""
+    """Tiny mesh for CI-style tests (4 host devices). Degrades to an
+    all-ones mesh over the same axis names when the host has fewer
+    devices (the in-process pytest/CLI case: 1 CPU device) — every
+    sharding rule then resolves to replication, same code path."""
     n = math.prod(shape)
+    if len(jax.devices()) < n:
+        shape = (1,) * len(shape)
+        n = 1
     return jax.make_mesh(shape, axes, devices=jax.devices()[:n])

@@ -1,60 +1,97 @@
-"""Production training driver.
+"""Unified training driver: every arch, every paradigm, ONE loop.
 
     PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
-        --mode cl --steps 20 --reduced --batch 8 --seq 128
+        --mode fl --steps 20 --reduced --batch 8 --seq 128
     PYTHONPATH=src python -m repro.launch.train --arch paper-tinylstm \
-        --mode sl --steps 50
+        --mode fl --steps 2
 
-Runs the (optionally reduced) architecture with the selected wireless
-topology (cl / sl — fl has its own runtime, see examples/federated_
-wireless.py), synthetic data, checkpointing, and a metrics log. On real
-TPU hardware the same driver shards over make_production_mesh(); on CPU
-it uses whatever devices exist (a 1-device mesh degrades every sharding
-rule to replication — same code path).
+Both the paper's tiny model and the scaled assigned architectures run
+through `build_scheme(...)` + `Experiment` (src/repro/schemes/): the
+tiny model gets the parity-pinned CL/FL/SL schemes on the sentiment
+corpus with the paper's lr schedule; any other arch gets the scaled
+schemes (schemes/scaled.py — fused CL/SL train steps, the pod-mesh FL
+cycle) on a synthetic Zipf LM corpus at a constant `--lr`. Every
+communication cycle is billed into a `RoundReport` (bits / n_tx /
+energy), printed per cycle and summarized at exit. On real TPU the
+same driver shards over the production mesh; on CPU a 1-device mesh
+degrades every sharding rule to replication — same code path.
+
+`--steps` is the target TOTAL optimizer steps (per client); the driver
+runs enough communication cycles to reach it (tiny CL/SL cycle = one
+corpus epoch; tiny FL cycle = J local epochs; scaled CL/SL cycle =
+`--cycle-steps`; scaled FL cycle = `local_steps`). Checkpointing saves
+the scheme's train-state pytree every `--ckpt-every` cycles and
+restores the latest at startup (host-side cycle/step counters restart,
+so the RNG stream of a resumed run is that of a fresh one — the
+compiled state, weights and optimizer moments carry over).
 """
 from __future__ import annotations
 
 import argparse
-import json
-import os
+import math
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
                                    save_checkpoint)
-from repro.configs import SHAPES, get_arch
+from repro.configs import get_arch
 from repro.configs.base import ShapeConfig, WirelessConfig
-from repro.data.pipeline import synthetic_lm_batches
 from repro.launch.mesh import make_test_mesh
-from repro.models import api as M
 from repro.nn import use_mesh
-from repro.runtime.train_step import (init_train_state, make_train_step,
-                                      trainable_axes)
+from repro.schemes import BATCH, Experiment, build_scheme
 
 
 def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--mode", default="cl", choices=["cl", "sl"])
-    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--mode", default="cl", choices=["cl", "fl", "sl"])
+    ap.add_argument("--steps", type=int, default=20,
+                    help="target total optimizer steps (per client)")
+    ap.add_argument("--cycle-steps", type=int, default=5,
+                    help="scaled CL/SL: optimizer steps per cycle")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--reduced", action="store_true",
                     help="train the smoke-scale variant (CPU-friendly)")
-    ap.add_argument("--optimizer", default="adamw", choices=["adamw", "sgd"])
-    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--optimizer", default=None, choices=["adamw", "sgd"],
+                    help="scaled cl/sl optimizer (default adamw); the "
+                         "pod-FL cycle and the paper schemes are "
+                         "SGD-momentum by construction")
+    ap.add_argument("--lr", type=float, default=None,
+                    help="constant lr (default: 3e-4 scaled; the paper "
+                         "schedule for paper-tinylstm)")
     ap.add_argument("--snr-db", type=float, default=20.0)
     ap.add_argument("--quant-bits", type=int, default=8)
     ap.add_argument("--split-layer", type=int, default=2)
+    ap.add_argument("--n-users", type=int, default=3, help="FL users N")
+    ap.add_argument("--local-steps", type=int, default=5,
+                    help="FL local steps/epochs J")
+    ap.add_argument("--n-train", type=int, default=0,
+                    help="corpus rows (0 = 3072 tiny / 512 scaled)")
+    ap.add_argument("--n-test", type=int, default=0,
+                    help="held-out rows (0 = 512 tiny / 128 scaled)")
     ap.add_argument("--ckpt-dir", default="")
-    ap.add_argument("--ckpt-every", type=int, default=100)
-    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--ckpt-every", type=int, default=10,
+                    help="checkpoint every k cycles")
+    ap.add_argument("--log-every", type=int, default=1,
+                    help="print every k cycles")
     ap.add_argument("--mesh", default="none", choices=["none", "test"])
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
+
+
+def build_wcfg(args) -> WirelessConfig | None:
+    if args.mode == "cl":
+        return None           # ideal link; the corpus crossing still bills
+    if args.mode == "fl":
+        return WirelessConfig(mode="fl", snr_db=args.snr_db,
+                              quant_bits=args.quant_bits,
+                              local_steps=args.local_steps,
+                              n_users=args.n_users)
+    return WirelessConfig(mode="sl", snr_db=args.snr_db,
+                          quant_bits=args.quant_bits,
+                          split_layer=args.split_layer)
 
 
 def main(argv=None) -> dict:
@@ -62,48 +99,83 @@ def main(argv=None) -> dict:
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    wcfg = None
-    if args.mode == "sl":
-        wcfg = WirelessConfig(mode="sl", snr_db=args.snr_db,
-                              quant_bits=args.quant_bits,
-                              split_layer=args.split_layer)
-    shape = ShapeConfig("cli", args.seq, args.batch, "train",
-                        microbatch=args.batch)
+    tiny = cfg.family == "tiny"
+    wcfg = build_wcfg(args)
+    n_train = args.n_train or (3072 if tiny else 512)
+    n_test = args.n_test or (512 if tiny else 128)
+
+    if tiny:
+        scheme = build_scheme(wcfg)
+        if args.mode == "fl":
+            spc = args.local_steps * (n_train // args.n_users // BATCH)
+        else:
+            spc = n_train // BATCH
+        # the paper's lr schedule unless an explicit --lr pins a constant
+        lr_schedule = (lambda e: args.lr) if args.lr is not None else None
+    else:
+        shape = ShapeConfig("cli", args.seq, args.batch, "train",
+                            microbatch=args.batch)
+        if args.mode == "fl":
+            # pod FL is SGD-momentum by construction; refuse rather
+            # than silently train a different optimizer than requested
+            if args.optimizer not in (None, "sgd"):
+                raise SystemExit(
+                    f"--mode fl runs SGD-momentum local steps; "
+                    f"--optimizer {args.optimizer} is not supported")
+            kwargs = {}
+        else:
+            kwargs = {"optimizer": args.optimizer or "adamw"}
+        scheme = build_scheme(wcfg, cfg=cfg, shape=shape,
+                              steps_per_cycle=args.cycle_steps, **kwargs)
+        spc = args.local_steps if args.mode == "fl" else args.cycle_steps
+        lr = args.lr if args.lr is not None else 3e-4
+        lr_schedule = lambda e: lr               # noqa: E731
+    cycles = max(1, math.ceil(args.steps / max(spc, 1)))
     mesh = make_test_mesh() if args.mesh == "test" else None
 
+    history = []
+    t0 = time.time()
+
+    def on_init(state):
+        if not args.ckpt_dir:
+            return state
+        last = latest_step(args.ckpt_dir)
+        if last is None:
+            return state
+        import dataclasses
+        train = restore_checkpoint(args.ckpt_dir, last, state.train)
+        print(f"restored checkpoint from cycle {last}")
+        return dataclasses.replace(state, train=train)
+
+    def on_cycle(cyc, acc, rep):
+        if cyc % args.log_every == 0 or cyc == cycles - 1:
+            dt = (time.time() - t0) / (cyc + 1)
+            print(f"cycle {cyc:4d}  loss {rep.loss:.4f}  acc {acc:.3f}  "
+                  f"bits {rep.bits:.3e}  n_tx {rep.n_tx:.0f}  "
+                  f"energy {rep.energy_j:.3e} J  ({dt:.2f}s/cycle)",
+                  flush=True)
+            history.append({"cycle": cyc, "loss": rep.loss, "acc": acc,
+                            "bits": rep.bits})
+            assert np.isfinite(rep.loss), f"loss diverged at cycle {cyc}"
+        if args.ckpt_dir and (cyc + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, cyc + 1, exp.final_state.train)
+
     with use_mesh(mesh):
-        key = jax.random.PRNGKey(args.seed)
-        state = init_train_state(key, cfg, wcfg, args.optimizer)
-        step_fn = jax.jit(make_train_step(
-            cfg, shape, wcfg, optimizer=args.optimizer, lr=args.lr))
-
-        start = 0
+        exp = Experiment(scheme, cycles=cycles, seed=args.seed,
+                         n_train=n_train, n_test=n_test,
+                         lr_schedule=lr_schedule,
+                         on_init=on_init, on_cycle=on_cycle)
+        res = exp.run()
         if args.ckpt_dir:
-            last = latest_step(args.ckpt_dir)
-            if last is not None:
-                state = restore_checkpoint(args.ckpt_dir, last, state)
-                start = last
-                print(f"resumed from step {start}")
+            save_checkpoint(args.ckpt_dir, cycles, exp.final_state.train)
 
-        batches = synthetic_lm_batches(cfg, args.batch, args.seq, args.seed)
-        t0 = time.time()
-        history = []
-        for i in range(start, args.steps):
-            batch = next(batches)
-            state, metrics = step_fn(state, batch,
-                                     jax.random.fold_in(key, i))
-            if i % args.log_every == 0 or i == args.steps - 1:
-                loss = float(metrics["loss"])
-                dt = time.time() - t0
-                print(f"step {i:5d}  loss {loss:.4f}  "
-                      f"({dt / max(i - start + 1, 1):.2f}s/step)", flush=True)
-                history.append({"step": i, "loss": loss})
-                assert np.isfinite(loss), f"loss diverged at step {i}"
-            if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
-                save_checkpoint(args.ckpt_dir, i + 1, state)
-        if args.ckpt_dir:
-            save_checkpoint(args.ckpt_dir, args.steps, state)
-    return {"history": history, "final_loss": history[-1]["loss"]}
+    init_bits = exp.init_delivery.bits if exp.init_delivery else 0.0
+    print(f"done: {cycles} cycles, final acc {res.final_accuracy:.3f}, "
+          f"total bits {res.total_bits:.3e} "
+          f"(init {init_bits:.3e}), "
+          f"energy {sum(r.energy_j for r in exp.reports):.3e} J")
+    return {"history": history, "final_loss": history[-1]["loss"],
+            "result": res}
 
 
 if __name__ == "__main__":

@@ -11,6 +11,13 @@ cross-pod collectives appear in the HLO for the local phase), then the
 quantized, channel-corrupted updates are FedAvg'd with a single cross-pod
 mean — the only `pod`-axis collective in the program. A DiLoCo-style
 local-SGD schedule with a lossy physical channel.
+
+Both share ONE optimizer/loss core: `runtime.train_step.make_local_step`
+(the grad + SGD-momentum update). The step built here is what
+`schemes/scaled.py` drives behind the Scheme protocol; the sync's
+crossings live inside the jitted program, so the scheme bills them by
+replaying the fade/ARQ draw (`wire.drawn_stacked_tx` on the same
+`fold_in(key, 999)` channel key).
 """
 from __future__ import annotations
 
@@ -19,34 +26,22 @@ import jax.numpy as jnp
 
 from repro.core import federated as FED
 from repro.core import wire as WIRE
-from repro.models import api as M
-from repro.models import lstm_tiny
-from repro.optim import sgd_momentum
-from repro.runtime.train_step import _loss, TrainState
+from repro.runtime.train_step import TrainState, make_local_step
+
+SYNC_KEY_FOLD = 999   # the sync's channel key is fold_in(round key, 999)
 
 
 # --------------------------------------------------------------- tiny (paper)
 def make_local_step_tiny(cfg, wcfg, lr, momentum: float = 0.9,
                          prox_mu: float = 0.0, anchor=None):
-    """Local SGD step; with prox_mu > 0 it becomes FedProx (Li et al.
-    2020): grad += mu * (w - w_broadcast), pulling heterogeneous users
-    back toward the cycle's anchor — the standard fix for the non-IID
-    drift the extension study measures (benchmarks/extensions.py)."""
-    _, opt_update = sgd_momentum(momentum)
-
-    def local_step(state: TrainState, batch_key):
-        batch, key = batch_key
-        grad_fn = jax.value_and_grad(_loss, has_aux=True)
-        (_, metrics), g = grad_fn(state.trainable, batch, cfg, None, key, 0)
-        if prox_mu and anchor is not None:
-            g = jax.tree.map(
-                lambda gi, wi, ai: gi + prox_mu * (wi - ai),
-                g, state.trainable, anchor)
-        trainable, opt_state = opt_update(g, state.opt_state,
-                                          state.trainable, lr)
-        return TrainState(trainable, opt_state, state.step + 1), metrics
-
-    return local_step
+    """Local SGD step for the paper's tiny model — a thin alias of the
+    shared `make_local_step` core (`wcfg` kept for call-site compat:
+    FL local steps are radio-free, only the sync crosses the channel);
+    with prox_mu > 0 it becomes FedProx (Li et al. 2020), the standard
+    fix for the non-IID drift the extension study measures
+    (benchmarks/extensions.py)."""
+    del wcfg
+    return make_local_step(cfg, lr, momentum, prox_mu, anchor)
 
 
 def fl_round_tiny(key, user_states, user_batches, cfg, wcfg, lr):
@@ -55,7 +50,7 @@ def fl_round_tiny(key, user_states, user_batches, cfg, wcfg, lr):
     n_users = wcfg.n_users
     j = jax.tree.leaves(user_batches)[0].shape[1]
     keys = jax.random.split(key, n_users * j).reshape(n_users, j, 2)
-    kch = jax.random.fold_in(key, 999)
+    kch = jax.random.fold_in(key, SYNC_KEY_FOLD)
 
     states, metrics = FED.local_steps_vmapped(
         local_step, user_states, (user_batches, keys))
@@ -70,34 +65,41 @@ def fl_round_tiny(key, user_states, user_batches, cfg, wcfg, lr):
 
 # --------------------------------------------------------- production (pod)
 def make_fl_train_step(cfg, shape_cfg, wcfg, n_users: int = 2,
-                       lr: float = 3e-4):
+                       lr: float = 3e-4, momentum: float = 0.9):
     """FL step for the assigned archs on the multi-pod mesh. State trees
     carry a leading [n_users] axis (logical axis "users" -> mesh "pod").
-    batch: [n_users, local_batch, S]."""
-    _, opt_update = sgd_momentum(0.9)
+    batch: [n_users, local_batch, S].
 
-    def local_steps(state, batch, key):
+    Returns fl_step(state, batch, key[, lr]) -> (state, metrics): one
+    whole communication cycle — wcfg.local_steps pod-local SGD steps
+    per user, then the quantized channel sync — as ONE XLA program. The
+    builder's `lr` is only the default of the optional 4th argument, so
+    (like make_train_step) a whole lr schedule reuses one compiled
+    executable. The sync honors the full link config incl. outage-ARQ
+    (wcfg.arq_attempts / arq_min_f2)."""
+
+    def local_steps(state, batch, key, lr):
+        local_step = make_local_step(cfg, lr, momentum)
+
         def one(state, batch, key):
             def body(st, j):
-                grad_fn = jax.value_and_grad(_loss, has_aux=True)
-                (_, m), g = grad_fn(st.trainable, batch, cfg, None,
-                                    jax.random.fold_in(key, j), 0)
-                tr, opt = opt_update(g, st.opt_state, st.trainable, lr)
-                return TrainState(tr, opt, st.step + 1), m
+                return local_step(st, (batch, jax.random.fold_in(key, j)))
             return jax.lax.scan(body, state, jnp.arange(wcfg.local_steps))
         return jax.vmap(one)(state, batch,
                              jax.random.split(key, n_users))
 
-    def fl_step(state: TrainState, batch: dict, key: jax.Array):
-        state, metrics = local_steps(state, batch, key)
+    def fl_step(state: TrainState, batch: dict, key: jax.Array, lr=lr):
+        state, metrics = local_steps(state, batch, key, lr)
         # ---- quantized channel sync (the only cross-user collective):
         # the whole N-user model upload is one packed-wire pass (the
         # user axis stays a leading batch axis of the packed buffer, so
         # the mean below remains the single cross-pod all-reduce)
         received = WIRE.transmit_stacked(
-            jax.random.fold_in(key, 999), state.trainable["model"],
+            jax.random.fold_in(key, SYNC_KEY_FOLD),
+            state.trainable["model"],
             bits=wcfg.quant_bits, snr_db=wcfg.snr_db, fading=wcfg.fading,
-            perfect=wcfg.perfect_channel)
+            perfect=wcfg.perfect_channel,
+            arq_attempts=wcfg.arq_attempts, arq_min_f2=wcfg.arq_min_f2)
         model = jax.tree.map(
             lambda r, leaf: jnp.broadcast_to(jnp.mean(r, axis=0),
                                              leaf.shape),

@@ -69,6 +69,34 @@ def _loss(trainable, batch, cfg, wcfg, key, window):
     return total, metrics
 
 
+def make_local_step(cfg, lr, momentum: float = 0.9,
+                    prox_mu: float = 0.0, anchor=None):
+    """ONE plain SGD+momentum step of `_loss` — the local-phase core
+    shared by the paper's tiny FL round (runtime/fl_runtime.py
+    `make_local_step_tiny`) and the pod-mesh FL step
+    (`make_fl_train_step`), so the loss/optimizer plumbing lives in one
+    place. FL local steps are RADIO-FREE by design (only the sync
+    crosses the channel), so there is no wcfg here. With prox_mu > 0 it
+    becomes FedProx (Li et al. 2020): grad += mu * (w - anchor),
+    pulling heterogeneous users back toward the cycle's broadcast
+    weights. `lr` may be a traced value."""
+    _, opt_update = sgd_momentum(momentum)
+
+    def local_step(state: TrainState, batch_key):
+        batch, key = batch_key
+        grad_fn = jax.value_and_grad(_loss, has_aux=True)
+        (_, metrics), g = grad_fn(state.trainable, batch, cfg, None, key, 0)
+        if prox_mu and anchor is not None:
+            g = jax.tree.map(
+                lambda gi, wi, ai: gi + prox_mu * (wi - ai),
+                g, state.trainable, anchor)
+        trainable, opt_state = opt_update(g, state.opt_state,
+                                          state.trainable, lr)
+        return TrainState(trainable, opt_state, state.step + 1), metrics
+
+    return local_step
+
+
 def init_train_state(key, cfg, wcfg=None, optimizer: str = "adamw",
                      momentum: float = 0.9) -> TrainState:
     kp, kc = jax.random.split(key)
@@ -156,3 +184,64 @@ def make_prefill_step(cfg, shape_cfg, wcfg=None):
         return logits[:, -1]
 
     return prefill
+
+
+# ------------------------------------------------- state specs / shardings
+def key_sds():
+    """ShapeDtypeStruct of a PRNG key — the third argument of every
+    built step, shared by the dry-run lowerings and `lower_step`."""
+    return jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+
+def _is_axes_leaf(a):
+    """A logical-axes tree leaf: a (possibly empty) tuple of axis names."""
+    return a == () or (isinstance(a, tuple) and all(
+        isinstance(e, (str, type(None))) for e in a))
+
+
+def axes_to_shardings(sds_tree, axes_tree_, mesh):
+    """(ShapeDtypeStruct tree, logical-axes tree) -> NamedSharding tree,
+    traversed by the axes tree (whose leaves are tuples of axis names).
+    The ONE helper behind the dry-run lowerings and the scaled schemes'
+    sharded state placement."""
+    from repro.nn import named_sharding
+
+    return jax.tree.map(
+        lambda ax, sds: named_sharding(sds.shape, ax, mesh),
+        axes_tree_, sds_tree, is_leaf=_is_axes_leaf)
+
+
+def train_state_axes(cfg, wcfg=None, optimizer: str = "adamw",
+                     n_users: int = 0):
+    """Logical-axes tree of a whole TrainState (trainable + optimizer
+    moments + step). With n_users > 0 every leaf gains a leading
+    "users" axis — the pod-mesh FL layout (nn/sharding.py maps "users"
+    onto the `pod` mesh axis)."""
+    tax = trainable_axes(cfg, wcfg)
+    if n_users:
+        tax = jax.tree.map(lambda ax: ("users",) + ax, tax,
+                           is_leaf=_is_axes_leaf)
+    if optimizer == "adamw":
+        from repro.optim.adamw import AdamWState
+        opt_ax = AdamWState(tax, tax, ())
+    else:
+        from repro.optim.sgd import SGDState
+        opt_ax = SGDState(tax, ())
+    return TrainState(tax, opt_ax, ())
+
+
+def train_state_sds_and_shardings(cfg, wcfg, mesh, optimizer: str = "adamw",
+                                  n_users: int = 0):
+    """(ShapeDtypeStruct, NamedSharding) trees for one TrainState —
+    shared by launch/dryrun.py's lowerings and any caller that wants to
+    place a (possibly user-stacked) train state on a mesh without
+    allocating it first."""
+    sds = jax.eval_shape(
+        lambda k: init_train_state(k, cfg, wcfg, optimizer),
+        jax.ShapeDtypeStruct((2,), jnp.uint32))
+    if n_users:
+        sds = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((n_users,) + s.shape, s.dtype),
+            sds)
+    state_ax = train_state_axes(cfg, wcfg, optimizer, n_users)
+    return sds, axes_to_shardings(sds, state_ax, mesh)

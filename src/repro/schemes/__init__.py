@@ -19,6 +19,8 @@ from repro.schemes.population import (ClientSpec, ParticipationPolicy,
                                       PopulationScheme)
 from repro.schemes.radio import Delivery, Radio
 from repro.schemes.run import Experiment, build_scheme
+from repro.schemes.scaled import (ScaledCentralizedScheme,
+                                  ScaledFederatedScheme, ScaledSplitScheme)
 from repro.schemes.split import SplitScheme, evaluate_sl
 
 __all__ = [
@@ -27,6 +29,7 @@ __all__ = [
     "SchemeState", "batches_of", "corpus", "evaluate", "lr_at",
     "step_flops", "train_cycle", "train_shape", "user_side_flops_sl",
     "CentralizedScheme", "FederatedScheme", "SplitScheme", "evaluate_sl",
+    "ScaledCentralizedScheme", "ScaledFederatedScheme", "ScaledSplitScheme",
     "ClientSpec", "ParticipationPolicy", "PopulationScheme", "Delivery",
     "Radio", "Experiment", "build_scheme",
 ]

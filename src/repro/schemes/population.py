@@ -27,7 +27,10 @@ One round:
    deterministic, disjoint from every training stream); then the
    deadline model estimates each active radio-bearing client's round
    time (compute + payload / link rate, `Radio.rate_bps`) and drops
-   stragglers over `deadline_s`. Dropped clients — sampled-out or
+   stragglers over `deadline_s`. With `deadline_jitter_sigma` > 0 the
+   compute term carries a per-(client, round) lognormal multiplier
+   drawn from the same fleet seed stream, so straggler identity varies
+   across rounds (sigma = 0: no rng drawn, deterministic estimates). Dropped clients — sampled-out or
    straggling — are billed as ZERO-bit, zero-energy, zero-step rounds
    in their `ClientReport` (`status` records why);
 1. every active FL client runs its J local epochs from the current
@@ -249,6 +252,7 @@ class PopulationScheme:
                  capture: bool = False, capture_every: int = 8,
                  policy: Optional[ParticipationPolicy] = None,
                  deadline_s: Optional[float] = None,
+                 deadline_jitter_sigma: float = 0.0,
                  perfect_eval: bool = False):
         if not clients:
             raise ValueError("PopulationScheme needs at least one "
@@ -267,6 +271,20 @@ class PopulationScheme:
         self.policy = policy or ParticipationPolicy.full()
         self.policy.validate(len(self.clients))
         self.deadline_s = deadline_s
+        # Stochastic deadlines (ROADMAP fleet follow-up): per-round
+        # LOGNORMAL jitter on each client's compute term — exp(sigma * z),
+        # z ~ N(0, 1) drawn per (client, round) from the fleet seed
+        # stream — so straggler identity varies across rounds instead of
+        # the same clients straggling every time. sigma = 0 draws NO rng
+        # and keeps the deterministic estimate bit-for-bit.
+        if deadline_jitter_sigma < 0.0:
+            raise ValueError("deadline_jitter_sigma must be >= 0, got "
+                             f"{deadline_jitter_sigma}")
+        if deadline_jitter_sigma > 0.0 and deadline_s is None:
+            raise ValueError("deadline_jitter_sigma jitters the straggler "
+                             "model's compute estimate — it needs a "
+                             "deadline_s to act on")
+        self.deadline_jitter_sigma = float(deadline_jitter_sigma)
         self.perfect_eval = perfect_eval
         self.radio = Radio.from_wcfg(self.wcfg)    # server-side reference
         self._sl_idx = [i for i, s in enumerate(self.clients)
@@ -340,15 +358,17 @@ class PopulationScheme:
                     f"{len(xs)} samples < one batch ({BATCH})")
         return shards
 
-    def _estimate_round_s(self, i: int) -> float:
-        """The deadline model: one round's estimated wall seconds for
-        client i — local compute (steps x compute_s_per_step) plus the
-        round's expected on-air payload over this client's expected
-        link rate (`Radio.rate_bps`). No deadline model applies to CL
-        members — their rounds are radio-silent and the per-round
-        compute is the SERVER's — so their estimate is 0.0 and they
-        are never droppable. Deterministic per client, so the same
-        fleet drops the same stragglers every round."""
+    def _estimate_terms(self, i: int):
+        """The deadline model's two terms for client i: (compute
+        seconds, comm seconds) — local compute (steps x
+        compute_s_per_step) and the round's expected on-air payload
+        over this client's expected link rate (`Radio.rate_bps`). No
+        deadline model applies to CL members — their rounds are
+        radio-silent and the per-round compute is the SERVER's — so
+        both terms are 0.0 and they are never droppable. Split so the
+        stochastic-deadline jitter can scale the COMPUTE term alone
+        (device speed varies round to round; the expected link rate is
+        already an ergodic average)."""
         spec = self.clients[i]
         radio = spec.radio
         steps = spec.local_epochs * self._spe[i]
@@ -360,8 +380,13 @@ class PopulationScheme:
             bits = (steps * sl_bits_per_step(spec.wcfg, radio.quant_bits)
                     * radio.expected_tx())
         else:            # cl: billed at init, rounds radio-silent,
-            return 0.0   # compute server-side — no deadline applies
-        return comp + bits / radio.rate_bps()
+            return 0.0, 0.0   # compute server-side — no deadline applies
+        return comp, bits / radio.rate_bps()
+
+    def _estimate_round_s(self, i: int) -> float:
+        """Deterministic (jitter-free) round-time estimate for client i."""
+        comp, comm = self._estimate_terms(i)
+        return comp + comm
 
     def estimated_round_s(self, i: int) -> float:
         """Client i's deadline-model round-time estimate (post-init)."""
@@ -400,8 +425,9 @@ class PopulationScheme:
                                        self._sl_wcfg, "sgd")
         self._model_elems = sum(int(l.size) for l in jax.tree.leaves(
             fl_full.trainable["model"]))
-        self._est_round_s = [self._estimate_round_s(i)
-                             for i in range(len(self.clients))]
+        self._est_terms = [self._estimate_terms(i)
+                           for i in range(len(self.clients))]
+        self._est_round_s = [comp + comm for comp, comm in self._est_terms]
 
         # CL members: the raw corpus crosses each member's OWN radio
         # once, billed here (the one CL convention — perfect links are
@@ -473,10 +499,29 @@ class PopulationScheme:
         return jax.random.fold_in(jax.random.PRNGKey(seed + 3), cycle)
 
     # --------------------------------------------------- fleet dynamics
+    def _round_estimates(self, seed: int, cycle: int) -> list:
+        """The round's per-client time estimates. With
+        `deadline_jitter_sigma` > 0 the compute term is scaled by a
+        per-(client, round) lognormal multiplier exp(sigma * z) drawn
+        from the fleet seed stream (`fold_in(fold_in(PRNGKey(seed + 5),
+        cycle), 909)` — the participation stream's key folded once more,
+        so neither stream perturbs the other), making straggler identity
+        vary across rounds. sigma = 0 draws NO rng: the deterministic
+        estimates, bit-for-bit."""
+        if self.deadline_s is None or self.deadline_jitter_sigma == 0.0:
+            return list(self._est_round_s)
+        jk = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed + 5), cycle), 909)
+        z = np.asarray(jax.random.normal(jk, (len(self.clients),)))
+        mult = np.exp(self.deadline_jitter_sigma * z)
+        return [comp * float(mult[i]) + comm
+                for i, (comp, comm) in enumerate(self._est_terms)]
+
     def _participants(self, seed: int, cycle: int):
-        """The round's participation mask + per-client status: the
-        policy samples first (its own key stream), then the deadline
-        model drops active radio-bearing stragglers."""
+        """The round's participation mask + per-client status + time
+        estimates: the policy samples first (its own key stream), then
+        the deadline model — with optional per-round compute jitter —
+        drops active radio-bearing stragglers."""
         n = len(self.clients)
         status = ["ok"] * n
         if self.policy.kind == "full":
@@ -487,13 +532,14 @@ class PopulationScheme:
             for i in range(n):
                 if not part[i]:
                     status[i] = "sampled_out"
+        est = self._round_estimates(seed, cycle)
         if self.deadline_s is not None:
             for i in range(n):
                 if (part[i] and self.clients[i].paradigm in ("fl", "sl")
-                        and self._est_round_s[i] > self.deadline_s):
+                        and est[i] > self.deadline_s):
                     part[i] = False
                     status[i] = "straggler"
-        return part, status
+        return part, status, est
 
     # ------------------------------------------------------------- round
     def _aggregate(self, trees, weights):
@@ -532,7 +578,7 @@ class PopulationScheme:
         n = len(self.clients)
         sizes = np.asarray([len(xs) for xs, _ in state.data], np.float64)
         weights = sizes / sizes.sum()
-        part, status = self._participants(seed, cycle)
+        part, status, est_s = self._participants(seed, cycle)
         models = [None] * n
         reports: list = [None] * n
         new_groups, new_sl, new_sl_steps = [], [], []
@@ -570,7 +616,7 @@ class PopulationScheme:
                     loss=float(losses[u].mean()), steps=j,
                     bits=dlv.user_bits[u], n_tx=dlv.user_n_tx[u],
                     energy_j=group.radio.energy_j(dlv.user_bits[u]),
-                    est_round_s=self._est_round_s[i])
+                    est_round_s=est_s[i])
             new_groups.append(states if whole else jax.tree.map(
                 lambda old, upd: old.at[np.asarray(sel)].set(upd),
                 pop.groups[gi], states))
@@ -600,7 +646,7 @@ class PopulationScheme:
                 name=spec.name or f"sl{i}", paradigm="sl",
                 loss=float(m["loss"]), steps=n_steps, bits=bits,
                 n_tx=n_tx, energy_j=radio.energy_j(bits),
-                est_round_s=self._est_round_s[i])
+                est_round_s=est_s[i])
             new_sl.append(st)
             new_sl_steps.append(steps)
 
@@ -633,7 +679,7 @@ class PopulationScheme:
                     name=self.clients[i].name
                     or f"{self.clients[i].paradigm}{i}",
                     paradigm=self.clients[i].paradigm, loss=0.0, steps=0,
-                    status=status[i], est_round_s=self._est_round_s[i])
+                    status=status[i], est_round_s=est_s[i])
 
         # --- mixed aggregation over the round's PARTICIPANTS (module
         # docstring: weighted FedAvg over received FL weights +

@@ -1,16 +1,24 @@
 """`Experiment` — the ONE driver loop for every Scheme, plus
-`build_scheme` to map a WirelessConfig onto its paradigm.
+`build_scheme` to map a (WirelessConfig, arch) onto its paradigm.
 
 Replaces the three copy-pasted `train_cl`/`train_fl`/`train_sl` loops
-in benchmarks/common.py (now thin wrappers over this). The loop
-reproduces their RNG streams exactly — data rng `seed+1`, per-step keys
-`fold(seed+2, step)` for CL/SL, per-cycle keys `fold(seed+3, cycle)`
-for FL, CL upload key `seed+7` — so fixed-seed trajectories are
-unchanged (tests/test_scheme_parity.py pins this against goldens
-captured from the pre-refactor drivers).
+in benchmarks/common.py (now thin wrappers over this) AND the bespoke
+scaled-arch loops that used to live in launch/train.py. The loop
+reproduces the legacy RNG streams exactly — data rng `seed+1`, per-step
+keys `fold(seed+2, step)` for tiny CL/SL, per-cycle keys
+`fold(seed+3, cycle)` for FL, CL upload key `seed+7`; the scaled
+schemes pin `fold(PRNGKey(seed), step)`, the deleted launch/train.py
+stream — so fixed-seed trajectories are unchanged
+(tests/test_scheme_parity.py pins both against goldens / inline legacy
+loops).
 
     scheme = build_scheme(WirelessConfig(mode="fl", quant_bits=8))
     res = Experiment(scheme, cycles=7).run()     # -> RunResult
+
+    # the same driver at scale: any assigned arch behind the protocol
+    scheme = build_scheme(WirelessConfig(mode="fl"), cfg=get_arch(...),
+                          shape=ShapeConfig("cli", 128, 8, "train"))
+    res = Experiment(scheme, cycles=3).run()
 
 Per-cycle accounting lands in `Experiment.reports` (RoundReport each);
 `RunResult.total_bits` is their sum (plus any init-time data upload),
@@ -24,7 +32,7 @@ from typing import Any, Callable, Optional
 import numpy as np
 
 from repro.schemes.base import (N_TEST, N_TRAIN, RoundReport, RunResult,
-                                corpus, lr_at)
+                                SchemeState, corpus, lr_at)
 from repro.schemes.centralized import CentralizedScheme
 from repro.schemes.federated import FederatedScheme
 from repro.schemes.population import PopulationScheme
@@ -32,17 +40,34 @@ from repro.schemes.radio import Delivery
 from repro.schemes.split import SplitScheme
 
 
-def build_scheme(wcfg=None, capture: bool = False, clients=None, **kwargs):
-    """WirelessConfig -> Scheme. None means the no-radio CL baseline.
-    A `clients` list of ClientSpecs selects a heterogeneous
+def build_scheme(wcfg=None, capture: bool = False, clients=None,
+                 cfg=None, shape=None, **kwargs):
+    """(WirelessConfig, arch) -> Scheme. None wcfg means the no-radio CL
+    baseline. A `clients` list of ClientSpecs selects a heterogeneous
     `PopulationScheme` (wcfg is then the shared base config the specs
-    were built from). Extra kwargs go to the scheme constructor (e.g.
-    FL's `shards`, `dp_sigma`, `prox_mu`; SL's `protocol`,
-    `capture_every`, `perfect_eval`; the population's fleet dynamics:
-    `policy=ParticipationPolicy.uniform(k)`, `deadline_s`)."""
+    were built from). A non-tiny `cfg` (ArchConfig, with its train
+    `shape`) selects the scaled schemes (schemes/scaled.py) — the
+    pod-mesh FL step and the fused CL/SL steps behind the same
+    protocol; the paper model always runs the parity-pinned tiny
+    schemes. Extra kwargs go to the scheme constructor (e.g. FL's
+    `shards`, `dp_sigma`, `prox_mu`; SL's `protocol`, `capture_every`,
+    `perfect_eval`; the population's fleet dynamics:
+    `policy=ParticipationPolicy.uniform(k)`, `deadline_s`,
+    `deadline_jitter_sigma`; the scaled schemes' `steps_per_cycle`,
+    `optimizer`)."""
     if clients is not None:
         return PopulationScheme(wcfg, clients, capture=capture, **kwargs)
     mode = wcfg.mode if wcfg is not None else "cl"
+    if cfg is not None and cfg.family != "tiny":
+        from repro.schemes.scaled import (ScaledCentralizedScheme,
+                                          ScaledFederatedScheme,
+                                          ScaledSplitScheme)
+        cls = {"cl": ScaledCentralizedScheme,
+               "fl": ScaledFederatedScheme,
+               "sl": ScaledSplitScheme}.get(mode)
+        if cls is None:
+            raise ValueError(f"unknown scheme mode {mode!r}")
+        return cls(cfg, shape=shape, wcfg=wcfg, capture=capture, **kwargs)
     if mode == "cl":
         return CentralizedScheme(wcfg, capture=capture, **kwargs)
     if mode == "fl":
@@ -56,21 +81,34 @@ def build_scheme(wcfg=None, capture: bool = False, clients=None, **kwargs):
 class Experiment:
     """Drive a Scheme for `cycles` communication cycles: one data rng
     (`seed + 1`), the paper's lr schedule off the scheme's epoch
-    counter, one `round` per cycle, eval after each. Per-cycle
-    accounting lands in `reports` (a `RoundReport` each, incl. the
-    per-client breakdown for fleets); any init-time crossing (CL
-    corpus uploads) in `init_delivery`; the whole run summarizes into
-    the returned `RunResult`. Works unchanged for every scheme — pure
-    CL/FL/SL or a `PopulationScheme` fleet — because all paradigm
-    structure lives behind the Scheme protocol."""
+    counter (override with `lr_schedule` for a constant/custom lr —
+    the scaled CLI does), one `round` per cycle, eval after each.
+    Per-cycle accounting lands in `reports` (a `RoundReport` each,
+    incl. the per-client breakdown for fleets); any init-time crossing
+    (CL corpus uploads) in `init_delivery`; the whole run summarizes
+    into the returned `RunResult`. Works unchanged for every scheme —
+    pure CL/FL/SL, a `PopulationScheme` fleet, or the scaled-arch
+    schemes — because all paradigm structure lives behind the Scheme
+    protocol. Data: an explicit `data` tuple wins; otherwise a scheme
+    exposing `default_data(n_train, n_test, seed)` (the scaled
+    schemes' synthetic corpus) supplies it; otherwise the paper's
+    reduced sentiment corpus. Same precedence for the lr: explicit
+    `lr_schedule`, then the scheme's `default_lr_schedule` (the
+    scaled schemes pin a constant 3e-4 — the paper's 0.1 step-decay
+    is tuned for the tiny model), then the paper schedule `lr_at`."""
     scheme: Any
     cycles: int
     seed: int = 0
     n_train: int = N_TRAIN
     n_test: int = N_TEST
     lr_scale: float = 1.0
+    # epoch -> lr; None = the paper schedule (lr_at)
+    lr_schedule: Optional[Callable[[int], float]] = None
     # optional ((xtr, ytr), (xte, yte)) override of the default corpus
     data: Optional[tuple] = None
+    # called as on_init(state) right after scheme.init; may return a
+    # replacement SchemeState (checkpoint restore hook for the drivers)
+    on_init: Optional[Callable[[SchemeState], Optional[SchemeState]]] = None
     # called as on_cycle(cycle, test_acc, RoundReport) after each cycle
     on_cycle: Optional[Callable[[int, float, RoundReport], None]] = None
     # filled by run():
@@ -78,18 +116,32 @@ class Experiment:
     init_delivery: Optional[Delivery] = None
     final_state: Any = None
 
+    def _data(self):
+        if self.data is not None:
+            return self.data
+        if hasattr(self.scheme, "default_data"):
+            return self.scheme.default_data(self.n_train, self.n_test,
+                                            self.seed)
+        return corpus(self.n_train, self.n_test, self.seed)
+
     def run(self) -> RunResult:
-        (xtr, ytr), (xte, yte) = self.data if self.data is not None \
-            else corpus(self.n_train, self.n_test, self.seed)
+        (xtr, ytr), (xte, yte) = self._data()
         state, self.init_delivery = self.scheme.init(self.seed, xtr, ytr)
+        if self.on_init is not None:
+            state = self.on_init(state) or state
         total_bits = self.init_delivery.bits if self.init_delivery else 0.0
         rng = np.random.default_rng(self.seed + 1)
         accs, losses = [], []
+        default_sched = getattr(self.scheme, "default_lr_schedule", None)
         for cyc in range(self.cycles):
-            lr = lr_at(state.epoch) * self.lr_scale
+            sched = (self.lr_schedule if self.lr_schedule is not None
+                     else default_sched if default_sched is not None
+                     else lr_at)
+            lr = sched(state.epoch) * self.lr_scale
             batch = self.scheme.cycle_batches(state, rng, cyc)
             key = self.scheme.round_key(self.seed, cyc)
             state, rep = self.scheme.round(state, batch, key, lr)
+            self.final_state = state     # live: on_cycle may checkpoint it
             self.reports.append(rep)
             total_bits += rep.bits
             acc = self.scheme.evaluate(state, xte, yte)

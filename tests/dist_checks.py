@@ -115,11 +115,55 @@ def check_fl_pod_step():
     print("OK fl_pod_step")
 
 
+def check_scaled_fl_scheme_pod():
+    """The ported pod-mesh FL scheme (schemes/scaled.py) drives a whole
+    Experiment on a (pod, data, model) mesh — the user axis sharded
+    over `pod` via the "users" rule — and the trajectory matches the
+    same scheme on no mesh (the sharding is a placement, not a math
+    change). Billing: N users x model elems x Q8 per cycle, no ARQ."""
+    from repro.configs import get_arch
+    from repro.configs.base import ShapeConfig, WirelessConfig
+    from repro.nn import use_mesh
+    from repro.schemes import Experiment, build_scheme
+
+    cfg = dataclasses.replace(get_arch("qwen1.5-0.5b").reduced(),
+                              remat=False)
+    shape = ShapeConfig("t", 16, 4, "train", microbatch=4)
+    wcfg = WirelessConfig(mode="fl", quant_bits=8, local_steps=2,
+                          n_users=2)
+
+    def run(mesh):
+        with use_mesh(mesh):
+            scheme = build_scheme(wcfg, cfg=cfg, shape=shape)
+            exp = Experiment(scheme, cycles=2, seed=0, n_train=64,
+                             n_test=16, lr_schedule=lambda e: 1e-3)
+            res = exp.run()
+        return res, exp
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    res_m, exp_m = run(mesh)
+    res_0, _ = run(None)
+    assert np.isfinite(res_m.loss).all()
+    # cycle 1 (local phase + one sync) matches tightly; later cycles
+    # drift more: the sync QUANTIZES weights, so a one-ulp sharded
+    # reduction-order difference can flip a codeword boundary and jump
+    # a weight by a whole quant step (this check still caught the
+    # segment_max mis-partitioning, which scaled weights 4x)
+    np.testing.assert_allclose(res_m.loss[0], res_0.loss[0], rtol=2e-4)
+    np.testing.assert_allclose(res_m.loss, res_0.loss, rtol=0.15)
+    elems = sum(int(l.size) for l in jax.tree.leaves(
+        exp_m.final_state.train.trainable["model"])) // 2
+    for rep in exp_m.reports:
+        assert rep.bits == 2 * elems * 8 and rep.energy_j > 0
+    print("OK scaled_fl_scheme_pod")
+
+
 CHECKS = {
     "decode_attention_dist": check_decode_attention_dist,
     "moe_ep": check_moe_ep,
     "train_step_sharded": check_train_step_sharded,
     "fl_pod_step": check_fl_pod_step,
+    "scaled_fl_scheme_pod": check_scaled_fl_scheme_pod,
 }
 
 if __name__ == "__main__":

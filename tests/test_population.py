@@ -238,6 +238,59 @@ def test_stragglers_bill_zero_bits():
         assert by["fast"].bits > 0 and by["sl-fast"].bits > 0
 
 
+def test_stochastic_deadline_varies_straggler_identity():
+    """ROADMAP fleet follow-up: with deadline_jitter_sigma > 0 the
+    compute term of the round estimate carries a per-(client, round)
+    lognormal multiplier, so a borderline client straggles in SOME
+    rounds rather than all — and the draw is seed-deterministic."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    # compute estimate right AT the deadline: any jitter tips it
+    clients = [ClientSpec.fl(base, name="fast"),
+               ClientSpec.fl(base, compute_s_per_step=120.0,
+                             name="edge")]
+
+    def statuses(sigma, seed=0, cycles=6):
+        # det. estimate ~1201s (10 steps x 120s + ~1s comm) < 1250s
+        # deadline; the lognormal multiplier tips it ~half the rounds
+        scheme = build_scheme(base, clients=clients, deadline_s=1250.0,
+                              deadline_jitter_sigma=sigma)
+        exp = Experiment(scheme, cycles=cycles, seed=seed,
+                         n_train=N_TRAIN, n_test=N_TEST)
+        exp.run()
+        return [{c.name: c.status for c in rep.clients}[("edge")]
+                for rep in exp.reports], exp
+
+    det, exp_det = statuses(0.0)
+    # deterministic model: the edge client's fate is the same every round
+    assert len(set(det)) == 1
+    for rep in exp_det.reports:       # sigma=0 reports the exact estimate
+        by = {c.name: c for c in rep.clients}
+        assert by["edge"].est_round_s == exp_det.scheme.estimated_round_s(1)
+
+    jit1, exp_jit = statuses(0.8)
+    assert set(jit1) == {"ok", "straggler"}    # identity varies per round
+    ests = [{c.name: c for c in rep.clients}["edge"].est_round_s
+            for rep in exp_jit.reports]
+    assert len(set(ests)) == len(ests)         # fresh draw every round
+    # seed-determinism: the same seed replays the same straggler pattern
+    jit2, _ = statuses(0.8)
+    assert jit1 == jit2
+    # stragglers still bill zero
+    for rep, s in zip(exp_jit.reports, jit1):
+        edge = {c.name: c for c in rep.clients}["edge"]
+        assert (edge.bits == 0.0) == (s == "straggler")
+
+
+def test_deadline_jitter_validations():
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.fl(base), ClientSpec.fl(base)]
+    with pytest.raises(ValueError, match=">= 0"):
+        PopulationScheme(base, clients, deadline_s=10.0,
+                         deadline_jitter_sigma=-0.1)
+    with pytest.raises(ValueError, match="deadline_s"):
+        PopulationScheme(base, clients, deadline_jitter_sigma=0.5)
+
+
 def test_all_stragglers_is_a_zero_bit_round():
     """If nobody makes the deadline the round is empty: global model
     unchanged (constant accuracy), zero fleet bits."""

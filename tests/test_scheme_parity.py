@@ -311,6 +311,162 @@ def test_sl_eval_convention_is_real_channel_with_escape_hatch():
         evaluate_sl(tr, wp, xte, yte, perfect_eval=True)
 
 
+# ------------------------------------------- scaled-scheme parity
+# The scaled schemes (schemes/scaled.py) must reproduce the legacy
+# bespoke loops they replaced — launch/train.py's
+# `fold_in(PRNGKey(seed), step)` stream over `make_train_step`, and a
+# straight `make_fl_train_step` cycle loop on `fold_in(PRNGKey(seed+3),
+# cycle)` — bit for bit, on the test mesh the dry-run degrades to.
+
+def _scaled_cfg_shape():
+    import dataclasses
+    from repro.configs import get_arch
+    from repro.configs.base import ShapeConfig
+    cfg = dataclasses.replace(get_arch("qwen1.5-0.5b").reduced(),
+                              remat=False)
+    return cfg, ShapeConfig("t", 16, 4, "train", microbatch=4)
+
+
+def _replay_batches(scheme, state, seed, cycles):
+    """The exact per-cycle batch lists the Experiment rng produces."""
+    rng = np.random.default_rng(seed + 1)
+    return [scheme.cycle_batches(state, rng, c) for c in range(cycles)]
+
+
+def _tree_equal(a, b):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_scaled_cl_parity_vs_legacy_loop():
+    """ScaledCentralizedScheme through Experiment == the deleted
+    launch/train.py loop (same step factory, same key folds, same
+    batches): identical loss trajectory and bitwise-identical params."""
+    from repro.launch.mesh import make_test_mesh
+    from repro.nn import use_mesh
+    from repro.runtime.train_step import init_train_state, make_train_step
+    from repro.schemes import ScaledCentralizedScheme
+    cfg, shape = _scaled_cfg_shape()
+    seed, cycles, spc, lr = 0, 2, 2, 1e-3
+    with use_mesh(make_test_mesh()):
+        scheme = build_scheme(None, cfg=cfg, shape=shape,
+                              steps_per_cycle=spc)
+        assert isinstance(scheme, ScaledCentralizedScheme)
+        exp = Experiment(scheme, cycles=cycles, seed=seed, n_train=64,
+                         n_test=16, lr_schedule=lambda e: lr)
+        res = exp.run()
+        # rounds are radio-silent; the whole payload is the init upload
+        assert exp.init_delivery.bits == res.total_bits > 0
+        assert all(r.bits == 0.0 for r in exp.reports)
+
+        # ---- the legacy loop, inline (launch/train.py pre-refactor)
+        (xtr, ytr), _ = scheme.default_data(64, 16, seed)
+        twin = build_scheme(None, cfg=cfg, shape=shape,
+                            steps_per_cycle=spc)
+        tstate, _ = twin.init(seed, xtr, ytr)
+        batches = _replay_batches(twin, tstate, seed, cycles)
+        state = init_train_state(jax.random.PRNGKey(seed), cfg, None,
+                                 "adamw")
+        step = jax.jit(make_train_step(cfg, shape, None))
+        key, i, losses = jax.random.PRNGKey(seed), 0, []
+        for cyc_batches in batches:
+            for b in cyc_batches:
+                state, m = step(state, b, jax.random.fold_in(key, i), lr)
+                i += 1
+            losses.append(float(m["loss"]))
+    assert losses == res.loss
+    _tree_equal(state.trainable, exp.final_state.train.trainable)
+
+
+def test_scaled_fl_parity_vs_legacy_loop():
+    """ScaledFederatedScheme through Experiment == a straight
+    make_fl_train_step cycle loop, with the sync billed at the paper's
+    per-user convention (no ARQ: one tx per (user, leaf) packet)."""
+    from repro.launch.mesh import make_test_mesh
+    from repro.nn import use_mesh
+    from repro.runtime.fl_runtime import make_fl_train_step
+    from repro.runtime.train_step import init_train_state
+    from repro.schemes import ScaledFederatedScheme
+    import jax.numpy as jnp
+    cfg, shape = _scaled_cfg_shape()
+    seed, cycles, lr = 0, 2, 1e-3
+    wcfg = WirelessConfig(mode="fl", quant_bits=8, local_steps=2,
+                          n_users=2)
+    with use_mesh(make_test_mesh()):
+        scheme = build_scheme(wcfg, cfg=cfg, shape=shape)
+        assert isinstance(scheme, ScaledFederatedScheme)
+        exp = Experiment(scheme, cycles=cycles, seed=seed, n_train=64,
+                         n_test=16, lr_schedule=lambda e: lr)
+        res = exp.run()
+
+        # ---- the legacy loop, inline
+        (xtr, ytr), _ = scheme.default_data(64, 16, seed)
+        twin = build_scheme(wcfg, cfg=cfg, shape=shape)
+        tstate, _ = twin.init(seed, xtr, ytr)
+        batches = _replay_batches(twin, tstate, seed, cycles)
+        state0 = init_train_state(jax.random.PRNGKey(seed), cfg, None,
+                                  "sgd")
+        state = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (2,) + p.shape), state0)
+        fl_step = jax.jit(make_fl_train_step(cfg, shape, wcfg, n_users=2))
+        losses = []
+        for cyc, b in enumerate(batches):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed + 3), cyc)
+            state, m = fl_step(state, b, key, lr)
+            losses.append(float(m["loss"]))
+    assert losses == res.loss
+    _tree_equal(state.trainable, exp.final_state.train.trainable)
+    # billing: N users x model elems x Q8, one tx per packet (no ARQ)
+    elems = sum(int(l.size) for l in
+                jax.tree.leaves(state.trainable["model"])) // 2
+    n_leaves = len(jax.tree.leaves(state.trainable["model"]))
+    for rep in exp.reports:
+        assert rep.bits == 2 * elems * 8
+        assert rep.n_tx == 2 * n_leaves
+    assert res.total_bits == pytest.approx(       # per-user convention
+        sum(r.bits for r in exp.reports) / 2)
+
+
+def test_scaled_sl_parity_and_drawn_arq_billing():
+    """ScaledSplitScheme (fused split step) == the legacy loop over
+    make_train_step with the SL wcfg; under ARQ the per-step legs bill
+    DRAWN retransmissions replayed outside the jit, like the tiny
+    fused path."""
+    from repro.core.split import crossing_elems
+    from repro.runtime.train_step import init_train_state, make_train_step
+    from repro.schemes import ScaledSplitScheme
+    cfg, shape = _scaled_cfg_shape()
+    seed, cycles, spc, lr = 0, 2, 2, 1e-3
+    wcfg = WirelessConfig(mode="sl", quant_bits=8, snr_db=5.0,
+                          arq_attempts=4)
+    scheme = build_scheme(wcfg, cfg=cfg, shape=shape, steps_per_cycle=spc)
+    assert isinstance(scheme, ScaledSplitScheme)
+    exp = Experiment(scheme, cycles=cycles, seed=seed, n_train=64,
+                     n_test=16, lr_schedule=lambda e: lr)
+    res = exp.run()
+
+    # ---- the legacy loop, inline
+    (xtr, ytr), _ = scheme.default_data(64, 16, seed)
+    twin = build_scheme(wcfg, cfg=cfg, shape=shape, steps_per_cycle=spc)
+    tstate, _ = twin.init(seed, xtr, ytr)
+    batches = _replay_batches(twin, tstate, seed, cycles)
+    state = init_train_state(jax.random.PRNGKey(seed), cfg, wcfg, "adamw")
+    step = jax.jit(make_train_step(cfg, shape, wcfg))
+    key, i, losses = jax.random.PRNGKey(seed), 0, []
+    for cyc_batches in batches:
+        for b in cyc_batches:
+            state, m = step(state, b, jax.random.fold_in(key, i), lr)
+            i += 1
+        losses.append(float(m["loss"]))
+    assert losses == res.loss
+    _tree_equal(state.trainable, exp.final_state.train.trainable)
+    # drawn-ARQ billing: more than one tx per leg, bits scale with n_tx
+    leg = crossing_elems(cfg, shape, wcfg)
+    for rep in exp.reports:
+        assert 2 * spc < rep.n_tx <= 2 * spc * wcfg.arq_attempts
+        assert rep.bits == pytest.approx(rep.n_tx * leg * 8)
+
+
 def test_wire_diag_does_not_change_payload():
     """return_diag is accounting-only: same key -> same received tree."""
     tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (33, 9))}

@@ -90,6 +90,38 @@ def test_int8_wire_bit_exact_vs_float(bits):
     _assert_tree_equal(f32, i8)
 
 
+@pytest.mark.parametrize("bits", [4, 8])
+def test_int8_wire_kernel_bit_exact(bits):
+    """The Pallas kernel's uint8 codeword path must match the jnp int8
+    path — and both the float32 reference — bit for bit at Q<=8."""
+    tree = _ragged_tree(8)
+    key = jax.random.PRNGKey(17)
+    f32 = W.transmit_tree(key, tree, bits, 6.0, impl="kernel")
+    i8k = W.transmit_tree(key, tree, bits, 6.0, impl="kernel",
+                          wire_dtype="int8")
+    i8j = W.transmit_tree(key, tree, bits, 6.0, wire_dtype="int8")
+    _assert_tree_equal(f32, i8k)
+    _assert_tree_equal(i8j, i8k)
+    stacked = jax.tree.map(lambda p: jnp.stack([p, 2 * p]), tree)
+    i8k = W.transmit_stacked(key, stacked, bits, 6.0, impl="kernel",
+                             wire_dtype="int8")
+    i8j = W.transmit_stacked(key, stacked, bits, 6.0, wire_dtype="int8")
+    _assert_tree_equal(i8j, i8k)
+
+
+@HS
+@given(seed=st.integers(0, 2 ** 16), bits=st.integers(2, 8))
+def test_int8_wire_kernel_property(seed, bits):
+    """Property: any Q<=8 quantizer, any key — kernel int8 == jnp int8."""
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(seed), (9, 21)),
+            "b": jax.random.normal(jax.random.PRNGKey(seed + 1), (5,))}
+    key = jax.random.PRNGKey(seed + 2)
+    kern = W.transmit_tree(key, tree, bits, 4.0, impl="kernel",
+                           wire_dtype="int8")
+    jnp_ = W.transmit_tree(key, tree, bits, 4.0, wire_dtype="int8")
+    _assert_tree_equal(kern, jnp_)
+
+
 def test_int8_wire_rejects_wide_codewords_and_other_impls():
     tree = _ragged_tree(6)
     key = jax.random.PRNGKey(13)
@@ -97,7 +129,7 @@ def test_int8_wire_rejects_wide_codewords_and_other_impls():
         W.transmit_tree(key, tree, 16, 6.0, wire_dtype="int8")
     with pytest.raises(ValueError, match="packed"):
         W.transmit_tree(key, tree, 8, 6.0, wire_dtype="int8",
-                        impl="kernel")
+                        impl="per_leaf")
 
 
 def test_radio_int8_wire_same_delivery():
