@@ -1,0 +1,140 @@
+"""Robustness sweep: fleet accuracy / bits under bursty outages,
+bounded ARQ, and quorum-gated aggregation (BENCH_robustness.json).
+
+The paper's comparison assumes every upload arrives; this benchmark
+makes FAILURE the sweep axis. A 4-client fleet (3 FL + 1 SL) on a
+bounded-ARQ Gilbert-Elliott link is driven through a seeded
+`FaultPlan` whose per-cycle outage probability sweeps 0 -> 0.5, at
+aggregation quorums 0 (commit on any survivor) and 0.5 — recording
+final accuracy, attempted vs erased bits, backoff outage time, and the
+fraction of rounds that met quorum. The graceful-degradation claim is
+the record: accuracy degrades smoothly with outage probability instead
+of collapsing, while the erased-bit bill grows.
+
+Every case also runs the chaos gate: kill the experiment at the
+midpoint, resume from the crash-consistent snapshot, and record
+whether the continued run reproduced the uninterrupted trajectory and
+billing bit-for-bit (`resume_bit_for_bit` — ci.sh greps it).
+
+    PYTHONPATH=src python -m benchmarks.robustness --quick
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import tempfile
+
+from repro.configs.base import WirelessConfig
+from repro.schemes import ClientSpec, Experiment, FaultPlan, build_scheme
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def _fleet(base):
+    return [ClientSpec.fl(base, name="fl0"),
+            ClientSpec.fl(base, snr_db=14.0, name="fl1"),
+            ClientSpec.fl(base, snr_db=10.0, name="fl2"),
+            ClientSpec.sl(base, snr_db=12.0, name="sl0")]
+
+
+def _scheme(p_outage, quorum, seed):
+    # bounded ARQ + a mild Gilbert-Elliott burst chain: organic link
+    # erasures on top of the orchestrated FaultPlan outages
+    base = WirelessConfig(mode="fl", quant_bits=8, arq_max_tx=2,
+                          arq_min_f2=0.25, ge_p_gb=0.1, ge_p_bg=0.5,
+                          arq_backoff_s=0.01)
+    plan = FaultPlan(seed=seed, p_outage=p_outage)
+    return build_scheme(base, clients=_fleet(base), quorum=quorum,
+                        fault_plan=plan)
+
+
+def _run(make, cycles, seed, n_train, n_test, **exp_kw):
+    exp = Experiment(make(), cycles=cycles, seed=seed, n_train=n_train,
+                     n_test=n_test, **exp_kw)
+    res = exp.run()
+    return exp, res
+
+
+def _resume_parity(make, cycles, seed, n_train, n_test) -> bool:
+    """Kill at the midpoint, resume, compare bit-for-bit."""
+    e1, r1 = _run(make, cycles, seed, n_train, n_test)
+    tmp = tempfile.mkdtemp(prefix="bench_robustness_ckpt_")
+    try:
+        _run(make, max(1, cycles // 2), seed, n_train, n_test,
+             checkpoint_dir=tmp, checkpoint_every=1)
+        e3, r3 = _run(make, cycles, seed, n_train, n_test,
+                      resume_from=tmp)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return (list(r1.accuracy) == list(r3.accuracy)
+            and r1.total_bits == r3.total_bits
+            and [dataclasses.asdict(r) for r in e1.reports]
+            == [dataclasses.asdict(r) for r in e3.reports])
+
+
+def run(full: bool = False, seed: int = 0) -> dict:
+    cycles = 6 if full else 2
+    n_train = 8_192 if full else 2_048
+    n_test = 1_024 if full else 512
+    outages = (0.0, 0.1, 0.3, 0.5) if full else (0.0, 0.3)
+    quorums = (0.0, 0.5)
+    out = {"cycles": cycles, "n_train": n_train, "cases": {}}
+    for p in outages:
+        for q in quorums:
+            make = lambda: _scheme(p, q, seed)     # noqa: E731
+            exp, res = _run(make, cycles, seed, n_train, n_test)
+            reps = exp.reports
+            rec = {
+                "p_outage": p, "quorum": q,
+                "final_accuracy": res.final_accuracy,
+                "total_bits": sum(r.bits for r in reps),
+                "erased_bits": sum(r.erased_bits for r in reps),
+                "outage_s": sum(r.outage_s for r in reps),
+                "quorum_met_frac": (
+                    sum(1 for r in reps
+                        if r.metrics.get("quorum_met", True)) / len(reps)),
+                "n_erased": [r.metrics.get("n_erased", 0) for r in reps],
+                "per_client_status": [
+                    {c.name: c.status for c in r.clients} for r in reps],
+                "resume_bit_for_bit": _resume_parity(
+                    make, cycles, seed, n_train, n_test),
+            }
+            # billing invariant the whole PR hangs off: the erased
+            # slice never exceeds the attempted bill
+            assert 0.0 <= rec["erased_bits"] <= rec["total_bits"]
+            out["cases"][f"outage{p:g}_quorum{q:g}"] = rec
+    return out
+
+
+def main(full: bool = False) -> list[str]:
+    res = run(full)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_robustness.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    rows = []
+    for case, rec in res["cases"].items():
+        rows.append(f"robustness,{case},final_accuracy,"
+                    f"{rec['final_accuracy']:.4f}")
+        rows.append(f"robustness,{case},total_bits,"
+                    f"{rec['total_bits']:.0f}")
+        rows.append(f"robustness,{case},erased_bits,"
+                    f"{rec['erased_bits']:.0f}")
+        rows.append(f"robustness,{case},quorum_met_frac,"
+                    f"{rec['quorum_met_frac']:.2f}")
+        rows.append(f"robustness,{case},resume_bit_for_bit,"
+                    f"{int(rec['resume_bit_for_bit'])}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke sweep (the default unless --full)")
+    ap.add_argument("--full", action="store_true",
+                    help="the whole outage x quorum sweep")
+    args = ap.parse_args()
+    for r in main(full=args.full and not args.quick):
+        print(r)

@@ -65,6 +65,11 @@ def _bench_scaled(full):
     return scaled.main(full)
 
 
+def _bench_robustness(full):
+    from benchmarks import robustness
+    return robustness.main(full)
+
+
 BENCHES = {
     "fig3a": _bench_fig3a,
     "fig3b": _bench_fig3b,
@@ -76,6 +81,7 @@ BENCHES = {
     "wire": _bench_wire,
     "population": _bench_population,
     "scaled": _bench_scaled,
+    "robustness": _bench_robustness,
 }
 
 

@@ -15,7 +15,10 @@
 # fleet-dynamics case — uniform-k sampling with one deadline-dropped
 # straggler) writes benchmarks/results/BENCH_population.json with
 # per-round wall time + bits, and the gate checks the dropped clients
-# billed zero.
+# billed zero. The robustness chaos smoke (benchmarks/robustness.py)
+# sweeps FaultPlan outages x quorum on a bounded-ARQ fleet, kills each
+# case at the midpoint, resumes from the crash-consistent snapshot,
+# and fails unless every resumed run is bit-for-bit.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -95,5 +98,25 @@ ok = ok and all(b > 0 for b in res["cases"]["fl"]["round_bits"])
 ok = ok and all(b > 0 for b in res["cases"]["sl"]["round_bits"])
 ok = ok and res["cases"]["cl"]["init_bits"] > 0
 ok = ok and all(b == 0 for b in res["cases"]["cl"]["round_bits"])
+sys.exit(0 if ok else 1)
+EOF
+
+echo "=== robustness chaos smoke (outage x quorum sweep + kill-and-resume, BENCH_robustness.json) ==="
+python -m benchmarks.run --only robustness
+python - <<'EOF'
+import json, sys
+res = json.load(open("benchmarks/results/BENCH_robustness.json"))
+ok = True
+for case, rec in res["cases"].items():
+    print(f"robustness {case}: acc {rec['final_accuracy']:.3f}, "
+          f"{rec['total_bits']:.0f} bits ({rec['erased_bits']:.0f} erased), "
+          f"quorum met {rec['quorum_met_frac']:.0%}, "
+          f"resume bit-for-bit: {rec['resume_bit_for_bit']}")
+    # the chaos gate: every case's kill-at-midpoint + resume run must
+    # reproduce the uninterrupted trajectory and billing bit-for-bit
+    ok = ok and rec["resume_bit_for_bit"]
+    ok = ok and 0.0 <= rec["erased_bits"] <= rec["total_bits"]
+# faults were actually injected somewhere in the sweep
+ok = ok and any(rec["erased_bits"] > 0 for rec in res["cases"].values())
 sys.exit(0 if ok else 1)
 EOF

@@ -3,14 +3,30 @@
 Keys are '/'-joined pytree paths; restore is sharding-aware (device_put
 with the provided sharding tree) and validates structure against a
 template pytree.
+
+Two layers live here:
+
+* `save_checkpoint` / `restore_checkpoint` — a bare pytree snapshot
+  (what launch/dryrun.py and the mesh runtimes use);
+* `save_experiment` / `load_experiment` — a CRASH-CONSISTENT experiment
+  snapshot: the scheme's train pytree PLUS a JSON `__meta__` record
+  (cycle index, data-rng bit-generator state, accumulated
+  reports/accuracy/billing) in ONE atomically-replaced .npz, so a run
+  killed at cycle k and resumed reproduces the remaining trajectory —
+  and every bit of its billing — bit-for-bit
+  (schemes/run.py `Experiment(resume_from=...)`,
+  tests/test_resume.py). Atomicity is write-to-tmp + `os.replace`: a
+  crash mid-save leaves the previous snapshot intact, never a torn one.
 """
 from __future__ import annotations
 
+import json
 import os
 import re
-from typing import Any, Optional
+from typing import Any, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -48,6 +64,75 @@ def latest_step(directory: str) -> Optional[int]:
     steps = [int(m.group(1)) for f in os.listdir(directory)
              if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
     return max(steps) if steps else None
+
+
+# ------------------------------------------------- experiment snapshots
+def _json_default(o):
+    """np scalars/arrays that ride RoundReport fields -> JSON."""
+    if isinstance(o, np.bool_):
+        return bool(o)
+    if isinstance(o, (np.integer, np.floating)):
+        return o.item()
+    if isinstance(o, np.ndarray):
+        return o.tolist()
+    raise TypeError(f"not JSON-serializable: {type(o)!r}")
+
+
+def save_experiment(directory: str, cycle: int, train: Any,
+                    meta: dict) -> str:
+    """Atomically snapshot one experiment: the scheme's train pytree
+    (keys `train/<path>`) + `meta` as an embedded JSON record. `cycle`
+    names the file (`exp_<cycle>.npz`); callers usually pass the NEXT
+    cycle to run so `latest_experiment_cycle` reads as a resume point.
+    Python-scalar leaves (cumulative step counters in fleet state) are
+    stored as 0-d arrays and cast back on load."""
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"exp_{cycle:08d}.npz")
+    tmp = path + ".tmp.npz"
+    payload = {"train/" + k: v
+               for k, v in _flatten_with_paths(train).items()}
+    payload["__meta__"] = np.frombuffer(
+        json.dumps(meta, default=_json_default).encode("utf-8"), np.uint8)
+    np.savez(tmp, **payload)
+    os.replace(tmp, path)     # crash mid-save never tears a snapshot
+    return path
+
+
+def latest_experiment_cycle(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    cs = [int(m.group(1)) for f in os.listdir(directory)
+          if (m := re.match(r"exp_(\d+)\.npz$", f))]
+    return max(cs) if cs else None
+
+
+def load_experiment(path: str, template_train: Any) -> Tuple[Any, dict]:
+    """-> (train pytree, meta dict). `path` is either one `exp_*.npz`
+    file or a checkpoint directory (the latest snapshot wins).
+    `template_train` fixes the pytree structure and the leaf kinds: a
+    Python-scalar template leaf gets its stored value cast back to the
+    template's type, an array leaf is shape-checked and re-materialized
+    as a jnp array (schemes mutate restored state with jnp `.at` ops)."""
+    if os.path.isdir(path):
+        c = latest_experiment_cycle(path)
+        if c is None:
+            raise FileNotFoundError(
+                f"no exp_*.npz experiment snapshot under {path!r}")
+        path = os.path.join(path, f"exp_{c:08d}.npz")
+    data = np.load(path)
+    meta = json.loads(bytes(data["__meta__"]).decode("utf-8"))
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template_train)
+    leaves = []
+    for p, leaf in flat:
+        key = "train/" + "/".join(_path_str(e) for e in p)
+        arr = data[key]
+        if isinstance(leaf, (bool, int, float)):
+            leaves.append(type(leaf)(arr.item()))
+            continue
+        assert arr.shape == tuple(np.shape(leaf)), \
+            (key, arr.shape, np.shape(leaf))
+        leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta
 
 
 def restore_checkpoint(directory: str, step: int, template: Any,

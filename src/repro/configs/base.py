@@ -133,6 +133,27 @@ class WirelessConfig:
     # to `attempts` times; 1 = paper-faithful no-ARQ
     arq_attempts: int = 1
     arq_min_f2: float = 0.25
+    # beyond-paper: BOUNDED ARQ — cap the link layer at `arq_max_tx`
+    # transmissions per packet; a packet still in outage after the cap
+    # is an ERASURE (delivered as zeros, billed as erased_bits). 0 keeps
+    # the legacy semantics: `arq_attempts` draws, last one delivered
+    # no matter how deep the fade (a crossing can never fail).
+    arq_max_tx: int = 0
+    # beyond-paper: Gilbert-Elliott burst outages — a two-state Markov
+    # link (good/bad) layered over the Rayleigh fades; every ARQ attempt
+    # of a packet sent in the bad state fails. p(good->bad) per packet
+    # slot; 0.0 = process off (no RNG drawn, goldens bitwise intact).
+    ge_p_gb: float = 0.0
+    ge_p_bg: float = 0.5
+    # beyond-paper: exponential backoff between ARQ retries, billed in
+    # TIME (Delivery.outage_s), not bits: retry k waits base * 2^(k-1).
+    # 0.0 = retries are back-to-back (no outage time).
+    arq_backoff_s: float = 0.0
+    # beyond-paper: codeword rounding — "nearest" (paper Eq. 2) or
+    # "stochastic" (unbiased E[q] = x/S; tames the pod-mesh FL
+    # quant-drift flips where a one-ulp reduction-order difference
+    # flips a deterministic round). Packed jnp wire path only.
+    rounding: str = "nearest"
     # beyond-paper: server aggregation — "mean" (paper FedAvg, Eq. 3) or
     # "median" (coordinate-wise; robust to a single user's deep-fade
     # MSB flips at zero extra bits)

@@ -129,9 +129,11 @@ def transmit_tokens(key, tokens: jax.Array, vocab_size: int, snr_db: float,
 
 
 # --------------------------------------------------------------- SL link
-@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6, 7, 8))
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(2, 3, 4, 5, 6, 7, 8, 9, 10, 11))
 def channel_crossing(x, key, bits, snr_db, fading, grad_clip, perfect,
-                     arq_attempts=1, arq_min_f2=0.25):
+                     arq_attempts=1, arq_min_f2=0.25, arq_max_tx=0,
+                     ge_p_gb=0.0, ge_p_bg=0.5):
     """The SL radio boundary (Alg. 2): the forward activation AND the
     backward gradient both traverse quantize->BPSK->Rayleigh+AWGN.
     The gradient is norm-clipped to `grad_clip` (tau) before transmission.
@@ -140,31 +142,39 @@ def channel_crossing(x, key, bits, snr_db, fading, grad_clip, perfect,
     SL train step and the two-party `SLSession` share ONE wire
     implementation: same per-tensor scale, same Murmur3 bit-plane RNG,
     same fused quantize/bit-flip/dequantize pass — including the
-    link-layer ARQ redraw of deep fades (`arq_attempts`/`arq_min_f2`),
-    so the fused path runs the SAME link the two-party protocol does.
-    The drawn retransmission counts cannot escape the jitted step;
-    accounting replays them outside via `wire.drawn_tree_tx` (see
-    schemes/split.py `sl_cycle_drawn_tx`).
+    link-layer ARQ redraw of deep fades (`arq_attempts`/`arq_min_f2`)
+    and the fault extensions (bounded ARQ `arq_max_tx`, Gilbert-Elliott
+    burst outages `ge_p_gb`/`ge_p_bg`) — so the fused path runs the
+    SAME link the two-party protocol does. An ERASED leg arrives as
+    zeros: a zero forward activation lets the server step on a null
+    feature batch and a zero backward gradient makes the user step a
+    no-op — graceful degradation, not a crash. The drawn counts cannot
+    escape the jitted step; accounting replays them outside via
+    `wire.drawn_tree_tx`/`drawn_tree_diag` (see schemes/split.py
+    `sl_cycle_drawn_tx`).
     """
     return W.transmit_tree(key, x, bits=bits, snr_db=snr_db, fading=fading,
                            perfect=perfect, arq_attempts=arq_attempts,
-                           arq_min_f2=arq_min_f2)
+                           arq_min_f2=arq_min_f2, arq_max_tx=arq_max_tx,
+                           ge_p_gb=ge_p_gb, ge_p_bg=ge_p_bg)
 
 
 def _cc_fwd(x, key, bits, snr_db, fading, grad_clip, perfect,
-            arq_attempts, arq_min_f2):
+            arq_attempts, arq_min_f2, arq_max_tx, ge_p_gb, ge_p_bg):
     return channel_crossing(x, key, bits, snr_db, fading, grad_clip,
-                            perfect, arq_attempts, arq_min_f2), key
+                            perfect, arq_attempts, arq_min_f2, arq_max_tx,
+                            ge_p_gb, ge_p_bg), key
 
 
 def _cc_bwd(bits, snr_db, fading, grad_clip, perfect, arq_attempts,
-            arq_min_f2, key, g):
+            arq_min_f2, arq_max_tx, ge_p_gb, ge_p_bg, key, g):
     from repro.optim.clip import clip_array_by_norm
     g = clip_array_by_norm(g, grad_clip)
     g_hat = W.transmit_tree(jax.random.fold_in(key, 1), g, bits=bits,
                             snr_db=snr_db, fading=fading, perfect=perfect,
                             arq_attempts=arq_attempts,
-                            arq_min_f2=arq_min_f2)
+                            arq_min_f2=arq_min_f2, arq_max_tx=arq_max_tx,
+                            ge_p_gb=ge_p_gb, ge_p_bg=ge_p_bg)
     # receiver-side re-clip: a deep Rayleigh fade flips high-order bits
     # and can blow the received norm to tau*sqrt(N); the receiver knows
     # tau, so clipping again on arrival bounds the impulse (without it,

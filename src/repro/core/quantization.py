@@ -25,10 +25,25 @@ def scale_for(x: jax.Array, bits: int) -> jax.Array:
     return jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax(bits)
 
 
-def quantize(x: jax.Array, bits: int, scale: jax.Array | None = None):
-    """-> (q int32 in [-qmax, qmax], scale)."""
+def stochastic_round(x: jax.Array, u: jax.Array) -> jax.Array:
+    """Unbiased rounding: floor(x) + 1 w.p. frac(x), where `u` supplies
+    the uniform [0, 1) draw per element (same shape as `x`). E[result]
+    = x, unlike round-to-nearest whose deterministic tie behaviour lets
+    a one-ulp input difference flip a whole quant step (the pod-mesh FL
+    drift noted in tests/dist_checks.py). Callers own the RNG: the
+    packed wire derives `u` from its existing per-element rand word, so
+    turning this on draws no extra keys."""
+    lo = jnp.floor(x)
+    return lo + (u < (x - lo)).astype(x.dtype)
+
+
+def quantize(x: jax.Array, bits: int, scale: jax.Array | None = None,
+             u: jax.Array | None = None):
+    """-> (q int32 in [-qmax, qmax], scale). With `u` (uniform [0, 1)
+    per element), rounds stochastically instead of to nearest."""
     s = scale_for(x, bits) if scale is None else scale
-    q = jnp.clip(jnp.round(x / s), -qmax(bits), qmax(bits)).astype(jnp.int32)
+    r = jnp.round(x / s) if u is None else stochastic_round(x / s, u)
+    q = jnp.clip(r, -qmax(bits), qmax(bits)).astype(jnp.int32)
     return q, s
 
 

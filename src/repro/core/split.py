@@ -35,7 +35,10 @@ def _link(codec, x, wcfg, key):
     z = semantic.encode(codec, x)
     z = channel_crossing(z, key, wcfg.quant_bits, wcfg.snr_db, wcfg.fading,
                          wcfg.grad_clip, wcfg.perfect_channel,
-                         wcfg.arq_attempts, wcfg.arq_min_f2)
+                         wcfg.arq_attempts, wcfg.arq_min_f2,
+                         getattr(wcfg, "arq_max_tx", 0),
+                         getattr(wcfg, "ge_p_gb", 0.0),
+                         getattr(wcfg, "ge_p_bg", 0.5))
     return semantic.decode(codec, z)
 
 

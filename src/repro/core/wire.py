@@ -68,6 +68,12 @@ from repro.core import quantization as Q
 WIRE_COLS = 256     # packed row width (lane-size multiple)
 _ROW_ALIGN = 8      # float32 sublane tile: R padded to a multiple of this
 GOLDEN = 0x9E3779B9  # per-bit-plane salt stride (python int, static)
+_GE_FOLD = 77       # fold of kf for the Gilbert-Elliott state chain —
+                    # disjoint from kf's own fade uniforms, so turning
+                    # the outage process on never perturbs the fades
+_SR_SALT = (33 * GOLDEN) & 0xFFFFFFFF  # stochastic-rounding hash salt:
+                    # bit planes use (b+1)*GOLDEN for b < 32, so plane
+                    # 33 is free for the rounding uniform
 
 
 # ------------------------------------------------------------- bit-plane RNG
@@ -176,6 +182,57 @@ def unpack_tree(buf: jax.Array, plan: WirePlan):
     return jax.tree.unflatten(plan.treedef, _unpack_leaves(buf, plan))
 
 
+# ----------------------------------------------------------------- faults
+def fault_free(fading: bool = True, perfect: bool = False,
+               arq_attempts: int = 1, arq_min_f2: float = 0.25,
+               arq_max_tx: int = 0, ge_p_gb: float = 0.0) -> bool:
+    """True iff this knob combination can neither retransmit nor erase —
+    i.e. every packet costs exactly ONE transmission and always arrives.
+    The replay helpers (`drawn_*`) use this to skip the draw entirely,
+    and the schemes use it to keep the legacy billing paths bitwise."""
+    if perfect:
+        return True
+    if ge_p_gb > 0.0:
+        return False
+    if arq_max_tx > 0:
+        # bounded ARQ without fading: one clean tx, erasure impossible
+        # unless the outage threshold exceeds the unit gain
+        return (not fading) and arq_min_f2 <= 1.0
+    return (not fading) or arq_attempts <= 1
+
+
+def _ge_bad_states(kge, n: int, n_packets: int, p_gb: float, p_bg: float):
+    """[n, n_packets] bool bad-link states of the two-state
+    Gilbert-Elliott chain, one state per packet slot (every ARQ attempt
+    of a packet shares its slot's state — that is what makes the outage
+    BURSTY: a bad slot kills the whole retry window, unlike the iid
+    per-attempt Rayleigh deep fades). The initial state is drawn from
+    the stationary distribution pi_bad = p_gb / (p_gb + p_bg), so the
+    marginal outage probability is cycle-position independent."""
+    pi_bad = p_gb / max(p_gb + p_bg, 1e-12)
+    k0, kc = jax.random.split(kge)
+    b0 = jax.random.uniform(k0, (n,), jnp.float32) < pi_bad
+    us = jax.random.uniform(kc, (n_packets, n), jnp.float32)
+
+    def step(bad, u):
+        nxt = jnp.where(bad, u >= p_bg, u < p_gb)
+        return nxt, nxt
+
+    _, bads = jax.lax.scan(step, b0, us)
+    return bads.T
+
+
+def backoff_s(n_tx, base_s: float):
+    """Exponential-backoff wait billed to packets that took `n_tx`
+    transmissions: retry j sleeps base * 2^(j-1), so a packet with k
+    transmissions (k-1 retries) waited base * (2^(k-1) - 1) seconds
+    total. Host-side accounting (np), returns a float scalar sum."""
+    if base_s <= 0.0:
+        return 0.0
+    k = np.asarray(n_tx, np.float64)
+    return float(base_s) * float(np.sum(np.exp2(k - 1.0) - 1.0))
+
+
 # --------------------------------------------------------------- accounting
 def expected_arq_tx(attempts: int = 1, min_f2: float = 0.25,
                     fading: bool = True, perfect: bool = False) -> float:
@@ -192,7 +249,8 @@ def expected_arq_tx(attempts: int = 1, min_f2: float = 0.25,
 
 def drawn_tree_tx(key, n_packets: int = 1, fading: bool = True,
                   perfect: bool = False, arq_attempts: int = 1,
-                  arq_min_f2: float = 0.25):
+                  arq_min_f2: float = 0.25, arq_max_tx: int = 0,
+                  ge_p_gb: float = 0.0, ge_p_bg: float = 0.5):
     """Total DRAWN transmissions of a `transmit_tree(key, tree, ...)`
     call whose tree has `n_packets` leaves, WITHOUT transmitting: the
     per-packet fade/ARQ redraw is a pure function of the key (same
@@ -201,17 +259,42 @@ def drawn_tree_tx(key, n_packets: int = 1, fading: bool = True,
     cannot escape — can still be billed at its actual retransmission
     cost by replaying the draw outside. Returns an int32 scalar
     (vmap-friendly); equals `n_packets` without ARQ/fading."""
-    if perfect or not fading or arq_attempts <= 1:
+    if fault_free(fading, perfect, arq_attempts, arq_min_f2, arq_max_tx,
+                  ge_p_gb):
         return jnp.int32(n_packets)
     kf, _ = jax.random.split(key)
-    _, n_tx = _packet_fades(kf, 1, n_packets, fading, arq_attempts,
-                            arq_min_f2)
+    _, n_tx, _ = _packet_fades(kf, 1, n_packets, fading, arq_attempts,
+                               arq_min_f2, arq_max_tx, ge_p_gb, ge_p_bg)
     return n_tx.sum().astype(jnp.int32)
+
+
+def drawn_tree_diag(key, n_packets: int = 1, fading: bool = True,
+                    perfect: bool = False, arq_attempts: int = 1,
+                    arq_min_f2: float = 0.25, arq_max_tx: int = 0,
+                    ge_p_gb: float = 0.0, ge_p_bg: float = 0.5):
+    """(n_tx_sum, n_erased, backoff_units) of a `transmit_tree` draw,
+    without transmitting — the fault-aware superset of `drawn_tree_tx`.
+    All three are traced scalars (vmap-friendly): total transmissions
+    (int32), erased-packet count (int32), and backoff units (float32,
+    sum over packets of 2^(n_tx-1) - 1 — multiply by `arq_backoff_s`
+    for seconds). (n_packets, 0, 0) when `fault_free`."""
+    if fault_free(fading, perfect, arq_attempts, arq_min_f2, arq_max_tx,
+                  ge_p_gb):
+        return jnp.int32(n_packets), jnp.int32(0), jnp.float32(0.0)
+    kf, _ = jax.random.split(key)
+    _, n_tx, erased = _packet_fades(kf, 1, n_packets, fading, arq_attempts,
+                                    arq_min_f2, arq_max_tx, ge_p_gb,
+                                    ge_p_bg)
+    bo = jnp.exp2((n_tx - 1).astype(jnp.float32)) - 1.0
+    return n_tx.sum().astype(jnp.int32), erased.sum().astype(jnp.int32), \
+        bo.sum()
 
 
 def drawn_stacked_tx(key, n: int, n_packets: int, fading: bool = True,
                      perfect: bool = False, arq_attempts: int = 1,
-                     arq_min_f2: float = 0.25) -> np.ndarray:
+                     arq_min_f2: float = 0.25, arq_max_tx: int = 0,
+                     ge_p_gb: float = 0.0, ge_p_bg: float = 0.5,
+                     with_erased: bool = False):
     """Per-(user, packet) DRAWN transmission counts of a
     `transmit_stacked(key, tree, ...)` call with `n` users and
     `n_packets` leaves, WITHOUT transmitting — the stacked-send analogue
@@ -219,13 +302,20 @@ def drawn_stacked_tx(key, n: int, n_packets: int, fading: bool = True,
     `_packet_fades`). Returns a host [n, n_packets] int array, so a
     scheme can bill a sync that happened INSIDE a jitted train step
     (the pod-mesh FL step) at its actual per-packet retransmission
-    cost. All-ones without ARQ/fading."""
-    if perfect or not fading or arq_attempts <= 1:
-        return np.ones((n, n_packets), np.int64)
+    cost. All-ones without ARQ/fading. `with_erased=True` additionally
+    returns the [n, n_packets] bool erasure mask (all-False when
+    `fault_free`)."""
+    if fault_free(fading, perfect, arq_attempts, arq_min_f2, arq_max_tx,
+                  ge_p_gb):
+        n_tx = np.ones((n, n_packets), np.int64)
+        return (n_tx, np.zeros((n, n_packets), bool)) if with_erased \
+            else n_tx
     kf, _ = jax.random.split(key)
-    _, n_tx = _packet_fades(kf, n, n_packets, fading, arq_attempts,
-                            arq_min_f2)
-    return np.asarray(n_tx)
+    _, n_tx, erased = _packet_fades(kf, n, n_packets, fading, arq_attempts,
+                                    arq_min_f2, arq_max_tx, ge_p_gb,
+                                    ge_p_bg)
+    n_tx = np.asarray(n_tx)
+    return (n_tx, np.asarray(erased)) if with_erased else n_tx
 
 
 def payload_bits(tree, bits: int, expected_tx: float = 1.0) -> float:
@@ -239,7 +329,8 @@ def payload_bits(tree, bits: int, expected_tx: float = 1.0) -> float:
 
 # ------------------------------------------------------------ fused channel
 def wire_transform(buf: jax.Array, rand: jax.Array, scale, p, bits: int,
-                   code_dtype=jnp.uint32) -> jax.Array:
+                   code_dtype=jnp.uint32, stochastic: bool = False
+                   ) -> jax.Array:
     """The fused quantize -> BPSK/Rayleigh bit-flip -> dequantize math on
     a packed buffer. `scale`/`p` broadcast against `buf` (per-row
     [..., R, 1] vectors). Identical ops to the Pallas kernel body — this
@@ -251,9 +342,22 @@ def wire_transform(buf: jax.Array, rand: jax.Array, scale, p, bits: int,
     traffic for the buffer that actually crosses the link. The codes,
     the flip mask (low `bits` planes of the same Murmur3 stream, which
     fit a byte), and the dequantized output are bit-identical to the
-    uint32 path (tested in tests/test_wire.py)."""
+    uint32 path (tested in tests/test_wire.py).
+
+    `stochastic=True` (opt-in, wcfg.rounding="stochastic") rounds the
+    codewords stochastically instead of to nearest, with the uniform
+    derived from the SAME per-element rand word through one extra
+    fmix32 salt (_SR_SALT, disjoint from every bit plane) — unbiased
+    quantization at zero extra RNG draws."""
     qm = float(2 ** (bits - 1) - 1)
-    q = jnp.clip(jnp.round(buf / scale), -qm, qm).astype(jnp.int32)
+    x = buf / scale
+    if stochastic:
+        u = fmix32(rand ^ jnp.uint32(_SR_SALT)).astype(jnp.float32) \
+            * jnp.float32(2.0 ** -32)
+        r = Q.stochastic_round(x.astype(jnp.float32), u)
+    else:
+        r = jnp.round(x)
+    q = jnp.clip(r, -qm, qm).astype(jnp.int32)
     code = (q + jnp.int32(qm)).astype(code_dtype)
     code = code ^ bit_flip_mask(rand, bits, p).astype(code_dtype)
     q_hat = jnp.clip(code.astype(jnp.int32) - jnp.int32(qm), -qm, qm)
@@ -261,28 +365,67 @@ def wire_transform(buf: jax.Array, rand: jax.Array, scale, p, bits: int,
 
 
 def _packet_fades(kf, n: int, n_packets: int, fading: bool,
-                  arq_attempts: int, arq_min_f2: float):
-    """(|f|^2, n_tx) per (user, packet) — ONE batched uniform draw. With
-    ARQ, deep fades are redrawn up to `arq_attempts` times (vectorized
-    rayleigh_gain_arq); n_tx is the DRAWN per-packet transmission count
-    (1 everywhere without ARQ), surfaced so accounting can report actual
-    rather than expected retransmissions."""
+                  arq_attempts: int, arq_min_f2: float,
+                  arq_max_tx: int = 0, ge_p_gb: float = 0.0,
+                  ge_p_bg: float = 0.5):
+    """(|f|^2, n_tx, erased) per (user, packet) — ONE batched uniform
+    draw. With ARQ, deep fades are redrawn up to `arq_attempts` times
+    (vectorized rayleigh_gain_arq); n_tx is the DRAWN per-packet
+    transmission count (1 everywhere without ARQ), surfaced so
+    accounting can report actual rather than expected retransmissions.
+
+    Fault extensions (both off by default, legacy draws untouched):
+    `arq_max_tx > 0` caps the link at that many transmissions — a
+    packet whose every attempt fails is ERASED (erased=True; the
+    transmit paths zero its payload). `ge_p_gb > 0` switches on the
+    two-state Gilbert-Elliott burst process (states drawn off
+    fold_in(kf, _GE_FOLD), a stream disjoint from the fade uniforms):
+    an attempt in the bad state always fails, and a packet that never
+    escapes the bad window delivers |f|^2 = 0 (pure noise) when
+    unbounded, or an erasure when bounded."""
     ones = jnp.ones((n, n_packets), jnp.int32)
-    if not fading:
-        return jnp.ones((n, n_packets), jnp.float32), ones
-    if arq_attempts > 1:
-        u = jax.random.uniform(kf, (n, n_packets, arq_attempts),
+    no_erase = jnp.zeros((n, n_packets), bool)
+    if arq_max_tx <= 0 and ge_p_gb <= 0.0:        # legacy, byte-identical
+        if not fading:
+            return jnp.ones((n, n_packets), jnp.float32), ones, no_erase
+        if arq_attempts > 1:
+            u = jax.random.uniform(kf, (n, n_packets, arq_attempts),
+                                   jnp.float32, 1e-12, 1.0)
+            f2s = -jnp.log(u)
+            ok = f2s >= arq_min_f2
+            any_ok = ok.any(axis=-1)
+            first = jnp.argmax(ok, axis=-1)
+            idx = jnp.where(any_ok, first, arq_attempts - 1)
+            n_tx = jnp.where(any_ok, first + 1,
+                             arq_attempts).astype(jnp.int32)
+            return jnp.take_along_axis(f2s, idx[..., None],
+                                       axis=-1)[..., 0], n_tx, no_erase
+        u = jax.random.uniform(kf, (n, n_packets), jnp.float32, 1e-12, 1.0)
+        return -jnp.log(u), ones, no_erase
+
+    attempts = arq_max_tx if arq_max_tx > 0 else max(int(arq_attempts), 1)
+    if fading:
+        u = jax.random.uniform(kf, (n, n_packets, attempts),
                                jnp.float32, 1e-12, 1.0)
         f2s = -jnp.log(u)
-        ok = f2s >= arq_min_f2
-        any_ok = ok.any(axis=-1)
-        first = jnp.argmax(ok, axis=-1)
-        idx = jnp.where(any_ok, first, arq_attempts - 1)
-        n_tx = jnp.where(any_ok, first + 1, arq_attempts).astype(jnp.int32)
-        return jnp.take_along_axis(f2s, idx[..., None], axis=-1)[..., 0], \
-            n_tx
-    u = jax.random.uniform(kf, (n, n_packets), jnp.float32, 1e-12, 1.0)
-    return -jnp.log(u), ones
+    else:
+        f2s = jnp.ones((n, n_packets, attempts), jnp.float32)
+    ok = f2s >= arq_min_f2
+    bad = no_erase
+    if ge_p_gb > 0.0:
+        bad = _ge_bad_states(jax.random.fold_in(kf, _GE_FOLD), n,
+                             n_packets, ge_p_gb, ge_p_bg)
+        ok = ok & ~bad[..., None]
+    any_ok = ok.any(axis=-1)
+    first = jnp.argmax(ok, axis=-1)
+    idx = jnp.where(any_ok, first, attempts - 1)
+    n_tx = jnp.where(any_ok, first + 1, attempts).astype(jnp.int32)
+    f2 = jnp.take_along_axis(f2s, idx[..., None], axis=-1)[..., 0]
+    # a packet that never left the bad state has NO received signal —
+    # |f|^2 = 0 makes every bit a coin flip, not a deep-but-live fade
+    f2 = jnp.where(bad & ~any_ok, 0.0, f2)
+    erased = (~any_ok) if arq_max_tx > 0 else no_erase
+    return f2, n_tx, erased
 
 
 def _transmit_per_leaf(leaves, plan: WirePlan, rand, p, bits: int):
@@ -310,15 +453,23 @@ def _transmit_per_leaf(leaves, plan: WirePlan, rand, p, bits: int):
 
 @functools.partial(jax.jit, static_argnames=(
     "plan", "bits", "fading", "perfect", "arq_attempts", "arq_min_f2",
-    "impl", "interpret", "wire_dtype"))
+    "arq_max_tx", "ge_p_gb", "ge_p_bg", "rounding", "impl", "interpret",
+    "wire_dtype"))
 def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
                               snr_db, fading: bool, perfect: bool,
                               arq_attempts: int, arq_min_f2: float,
                               impl: str, interpret: bool,
-                              wire_dtype: str = "float32"):
+                              wire_dtype: str = "float32",
+                              arq_max_tx: int = 0, ge_p_gb: float = 0.0,
+                              ge_p_bg: float = 0.5,
+                              rounding: str = "nearest"):
     """One fused pass over a stacked tuple of leaves ([N, *shape_i]).
     Returns (received leaves (same stacked shapes), n_tx [N, P] drawn
-    per-packet transmission counts)."""
+    per-packet transmission counts, erased [N, P] bool erasure mask).
+    Erased packets (bounded ARQ exhausted, see _packet_fades) arrive
+    as ZEROS — the receiver knows the CRC failed and substitutes the
+    additive identity, which is what lets quorum aggregation weight
+    them out without a second pass."""
     from repro.core import channel as CH  # lazy: channel imports wire
 
     n = leaves[0].shape[0] if leaves else 1
@@ -327,14 +478,23 @@ def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
     if perfect:
         p = jnp.zeros((n, npk), jnp.float32)
         n_tx = jnp.ones((n, npk), jnp.int32)
+        erased = jnp.zeros((n, npk), bool)
     else:
-        f2, n_tx = _packet_fades(kf, n, npk, fading, arq_attempts,
-                                 arq_min_f2)
+        f2, n_tx, erased = _packet_fades(kf, n, npk, fading, arq_attempts,
+                                         arq_min_f2, arq_max_tx, ge_p_gb,
+                                         ge_p_bg)
         p = CH.bpsk_bit_error_prob(snr_db, f2)
     rand = jax.random.bits(kb, (n, plan.n_rows, plan.cols), jnp.uint32)
+    can_erase = (not perfect) and arq_max_tx > 0
 
     if impl == "per_leaf":
-        return _transmit_per_leaf(leaves, plan, rand, p, bits), n_tx
+        out = _transmit_per_leaf(leaves, plan, rand, p, bits)
+        if can_erase:
+            out = tuple(
+                jnp.where(erased[:, i].reshape((n,) + (1,) * (o.ndim - 1)),
+                          jnp.zeros((), o.dtype), o)
+                for i, o in enumerate(out))
+        return out, n_tx, erased
 
     buf = jax.vmap(lambda *ls: _pack_leaves(ls, plan))(*leaves)  # [n, R, C]
     row_id = jnp.asarray(_row_ids(plan))
@@ -362,8 +522,13 @@ def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
     else:
         y = wire_transform(buf, rand, scale_row, p_row, bits,
                            code_dtype=(jnp.uint8 if wire_dtype == "int8"
-                                       else jnp.uint32))
-    return jax.vmap(lambda b: tuple(_unpack_leaves(b, plan)))(y), n_tx
+                                       else jnp.uint32),
+                           stochastic=(rounding == "stochastic"))
+    if can_erase:
+        erased_row = jnp.take(erased, row_id, axis=1)[..., None]  # [n, R, 1]
+        y = jnp.where(erased_row, jnp.zeros((), y.dtype), y)
+    return jax.vmap(lambda b: tuple(_unpack_leaves(b, plan)))(y), n_tx, \
+        erased
 
 
 def _check_wire_dtype(wire_dtype: str, bits: int, impl: str) -> str:
@@ -381,66 +546,100 @@ def _check_wire_dtype(wire_dtype: str, bits: int, impl: str) -> str:
     return wire_dtype
 
 
+def _check_rounding(rounding: str, impl: str) -> str:
+    if rounding not in ("nearest", "stochastic"):
+        raise ValueError(f"unknown rounding {rounding!r}")
+    if rounding == "stochastic" and impl != "packed":
+        raise ValueError(
+            "rounding='stochastic' is only implemented for the packed "
+            f"jnp path, not impl={impl!r} (the Pallas kernel body and "
+            "the per-leaf reference still round to nearest)")
+    return rounding
+
+
 def transmit_stacked(key, tree, bits: int, snr_db, fading: bool = True,
                      perfect: bool = False, arq_attempts: int = 1,
                      arq_min_f2: float = 0.25, impl: str = "packed",
                      interpret: bool = True, return_diag: bool = False,
-                     wire_dtype: str = "float32"):
+                     wire_dtype: str = "float32", arq_max_tx: int = 0,
+                     ge_p_gb: float = 0.0, ge_p_bg: float = 0.5,
+                     rounding: str = "nearest"):
     """Fused transmit of a tree whose leaves carry a leading user axis
     [N, ...]: each (user, leaf) pair is one packet with its own fade and
     per-tensor quantization scale — FL's whole N-user upload in one
     jitted call (one kernel launch under impl="kernel").
 
-    With return_diag=True also returns {"n_tx": [N, P] int32}, the DRAWN
-    per-(user, packet) ARQ transmission counts (all-ones without ARQ) —
-    the actual on-air cost, vs the analytic `expected_arq_tx`.
+    With return_diag=True also returns {"n_tx": [N, P] int32,
+    "erased": [N, P] bool}: the DRAWN per-(user, packet) ARQ
+    transmission counts (all-ones without ARQ) — the actual on-air
+    cost, vs the analytic `expected_arq_tx` — and the bounded-ARQ
+    erasure mask (all-False unless arq_max_tx > 0; erased packets
+    arrive zeroed).
+
+    Fault knobs: `arq_max_tx` bounds the ARQ (exhaustion = erasure),
+    `ge_p_gb`/`ge_p_bg` drive the Gilbert-Elliott burst-outage chain,
+    `rounding="stochastic"` opts into unbiased codeword rounding
+    (packed impl only). All default off, leaving every legacy draw and
+    output bitwise intact.
 
     `wire_dtype="int8"` (quant_bits <= 8, packed impl) carries the
     codeword buffer as one byte per element across the channel instead
     of float32 — bit-identical output, 4x less on-wire HBM traffic."""
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
-        return (tree, {"n_tx": jnp.zeros((1, 0), jnp.int32)}) \
+        return (tree, {"n_tx": jnp.zeros((1, 0), jnp.int32),
+                       "erased": jnp.zeros((1, 0), bool)}) \
             if return_diag else tree
     plan = _plan_from_shapes(treedef,
                              tuple(tuple(l.shape[1:]) for l in leaves),
                              tuple(np.dtype(l.dtype) for l in leaves),
                              WIRE_COLS)
-    out, n_tx = _transmit_stacked_planned(
+    out, n_tx, erased = _transmit_stacked_planned(
         key, tuple(leaves), plan, int(bits), snr_db, bool(fading),
         bool(perfect), int(arq_attempts), float(arq_min_f2), impl,
         bool(interpret),
-        wire_dtype=_check_wire_dtype(wire_dtype, int(bits), impl))
+        wire_dtype=_check_wire_dtype(wire_dtype, int(bits), impl),
+        arq_max_tx=int(arq_max_tx), ge_p_gb=float(ge_p_gb),
+        ge_p_bg=float(ge_p_bg),
+        rounding=_check_rounding(rounding, impl))
     rx = jax.tree.unflatten(treedef, list(out))
-    return (rx, {"n_tx": n_tx}) if return_diag else rx
+    return (rx, {"n_tx": n_tx, "erased": erased}) if return_diag else rx
 
 
 def transmit_tree(key, tree, bits: int, snr_db, fading: bool = True,
                   perfect: bool = False, arq_attempts: int = 1,
                   arq_min_f2: float = 0.25, impl: str = "packed",
                   interpret: bool = True, return_diag: bool = False,
-                  wire_dtype: str = "float32"):
+                  wire_dtype: str = "float32", arq_max_tx: int = 0,
+                  ge_p_gb: float = 0.0, ge_p_bg: float = 0.5,
+                  rounding: str = "nearest"):
     """Fused transmit of an arbitrary pytree: one fade + one per-tensor
     scale per leaf, one RNG draw and one quantize/channel/dequantize
     pass for the whole tree. Drop-in replacement for the per-leaf
     transmit loop; `impl` selects packed-jnp (default), the Pallas
     kernel, or the bit-identical per-leaf reference.
 
-    With return_diag=True also returns {"n_tx": [P] int32} drawn
-    per-packet transmission counts (see transmit_stacked).
+    With return_diag=True also returns {"n_tx": [P] int32,
+    "erased": [P] bool} drawn per-packet transmission counts and
+    erasure mask (see transmit_stacked). Fault knobs and
     `wire_dtype="int8"`: see transmit_stacked."""
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
-        return (tree, {"n_tx": jnp.zeros((0,), jnp.int32)}) \
+        return (tree, {"n_tx": jnp.zeros((0,), jnp.int32),
+                       "erased": jnp.zeros((0,), bool)}) \
             if return_diag else tree
     plan = _plan_from_shapes(treedef,
                              tuple(tuple(l.shape) for l in leaves),
                              tuple(np.dtype(l.dtype) for l in leaves),
                              WIRE_COLS)
     stacked = tuple(l[None] for l in leaves)
-    out, n_tx = _transmit_stacked_planned(
+    out, n_tx, erased = _transmit_stacked_planned(
         key, stacked, plan, int(bits), snr_db, bool(fading), bool(perfect),
         int(arq_attempts), float(arq_min_f2), impl, bool(interpret),
-        wire_dtype=_check_wire_dtype(wire_dtype, int(bits), impl))
+        wire_dtype=_check_wire_dtype(wire_dtype, int(bits), impl),
+        arq_max_tx=int(arq_max_tx), ge_p_gb=float(ge_p_gb),
+        ge_p_bg=float(ge_p_bg),
+        rounding=_check_rounding(rounding, impl))
     rx = jax.tree.unflatten(treedef, [o[0] for o in out])
-    return (rx, {"n_tx": n_tx[0]}) if return_diag else rx
+    return (rx, {"n_tx": n_tx[0], "erased": erased[0]}) \
+        if return_diag else rx

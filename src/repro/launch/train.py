@@ -19,22 +19,24 @@ degrades every sharding rule to replication — same code path.
 `--steps` is the target TOTAL optimizer steps (per client); the driver
 runs enough communication cycles to reach it (tiny CL/SL cycle = one
 corpus epoch; tiny FL cycle = J local epochs; scaled CL/SL cycle =
-`--cycle-steps`; scaled FL cycle = `local_steps`). Checkpointing saves
-the scheme's train-state pytree every `--ckpt-every` cycles and
-restores the latest at startup (host-side cycle/step counters restart,
-so the RNG stream of a resumed run is that of a fresh one — the
-compiled state, weights and optimizer moments carry over).
+`--cycle-steps`; scaled FL cycle = `local_steps`). Checkpointing is
+`Experiment`'s crash-consistent path (checkpoint/ckpt.py experiment
+snapshots): `--ckpt-dir` snapshots the whole run — train pytree,
+data-rng state, cycle index, accumulated billing — every
+`--ckpt-every` cycles, and a restart with the same `--ckpt-dir`
+resumes from the latest snapshot, reproducing the uninterrupted run's
+trajectory and billing bit-for-bit (tests/test_resume.py).
 """
 from __future__ import annotations
 
 import argparse
 import math
+import os
 import time
 
 import numpy as np
 
-from repro.checkpoint.ckpt import (latest_step, restore_checkpoint,
-                                   save_checkpoint)
+from repro.checkpoint.ckpt import latest_experiment_cycle
 from repro.configs import get_arch
 from repro.configs.base import ShapeConfig, WirelessConfig
 from repro.launch.mesh import make_test_mesh
@@ -136,17 +138,6 @@ def main(argv=None) -> dict:
     history = []
     t0 = time.time()
 
-    def on_init(state):
-        if not args.ckpt_dir:
-            return state
-        last = latest_step(args.ckpt_dir)
-        if last is None:
-            return state
-        import dataclasses
-        train = restore_checkpoint(args.ckpt_dir, last, state.train)
-        print(f"restored checkpoint from cycle {last}")
-        return dataclasses.replace(state, train=train)
-
     def on_cycle(cyc, acc, rep):
         if cyc % args.log_every == 0 or cyc == cycles - 1:
             dt = (time.time() - t0) / (cyc + 1)
@@ -157,25 +148,32 @@ def main(argv=None) -> dict:
             history.append({"cycle": cyc, "loss": rep.loss, "acc": acc,
                             "bits": rep.bits})
             assert np.isfinite(rep.loss), f"loss diverged at cycle {cyc}"
-        if args.ckpt_dir and (cyc + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, cyc + 1, exp.final_state.train)
+
+    resume = None
+    if args.ckpt_dir and latest_experiment_cycle(args.ckpt_dir) is not None:
+        resume = args.ckpt_dir
+        print(f"resuming from cycle "
+              f"{latest_experiment_cycle(args.ckpt_dir)} "
+              f"({os.path.abspath(args.ckpt_dir)})")
 
     with use_mesh(mesh):
         exp = Experiment(scheme, cycles=cycles, seed=args.seed,
                          n_train=n_train, n_test=n_test,
-                         lr_schedule=lr_schedule,
-                         on_init=on_init, on_cycle=on_cycle)
+                         lr_schedule=lr_schedule, on_cycle=on_cycle,
+                         checkpoint_dir=args.ckpt_dir or None,
+                         checkpoint_every=(args.ckpt_every
+                                           if args.ckpt_dir else 0),
+                         resume_from=resume)
         res = exp.run()
-        if args.ckpt_dir:
-            save_checkpoint(args.ckpt_dir, cycles, exp.final_state.train)
 
     init_bits = exp.init_delivery.bits if exp.init_delivery else 0.0
     print(f"done: {cycles} cycles, final acc {res.final_accuracy:.3f}, "
           f"total bits {res.total_bits:.3e} "
           f"(init {init_bits:.3e}), "
           f"energy {sum(r.energy_j for r in exp.reports):.3e} J")
-    return {"history": history, "final_loss": history[-1]["loss"],
-            "result": res}
+    final_loss = (history[-1]["loss"] if history
+                  else (res.loss[-1] if res.loss else 0.0))
+    return {"history": history, "final_loss": final_loss, "result": res}
 
 
 if __name__ == "__main__":

@@ -88,22 +88,49 @@ def make_fl_train_step(cfg, shape_cfg, wcfg, n_users: int = 2,
         return jax.vmap(one)(state, batch,
                              jax.random.split(key, n_users))
 
+    arq_max_tx = int(getattr(wcfg, "arq_max_tx", 0))
+    ge_p_gb = float(getattr(wcfg, "ge_p_gb", 0.0))
+    ge_p_bg = float(getattr(wcfg, "ge_p_bg", 0.5))
+    rounding = str(getattr(wcfg, "rounding", "nearest"))
+
     def fl_step(state: TrainState, batch: dict, key: jax.Array, lr=lr):
         state, metrics = local_steps(state, batch, key, lr)
         # ---- quantized channel sync (the only cross-user collective):
         # the whole N-user model upload is one packed-wire pass (the
         # user axis stays a leading batch axis of the packed buffer, so
         # the mean below remains the single cross-pod all-reduce)
+        fault_knobs = {}
+        if arq_max_tx > 0 or ge_p_gb > 0.0 or rounding != "nearest":
+            fault_knobs = dict(arq_max_tx=arq_max_tx, ge_p_gb=ge_p_gb,
+                               ge_p_bg=ge_p_bg, rounding=rounding)
         received = WIRE.transmit_stacked(
             jax.random.fold_in(key, SYNC_KEY_FOLD),
             state.trainable["model"],
             bits=wcfg.quant_bits, snr_db=wcfg.snr_db, fading=wcfg.fading,
             perfect=wcfg.perfect_channel,
-            arq_attempts=wcfg.arq_attempts, arq_min_f2=wcfg.arq_min_f2)
-        model = jax.tree.map(
-            lambda r, leaf: jnp.broadcast_to(jnp.mean(r, axis=0),
-                                             leaf.shape),
-            received, state.trainable["model"])
+            arq_attempts=wcfg.arq_attempts, arq_min_f2=wcfg.arq_min_f2,
+            return_diag=(arq_max_tx > 0), **fault_knobs)
+        if arq_max_tx > 0:
+            # erasure-aware FedAvg, in-jit (the diag rides the same XLA
+            # program): users with ANY erased packet carry zero weight;
+            # if everyone erased, each user keeps its own pre-sync
+            # weights (an abandoned round — the host replays the same
+            # draw via wire.drawn_stacked_tx to know it happened)
+            received, diag = received
+            alive = ~diag["erased"].any(axis=1)                   # [N]
+            n_alive = alive.sum().astype(jnp.float32)
+            w = alive.astype(jnp.float32) / jnp.maximum(n_alive, 1.0)
+
+            def agg(r, leaf):
+                wb = w.reshape((-1,) + (1,) * (r.ndim - 1))
+                avg = jnp.broadcast_to((r * wb).sum(axis=0), leaf.shape)
+                return jnp.where(n_alive > 0, avg, leaf)
+            model = jax.tree.map(agg, received, state.trainable["model"])
+        else:
+            model = jax.tree.map(
+                lambda r, leaf: jnp.broadcast_to(jnp.mean(r, axis=0),
+                                                 leaf.shape),
+                received, state.trainable["model"])
         trainable = dict(state.trainable, model=model)
         return TrainState(trainable, state.opt_state, state.step), \
             jax.tree.map(lambda m: m.mean(), metrics)

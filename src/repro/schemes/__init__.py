@@ -14,6 +14,7 @@ from repro.schemes.base import (BATCH, CFG, LR0, LR_DECAY, LR_EVERY,
                                 lr_at, step_flops, train_cycle,
                                 train_shape, user_side_flops_sl)
 from repro.schemes.centralized import CentralizedScheme
+from repro.schemes.faults import FaultPlan
 from repro.schemes.federated import FederatedScheme
 from repro.schemes.population import (ClientSpec, ParticipationPolicy,
                                       PopulationScheme)
@@ -31,5 +32,5 @@ __all__ = [
     "CentralizedScheme", "FederatedScheme", "SplitScheme", "evaluate_sl",
     "ScaledCentralizedScheme", "ScaledFederatedScheme", "ScaledSplitScheme",
     "ClientSpec", "ParticipationPolicy", "PopulationScheme", "Delivery",
-    "Radio", "Experiment", "build_scheme",
+    "Radio", "Experiment", "build_scheme", "FaultPlan",
 ]

@@ -189,7 +189,16 @@ class ClientReport:
     time exceeded the deadline — both non-participant cases are billed
     as zero-bit, zero-energy, zero-step rounds. `est_round_s` is the
     deadline model's estimate (compute + payload/link-rate) for the
-    radio-bearing paradigms, 0.0 when no deadline model applies."""
+    radio-bearing paradigms, 0.0 when no deadline model applies.
+
+    Fault outcomes (docs/ACCOUNTING.md §Faults): "erased" means the
+    client's upload never survived the link — either a FaultPlan
+    whole-cycle outage (no compute, full expected payload billed as
+    erased) or a bounded-ARQ wire erasure (compute done, its actual
+    attempted bits billed, update discarded); "dropped_midround" means
+    a FaultPlan mid-round death that billed only the fraction of the
+    upload sent before failing. Both carry zero aggregation weight;
+    `erased_bits` is the attempted-but-undelivered slice of `bits`."""
     name: str
     paradigm: str           # "fl" | "sl" | "cl"
     loss: float
@@ -198,8 +207,10 @@ class ClientReport:
     n_tx: float = 0.0
     energy_j: float = 0.0
     weight: float = 0.0
-    status: str = "ok"      # "ok" | "sampled_out" | "straggler"
+    status: str = "ok"      # | "sampled_out" | "straggler" | "erased"
+                            # | "dropped_midround"
     est_round_s: float = 0.0
+    erased_bits: float = 0.0
 
 
 @dataclasses.dataclass
@@ -227,6 +238,8 @@ class RoundReport:
     energy_j: float = 0.0   # comm energy of this round's deliveries
     metrics: dict = dataclasses.field(default_factory=dict)
     clients: tuple = ()     # per-client ClientReports (population rounds)
+    erased_bits: float = 0.0  # attempted-but-erased slice of `bits`
+    outage_s: float = 0.0   # ARQ exponential-backoff wait billed in time
 
 
 @dataclasses.dataclass

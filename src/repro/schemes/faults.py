@@ -1,0 +1,78 @@
+"""`FaultPlan` — a deterministic, seeded per-cycle fault schedule.
+
+The wire's Gilbert-Elliott/bounded-ARQ machinery (core/wire.py) models
+*organic* link faults: whether a given packet is erased is a function of
+the round key and the link knobs. A `FaultPlan` is the complementary
+*orchestrated* layer: a reproducible schedule of whole-client outages
+and mid-round dropouts, drawn from its OWN seed stream — so chaos tests
+and the robustness benchmark can say "client 3 is unreachable in cycle
+5" and get the identical fleet trajectory every run, independent of the
+channel knobs.
+
+RNG: cycle c's events come from `fold_in(PRNGKey(seed + 11), c)` — a
+stream disjoint from every training/channel key (data seed+1, rounds
+seed+2/3, participation seed+5, uploads seed+7; see
+docs/ACCOUNTING.md §RNG). A plan with both probabilities zero draws
+NOTHING, so threading a default FaultPlan through a run leaves its
+trajectory bitwise intact.
+
+Semantics (enforced by schemes/population.py):
+  outage          — the client is unreachable for the whole cycle: it
+                    does not compute, its report is status="erased",
+                    and its whole expected round payload is billed as
+                    attempted-but-erased bits (the base station kept
+                    the uplink slot open).
+  mid-round drop  — the client dies a fraction `frac` of the way
+                    through its upload: bills `frac` of its expected
+                    round bits (all erased), status="dropped_midround",
+                    contributes zero aggregation weight.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+_PLAN_FOLD_SEED = 11   # PRNGKey(seed + 11): disjoint from all run streams
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Seeded per-cycle outage/dropout schedule (frozen + hashable).
+
+    p_outage:  per-(cycle, client) probability of a whole-cycle outage.
+    p_dropout: per-(cycle, client) probability of a mid-round dropout
+               (only clients that escaped outage can drop mid-round);
+               the dropped fraction of the upload is itself uniform.
+    """
+    seed: int = 0
+    p_outage: float = 0.0
+    p_dropout: float = 0.0
+
+    @property
+    def active(self) -> bool:
+        return self.p_outage > 0.0 or self.p_dropout > 0.0
+
+    def events(self, cycle: int, n: int):
+        """-> (outage [n] bool, drop_frac [n] float64) for one cycle.
+
+        drop_frac is NaN for clients that do not drop mid-round; a
+        dropping client's value in (0, 1) is the fraction of its upload
+        sent before dying. Zero-probability plans return without
+        touching any RNG (bitwise-neutral default)."""
+        out = np.zeros(n, bool)
+        frac = np.full(n, np.nan)
+        if not self.active or n == 0:
+            return out, frac
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.seed + _PLAN_FOLD_SEED), cycle)
+        ko, kd, kf = jax.random.split(key, 3)
+        u = np.asarray(jax.random.uniform(ko, (n,)))
+        out = u < self.p_outage
+        if self.p_dropout > 0.0:
+            ud = np.asarray(jax.random.uniform(kd, (n,)))
+            uf = np.asarray(jax.random.uniform(kf, (n,)))
+            drop = (~out) & (ud < self.p_dropout)
+            frac = np.where(drop, np.clip(uf, 1e-3, 1.0 - 1e-3), np.nan)
+        return out, frac

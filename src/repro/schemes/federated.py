@@ -123,9 +123,15 @@ class FederatedScheme:
     def __init__(self, wcfg=None, capture: bool = False, shards=None,
                  dp_sigma: float = 0.0, dp_clip: float = 1.0,
                  prox_mu: float = 0.0,
-                 sample_with_replacement: bool = False):
+                 sample_with_replacement: bool = False,
+                 quorum: float = 0.0):
         from repro.configs.base import WirelessConfig
         self.wcfg = wcfg or WirelessConfig(mode="fl")
+        # quorum: minimum DELIVERED fraction for the sync to commit; a
+        # round below quorum is abandoned (everyone re-anchors on the
+        # cycle's broadcast — bits were still burned). 0.0 commits on
+        # any single delivered update (pure graceful degradation).
+        self.quorum = float(quorum)
         self.radio = Radio.from_wcfg(self.wcfg)
         # custom shards define the population; wcfg.n_users otherwise
         self.n_users = len(shards) if shards is not None \
@@ -211,12 +217,31 @@ class FederatedScheme:
                 fl_capture(self.captures, dlv.payload, broadcast,
                            [batch["tokens"][u]
                             for u in range(self.n_users)])
-            if getattr(self.wcfg, "aggregate", "mean") == "median":
-                avg = jax.tree.map(lambda r: jnp.median(r, axis=0),
-                                   dlv.payload)
+            # erasure-aware aggregation: users whose upload was erased
+            # by the bounded-ARQ link (user_erased is None on a
+            # fault-free radio — legacy path untouched) carry zero
+            # weight; below quorum the whole sync is abandoned and
+            # everyone re-anchors on the cycle's broadcast weights.
+            erased = dlv.user_erased or (False,) * self.n_users
+            kept = [u for u in range(self.n_users) if not erased[u]]
+            need = max(1, math.ceil(self.quorum * self.n_users))
+            fmetrics = {}
+            if self.radio.arq_max_tx > 0:
+                fmetrics = {"n_erased_users": self.n_users - len(kept),
+                            "quorum_met": len(kept) >= need}
+            if len(kept) == self.n_users:
+                rx = dlv.payload
+            elif len(kept) >= need:
+                sel = jnp.asarray(kept)
+                rx = jax.tree.map(lambda r: r[sel], dlv.payload)
             else:
-                avg = jax.tree.map(lambda r: jnp.mean(r, axis=0),
-                                   dlv.payload)
+                rx = None      # abandoned round
+            if rx is None:
+                avg = broadcast
+            elif getattr(self.wcfg, "aggregate", "mean") == "median":
+                avg = jax.tree.map(lambda r: jnp.median(r, axis=0), rx)
+            else:
+                avg = jax.tree.map(lambda r: jnp.mean(r, axis=0), rx)
             synced = FED.replicate_for_users(avg, self.n_users)   # Eq. 4
             bits, n_tx, energy = dlv.bits, dlv.n_tx, dlv.energy_j
 
@@ -225,8 +250,13 @@ class FederatedScheme:
         new = SchemeState(new_train, state.data, state.steps + j,
                           state.epoch + self.local_epochs)
         loss = float(np.asarray(metrics["loss"]).mean())
+        if self.dp_sigma > 0:
+            return new, RoundReport(loss=loss, steps=j, bits=bits,
+                                    n_tx=n_tx, energy_j=energy)
         return new, RoundReport(loss=loss, steps=j, bits=bits, n_tx=n_tx,
-                                energy_j=energy)
+                                energy_j=energy, metrics=fmetrics,
+                                erased_bits=dlv.erased_bits,
+                                outage_s=dlv.outage_s)
 
     # -------------------------------------------------------------- eval
     def evaluate(self, state, xte, yte) -> float:

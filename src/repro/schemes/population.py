@@ -81,6 +81,7 @@ docs/ACCOUNTING.md; layer map: docs/ARCHITECTURE.md.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Optional, Sequence
 
 import jax
@@ -94,12 +95,13 @@ from repro.schemes.base import (BATCH, CFG, ClientReport, RoundReport,
                                 step_flops, train_cycle,
                                 user_side_flops_sl)
 from repro.schemes.centralized import cl_train_step
+from repro.schemes.faults import FaultPlan
 from repro.schemes.federated import (draw_local_epochs, fl_capture,
                                      fl_local_phase, fl_upload)
 from repro.schemes.radio import Delivery, Radio
 from repro.schemes.split import (_sl_observe_fn, _wcfg_key, evaluate_sl,
                                  sl_bits_per_step, sl_cycle,
-                                 sl_cycle_drawn_tx, sl_train_step)
+                                 sl_cycle_drawn_diag, sl_train_step)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,6 +242,17 @@ class _PopState:
     cl_steps: list                    # per CL member: cumulative steps
 
 
+# a pytree so the WHOLE fleet state (incl. the python-int step counters)
+# flattens into one crash-consistent experiment snapshot
+# (checkpoint/ckpt.save_experiment) — the scheme itself never maps over
+# a _PopState, so registration changes no training path
+jax.tree_util.register_dataclass(
+    _PopState,
+    data_fields=["groups", "sl_states", "sl_steps", "global_trainable",
+                 "client_steps", "cl_states", "cl_steps"],
+    meta_fields=[])
+
+
 class PopulationScheme:
     """A heterogeneous client fleet behind the standard Scheme protocol
     — `Experiment` drives it unchanged (that is the point of PR 2's
@@ -253,7 +266,9 @@ class PopulationScheme:
                  policy: Optional[ParticipationPolicy] = None,
                  deadline_s: Optional[float] = None,
                  deadline_jitter_sigma: float = 0.0,
-                 perfect_eval: bool = False):
+                 perfect_eval: bool = False,
+                 quorum: float = 0.0,
+                 fault_plan: Optional[FaultPlan] = None):
         if not clients:
             raise ValueError("PopulationScheme needs at least one "
                              "ClientSpec")
@@ -285,6 +300,24 @@ class PopulationScheme:
                              "model's compute estimate — it needs a "
                              "deadline_s to act on")
         self.deadline_jitter_sigma = float(deadline_jitter_sigma)
+        # Fault tolerance (docs/ACCOUNTING.md §Faults): `quorum` is the
+        # minimum fraction of the WHOLE fleet whose updates must arrive
+        # for the aggregation to commit — a round below quorum is
+        # abandoned (global model unchanged, every weight 0; bits were
+        # still burned). 0.0 commits on any single delivered update.
+        # `fault_plan` is the orchestrated outage/dropout schedule
+        # (schemes/faults.py); None or an inactive plan draws nothing.
+        if not 0.0 <= quorum <= 1.0:
+            raise ValueError(f"quorum must be in [0, 1], got {quorum}")
+        self.quorum = float(quorum)
+        self.fault_plan = fault_plan
+        # fault metrics ride RoundReport.metrics only when some fault
+        # machinery is switched on — fault-free fleets keep the exact
+        # legacy metrics dict (golden-parity discipline)
+        self._faults_on = (self.quorum > 0.0
+                           or (fault_plan is not None and fault_plan.active)
+                           or any(s.radio.arq_max_tx > 0
+                                  for s in self.clients))
         self.perfect_eval = perfect_eval
         self.radio = Radio.from_wcfg(self.wcfg)    # server-side reference
         self._sl_idx = [i for i, s in enumerate(self.clients)
@@ -370,18 +403,28 @@ class PopulationScheme:
         (device speed varies round to round; the expected link rate is
         already an ergodic average)."""
         spec = self.clients[i]
-        radio = spec.radio
+        if spec.paradigm == "cl":  # billed at init, rounds radio-silent,
+            return 0.0, 0.0   # compute server-side — no deadline applies
         steps = spec.local_epochs * self._spe[i]
         comp = steps * spec.compute_s_per_step
+        return comp, self._round_bits_estimate(i) / spec.radio.rate_bps()
+
+    def _round_bits_estimate(self, i: int) -> float:
+        """Client i's EXPECTED on-air round payload in bits — the
+        deadline model's comm numerator, and the slice a `FaultPlan`
+        fault bills as attempted-but-erased (full for a whole-cycle
+        outage, `frac` of it for a mid-round death). 0.0 for CL members
+        (radio-silent rounds)."""
+        spec = self.clients[i]
+        radio = spec.radio
+        steps = spec.local_epochs * self._spe[i]
         if spec.paradigm == "fl":
-            bits = (float(self._model_elems) * radio.quant_bits
+            return (float(self._model_elems) * radio.quant_bits
                     * radio.expected_tx())
-        elif spec.paradigm == "sl":
-            bits = (steps * sl_bits_per_step(spec.wcfg, radio.quant_bits)
+        if spec.paradigm == "sl":
+            return (steps * sl_bits_per_step(spec.wcfg, radio.quant_bits)
                     * radio.expected_tx())
-        else:            # cl: billed at init, rounds radio-silent,
-            return 0.0, 0.0   # compute server-side — no deadline applies
-        return comp, bits / radio.rate_bps()
+        return 0.0
 
     def _estimate_round_s(self, i: int) -> float:
         """Deterministic (jitter-free) round-time estimate for client i."""
@@ -519,11 +562,16 @@ class PopulationScheme:
 
     def _participants(self, seed: int, cycle: int):
         """The round's participation mask + per-client status + time
-        estimates: the policy samples first (its own key stream), then
-        the deadline model — with optional per-round compute jitter —
-        drops active radio-bearing stragglers."""
+        estimates + mid-round drop fractions: the policy samples first
+        (its own key stream), then the deadline model — with optional
+        per-round compute jitter — drops active radio-bearing
+        stragglers, then the `FaultPlan` (its own seed + 11 stream)
+        fells survivors with whole-cycle outages and mid-round
+        dropouts. An absent/inactive plan draws NOTHING here, so
+        fault-free fleets keep the legacy mask bitwise."""
         n = len(self.clients)
         status = ["ok"] * n
+        drop_frac = np.full(n, np.nan)
         if self.policy.kind == "full":
             part = np.ones(n, bool)     # no policy RNG drawn at all
         else:
@@ -539,7 +587,19 @@ class PopulationScheme:
                         and est[i] > self.deadline_s):
                     part[i] = False
                     status[i] = "straggler"
-        return part, status, est
+        if self.fault_plan is not None and self.fault_plan.active:
+            out, frac = self.fault_plan.events(cycle, n)
+            for i in range(n):
+                if not part[i]:
+                    continue
+                if out[i]:
+                    part[i] = False     # unreachable: no compute at all
+                    status[i] = "erased"
+                elif not np.isnan(frac[i]):
+                    part[i] = False     # died frac of the way through
+                    status[i] = "dropped_midround"
+                    drop_frac[i] = frac[i]
+        return part, status, est, drop_frac
 
     # ------------------------------------------------------------- round
     def _aggregate(self, trees, weights):
@@ -578,7 +638,8 @@ class PopulationScheme:
         n = len(self.clients)
         sizes = np.asarray([len(xs) for xs, _ in state.data], np.float64)
         weights = sizes / sizes.sum()
-        part, status, est_s = self._participants(seed, cycle)
+        part, status, est_s, drop_frac = self._participants(seed, cycle)
+        outage_s = 0.0          # backoff wait billed in time, fleet-wide
         models = [None] * n
         reports: list = [None] * n
         new_groups, new_sl, new_sl_steps = [], [], []
@@ -607,8 +668,19 @@ class PopulationScheme:
                 fl_capture(self.captures, dlv.payload, broadcast,
                            [batch[i]["tokens"] for i in mem])
             losses = np.asarray(metrics["loss"])           # [N_a, J]
+            outage_s += dlv.outage_s
+            ue = dlv.user_erased or (False,) * len(mem)
+            ueb = dlv.user_erased_bits or (0.0,) * len(mem)
             for u, i in enumerate(mem):
-                models[i] = jax.tree.map(lambda p, u=u: p[u], dlv.payload)
+                if ue[u]:
+                    # organic wire erasure: the client trained and burned
+                    # its attempted air time, but its update never
+                    # survived the bounded-ARQ link — discard it (zero
+                    # aggregation weight), bill the attempt
+                    status[i] = "erased"
+                else:
+                    models[i] = jax.tree.map(lambda p, u=u: p[u],
+                                             dlv.payload)
                 j = losses.shape[1]
                 client_steps[i] += j
                 reports[i] = ClientReport(
@@ -616,7 +688,8 @@ class PopulationScheme:
                     loss=float(losses[u].mean()), steps=j,
                     bits=dlv.user_bits[u], n_tx=dlv.user_n_tx[u],
                     energy_j=group.radio.energy_j(dlv.user_bits[u]),
-                    est_round_s=est_s[i])
+                    status=status[i], est_round_s=est_s[i],
+                    erased_bits=ueb[u])
             new_groups.append(states if whole else jax.tree.map(
                 lambda old, upd: old.at[np.asarray(sel)].set(upd),
                 pop.groups[gi], states))
@@ -637,16 +710,22 @@ class PopulationScheme:
                 on_step=self._sl_capture_cb(si) if self.capture else None)
             n_steps = steps - pop.sl_steps[si]
             radio = spec.radio
-            n_tx = sl_cycle_drawn_tx(sk, pop.sl_steps[si], n_steps, radio)
-            bits = n_tx * (sl_bits_per_step(spec.wcfg, radio.quant_bits)
-                           / 2.0)
+            n_tx, n_er, bo = sl_cycle_drawn_diag(sk, pop.sl_steps[si],
+                                                 n_steps, radio)
+            leg_bits = sl_bits_per_step(spec.wcfg, radio.quant_bits) / 2.0
+            bits = n_tx * leg_bits
+            outage_s += bo * radio.arq_backoff_s
+            # an erased SL leg degrades gracefully IN-graph (the crossing
+            # delivers zeros), so the client stays a participant — only
+            # its wasted air time is billed as erased
             models[i] = st.trainable["model"]
             client_steps[i] += n_steps
             reports[i] = ClientReport(
                 name=spec.name or f"sl{i}", paradigm="sl",
                 loss=float(m["loss"]), steps=n_steps, bits=bits,
                 n_tx=n_tx, energy_j=radio.energy_j(bits),
-                est_round_s=est_s[i])
+                est_round_s=est_s[i],
+                erased_bits=n_er * radio.arq_max_tx * leg_bits)
             new_sl.append(st)
             new_sl_steps.append(steps)
 
@@ -672,31 +751,51 @@ class PopulationScheme:
             new_cl.append(st)
             new_cl_steps.append(steps)
 
-        # --- zero-bit rounds for everyone who sat this one out
+        # --- rounds for everyone who sat this one out: zero-bit for
+        # sampled-out/straggling clients; FaultPlan casualties bill the
+        # expected payload they burned (docs/ACCOUNTING.md §Faults) —
+        # the whole round's worth for an outage (the base station kept
+        # the uplink slot open; the dead device spent no tx energy),
+        # `frac` of it for a mid-round death (those bits WERE sent,
+        # so their transmit energy was too)
         for i in range(n):
             if reports[i] is None:
+                bits = energy = 0.0
+                if status[i] == "erased":
+                    bits = self._round_bits_estimate(i)
+                elif status[i] == "dropped_midround":
+                    bits = float(drop_frac[i]) * self._round_bits_estimate(i)
+                    energy = self.clients[i].radio.energy_j(bits)
                 reports[i] = ClientReport(
                     name=self.clients[i].name
                     or f"{self.clients[i].paradigm}{i}",
                     paradigm=self.clients[i].paradigm, loss=0.0, steps=0,
-                    status=status[i], est_round_s=est_s[i])
+                    bits=bits, energy_j=energy, status=status[i],
+                    est_round_s=est_s[i], erased_bits=bits)
 
         # --- mixed aggregation over the round's PARTICIPANTS (module
         # docstring: weighted FedAvg over received FL weights +
         # post-cycle SL models + server-side CL models), weights
         # renormalized among them
         trained = [i for i in range(n) if models[i] is not None]
+        # quorum gate: commit only when enough of the WHOLE fleet's
+        # updates arrived (delivered = trained and not erased). Below
+        # quorum the round is abandoned — global model and codec stay
+        # put, every weight 0 (bits were still burned). quorum=0.0
+        # commits on any single delivered update, the legacy behaviour.
+        need = max(1, math.ceil(self.quorum * n))
+        quorum_met = len(trained) >= need
         renorm = 1.0 if len(trained) == n else (
             float(weights[np.asarray(trained)].sum()) if trained else 1.0)
-        for i in trained:
-            reports[i].weight = float(weights[i] / renorm)
-        if trained:
+        if quorum_met:
+            for i in trained:
+                reports[i].weight = float(weights[i] / renorm)
             agg_model = self._aggregate([models[i] for i in trained],
                                         weights[np.asarray(trained)])
         else:
-            agg_model = broadcast      # empty round: global unchanged
+            agg_model = broadcast      # abandoned round: global unchanged
         sl_trained = [si for si, i in enumerate(self._sl_idx)
-                      if models[i] is not None]
+                      if models[i] is not None] if quorum_met else []
         if sl_trained:
             agg_codec = self._aggregate(
                 [new_sl[si].trainable["codec"] for si in sl_trained],
@@ -726,16 +825,24 @@ class PopulationScheme:
         new = SchemeState(new_pop, state.data,
                           state.steps + total_steps,
                           state.epoch + self.epochs_per_cycle)
+        metrics = {"n_active": len(trained),
+                   "n_sampled_out": status.count("sampled_out"),
+                   "n_stragglers": status.count("straggler")}
+        if self._faults_on:
+            metrics.update(n_erased=status.count("erased"),
+                           n_dropped_midround=status.count(
+                               "dropped_midround"),
+                           quorum_met=quorum_met)
         return new, RoundReport(
             loss=float(sum(r.loss * r.weight for r in reports)),
             steps=total_steps,
             bits=float(sum(r.bits for r in reports)),
             n_tx=float(sum(r.n_tx for r in reports)),
             energy_j=float(sum(r.energy_j for r in reports)),
-            metrics={"n_active": len(trained),
-                     "n_sampled_out": status.count("sampled_out"),
-                     "n_stragglers": status.count("straggler")},
-            clients=tuple(reports))
+            metrics=metrics,
+            clients=tuple(reports),
+            erased_bits=float(sum(r.erased_bits for r in reports)),
+            outage_s=float(outage_s))
 
     # -------------------------------------------------------------- eval
     def evaluate(self, state, xte, yte) -> float:

@@ -50,6 +50,17 @@ class Delivery:
     # individual clients that rode it.
     user_bits: Optional[tuple] = None
     user_n_tx: Optional[tuple] = None
+    # bounded-ARQ fault accounting (zero / None on a fault-free link).
+    # erased_bits: the slice of `bits` spent on packets that were
+    # ultimately ERASED (every transmission of an exhausted packet) —
+    # always <= bits; bits - erased_bits is the payload-delivered air
+    # time. outage_s: total exponential-backoff wait billed in TIME
+    # (docs/ACCOUNTING.md §Faults). user_erased: per-user "any packet
+    # erased" flags for stacked sends (the quorum input).
+    erased_bits: float = 0.0
+    outage_s: float = 0.0
+    user_erased: Optional[tuple] = None
+    user_erased_bits: Optional[tuple] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +77,12 @@ class Radio:
     tx_power_w: float = 1e-3
     use_kernel: bool = False     # Pallas packed kernel for float sends
     wire_dtype: str = "float32"  # "int8": byte codewords on-wire (Q<=8)
+    # fault model (all off by default — legacy deliveries bitwise):
+    arq_max_tx: int = 0          # >0: bounded ARQ, exhaustion = erasure
+    ge_p_gb: float = 0.0         # Gilbert-Elliott good->bad (0 = off)
+    ge_p_bg: float = 0.5         # Gilbert-Elliott bad->good
+    arq_backoff_s: float = 0.0   # exp backoff base, billed as outage_s
+    rounding: str = "nearest"    # "stochastic": unbiased codewords
 
     @classmethod
     def from_wcfg(cls, wcfg, quant_bits: Optional[int] = None,
@@ -86,14 +103,29 @@ class Radio:
                        arq_min_f2=float(getattr(wcfg, "arq_min_f2", 0.25)),
                        bandwidth_hz=float(wcfg.bandwidth_hz),
                        tx_power_w=float(wcfg.tx_power_w),
-                       use_kernel=use_kernel)
+                       use_kernel=use_kernel,
+                       arq_max_tx=int(getattr(wcfg, "arq_max_tx", 0)),
+                       ge_p_gb=float(getattr(wcfg, "ge_p_gb", 0.0)),
+                       ge_p_bg=float(getattr(wcfg, "ge_p_bg", 0.5)),
+                       arq_backoff_s=float(getattr(wcfg, "arq_backoff_s",
+                                                   0.0)),
+                       rounding=str(getattr(wcfg, "rounding", "nearest")))
         return dataclasses.replace(base, **overrides) if overrides else base
 
     # ----------------------------------------------------------- account
     def expected_tx(self) -> float:
-        """Analytic expected transmissions per packet under outage-ARQ."""
-        return W.expected_arq_tx(self.arq_attempts, self.arq_min_f2,
-                                 self.fading, self.perfect)
+        """Analytic expected transmissions per packet under outage-ARQ.
+        With bounded ARQ the cap replaces `arq_attempts` (the legacy
+        truncated-geometric formula already IS the bounded expectation);
+        under Gilbert-Elliott outages a stationary-bad packet burns the
+        whole window, so the expectation mixes the two link states."""
+        a = self.arq_max_tx if self.arq_max_tx > 0 else self.arq_attempts
+        base = W.expected_arq_tx(a, self.arq_min_f2, self.fading,
+                                 self.perfect)
+        if self.ge_p_gb > 0.0 and not self.perfect:
+            pi_bad = self.ge_p_gb / (self.ge_p_gb + self.ge_p_bg)
+            return pi_bad * float(a) + (1.0 - pi_bad) * base
+        return base
 
     def payload_bits(self, tree) -> float:
         """Analytic one-transmission payload of `tree` at this radio's
@@ -117,17 +149,33 @@ class Radio:
         return "kernel" if (self.use_kernel and not self.perfect) \
             else "packed"
 
-    def _deliver(self, payload, n_tx, sizes) -> Delivery:
+    def _deliver(self, payload, n_tx, sizes, erased=None) -> Delivery:
         n_tx = np.asarray(n_tx, np.float64)
         sizes = np.asarray(sizes, np.float64)
         bits = float(self.quant_bits) * float((sizes * n_tx).sum())
-        user_bits = user_n_tx = None
+        user_bits = user_n_tx = user_erased = None
         if n_tx.ndim == 2:      # stacked send: keep the per-user split
             user_bits = tuple(float(b) for b in
                               self.quant_bits * (sizes * n_tx).sum(axis=1))
             user_n_tx = tuple(float(t) for t in n_tx.sum(axis=1))
+        erased_bits = 0.0
+        user_erased_bits = None
+        if erased is not None and self.arq_max_tx > 0:
+            # every transmission of an exhausted packet was wasted air
+            # time: bill its whole attempted slice as erased
+            e = np.asarray(erased, bool)
+            erased_bits = float(self.quant_bits) \
+                * float((sizes * n_tx * e).sum())
+            if n_tx.ndim == 2:
+                user_erased = tuple(bool(x) for x in e.any(axis=1))
+                user_erased_bits = tuple(
+                    float(b) for b in
+                    self.quant_bits * (sizes * n_tx * e).sum(axis=1))
+        outage_s = W.backoff_s(n_tx, self.arq_backoff_s)
         return Delivery(payload, bits, self.energy_j(bits),
-                        float(n_tx.sum()), user_bits, user_n_tx)
+                        float(n_tx.sum()), user_bits, user_n_tx,
+                        erased_bits, float(outage_s), user_erased,
+                        user_erased_bits)
 
     # -------------------------------------------------------------- send
     def send_tree(self, key, tree) -> Delivery:
@@ -137,9 +185,11 @@ class Radio:
             key, tree, self.quant_bits, self.snr_db, fading=self.fading,
             perfect=self.perfect, arq_attempts=self.arq_attempts,
             arq_min_f2=self.arq_min_f2, impl=self._impl(),
-            return_diag=True, wire_dtype=self.wire_dtype)
+            return_diag=True, wire_dtype=self.wire_dtype,
+            arq_max_tx=self.arq_max_tx, ge_p_gb=self.ge_p_gb,
+            ge_p_bg=self.ge_p_bg, rounding=self.rounding)
         sizes = [int(l.size) for l in jax.tree.leaves(tree)]
-        return self._deliver(payload, diag["n_tx"], sizes)
+        return self._deliver(payload, diag["n_tx"], sizes, diag["erased"])
 
     def send_stacked(self, key, tree) -> Delivery:
         """Transmit a tree whose leaves carry a leading user axis
@@ -151,9 +201,11 @@ class Radio:
             key, tree, self.quant_bits, self.snr_db, fading=self.fading,
             perfect=self.perfect, arq_attempts=self.arq_attempts,
             arq_min_f2=self.arq_min_f2, impl=self._impl(),
-            return_diag=True, wire_dtype=self.wire_dtype)
+            return_diag=True, wire_dtype=self.wire_dtype,
+            arq_max_tx=self.arq_max_tx, ge_p_gb=self.ge_p_gb,
+            ge_p_bg=self.ge_p_bg, rounding=self.rounding)
         sizes = [int(l.size) // int(l.shape[0]) for l in leaves]
-        return self._deliver(payload, diag["n_tx"], sizes)
+        return self._deliver(payload, diag["n_tx"], sizes, diag["erased"])
 
     def send_tokens(self, key, tokens, vocab_size: int,
                     labels=None) -> Delivery:

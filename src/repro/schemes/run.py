@@ -31,8 +31,8 @@ from typing import Any, Callable, Optional
 
 import numpy as np
 
-from repro.schemes.base import (N_TEST, N_TRAIN, RoundReport, RunResult,
-                                SchemeState, corpus, lr_at)
+from repro.schemes.base import (N_TEST, N_TRAIN, ClientReport, RoundReport,
+                                RunResult, SchemeState, corpus, lr_at)
 from repro.schemes.centralized import CentralizedScheme
 from repro.schemes.federated import FederatedScheme
 from repro.schemes.population import PopulationScheme
@@ -111,6 +111,19 @@ class Experiment:
     on_init: Optional[Callable[[SchemeState], Optional[SchemeState]]] = None
     # called as on_cycle(cycle, test_acc, RoundReport) after each cycle
     on_cycle: Optional[Callable[[int, float, RoundReport], None]] = None
+    # Crash-consistent resume (docs/ACCOUNTING.md §Faults, tests/
+    # test_resume.py): checkpoint_every > 0 snapshots the run every k
+    # cycles into checkpoint_dir (train pytree + data-rng state + cycle
+    # index + accumulated reports/billing, atomically — ckpt.py);
+    # resume_from (a snapshot file or a checkpoint dir, latest wins)
+    # restores it and continues, reproducing the uninterrupted run's
+    # trajectory AND billing bit-for-bit. init() always re-runs on
+    # resume (deterministic: shards/captures/CL uploads re-derive from
+    # the seed); privacy captures are NOT resumed — a resumed capture
+    # run only observes post-resume cycles.
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    resume_from: Optional[str] = None
     # filled by run():
     reports: list = dataclasses.field(default_factory=list)
     init_delivery: Optional[Delivery] = None
@@ -124,7 +137,44 @@ class Experiment:
                                             self.seed)
         return corpus(self.n_train, self.n_test, self.seed)
 
+    def _check_checkpointable(self):
+        if getattr(self.scheme, "protocol", None) == "two_party":
+            raise ValueError(
+                "checkpointing/resume needs the scheme's whole train "
+                "state as a pytree of arrays; the two-party SL protocol "
+                "holds live SLSession objects — use the (bit-identical) "
+                "fused SL path instead")
+
+    def _snapshot(self, next_cycle, state, rng, accs, losses, total_bits):
+        from repro.checkpoint import ckpt as CKPT
+        meta = {"cycle": int(next_cycle),
+                "steps": int(state.steps), "epoch": int(state.epoch),
+                "rng_state": rng.bit_generator.state,
+                "accs": accs, "losses": losses,
+                "total_bits": float(total_bits),
+                "reports": [dataclasses.asdict(r) for r in self.reports]}
+        return CKPT.save_experiment(self.checkpoint_dir, next_cycle,
+                                    state.train, meta)
+
+    def _restore(self, state, rng):
+        from repro.checkpoint import ckpt as CKPT
+        train, meta = CKPT.load_experiment(self.resume_from, state.train)
+        rng.bit_generator.state = meta["rng_state"]
+        self.reports = [
+            RoundReport(**dict(
+                r, clients=tuple(ClientReport(**c)
+                                 for c in (r.get("clients") or ()))))
+            for r in meta["reports"]]
+        state = SchemeState(train, state.data,
+                            int(meta["steps"]), int(meta["epoch"]))
+        return (state, int(meta["cycle"]), list(meta["accs"]),
+                list(meta["losses"]), float(meta["total_bits"]))
+
     def run(self) -> RunResult:
+        if self.checkpoint_every > 0 and not self.checkpoint_dir:
+            raise ValueError("checkpoint_every > 0 needs checkpoint_dir")
+        if self.checkpoint_every > 0 or self.resume_from is not None:
+            self._check_checkpointable()
         (xtr, ytr), (xte, yte) = self._data()
         state, self.init_delivery = self.scheme.init(self.seed, xtr, ytr)
         if self.on_init is not None:
@@ -132,8 +182,15 @@ class Experiment:
         total_bits = self.init_delivery.bits if self.init_delivery else 0.0
         rng = np.random.default_rng(self.seed + 1)
         accs, losses = [], []
+        start_cycle = 0
+        if self.resume_from is not None:
+            # init re-ran above (deterministic from the seed, incl. any
+            # init-time CL upload billing — the snapshot's total_bits
+            # already contains it, so it is NOT double-counted)
+            state, start_cycle, accs, losses, total_bits = \
+                self._restore(state, rng)
         default_sched = getattr(self.scheme, "default_lr_schedule", None)
-        for cyc in range(self.cycles):
+        for cyc in range(start_cycle, self.cycles):
             sched = (self.lr_schedule if self.lr_schedule is not None
                      else default_sched if default_sched is not None
                      else lr_at)
@@ -149,6 +206,12 @@ class Experiment:
             losses.append(rep.loss)
             if self.on_cycle is not None:
                 self.on_cycle(cyc, acc, rep)
+            if (self.checkpoint_every > 0
+                    and (cyc + 1) % self.checkpoint_every == 0):
+                # post-cycle snapshot: the rng state is exactly what
+                # cycle cyc+1 will consume, so resume is bit-for-bit
+                self._snapshot(cyc + 1, state, rng, accs, losses,
+                               total_bits)
         self.final_state = state
         user_f, server_f = self.scheme.flops(state.steps)
         return RunResult(accs, losses,

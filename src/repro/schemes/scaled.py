@@ -39,9 +39,10 @@ rounds use `fold_in(PRNGKey(seed + 3), cycle)`, the tiny
 batch shape.
 
 The paper model keeps its own parity-pinned schemes; `build_scheme`
-routes non-tiny `cfg`s here. FLOPs accounting for the scaled archs
-lives in the dry-run cost records (`launch/dryrun.py`), so
-`RunResult.user_flops/server_flops` are 0 for these schemes.
+routes non-tiny `cfg`s here. FLOPs accounting comes from XLA's
+pre-compile cost analysis of the SAME jitted round program the scheme
+executes (`_step_cost_flops`), apportioned user/server per paradigm —
+no hand-derived formula to drift from the model code.
 """
 from __future__ import annotations
 
@@ -94,6 +95,7 @@ class _ScaledScheme:
         self.radio = Radio.from_wcfg(wcfg)
         self.captures: dict = {}
         self._eval_exe = None
+        self._cost_flops: Optional[float] = None
 
     # ------------------------------------------------------------- data
     def default_data(self, n_train: int, n_test: int, seed: int):
@@ -186,10 +188,30 @@ class _ScaledScheme:
         and diverges the scaled archs."""
         return 3e-4
 
+    def _lower_for_cost(self):
+        """Lower ONE round program on abstract inputs — subclasses bind
+        the concrete state/batch ShapeDtypeStructs."""
+        raise NotImplementedError
+
+    def _step_cost_flops(self) -> float:
+        """FLOPs of one compiled round program, from XLA's pre-compile
+        cost analysis of the SAME jitted step the rounds execute
+        (`Lowered.cost_analysis()['flops']`) — no hand-derived formula
+        to drift from the model code, and abstract lowering means no
+        compile and no device memory. Cached per scheme; 0.0 when the
+        backend exposes no cost model."""
+        if self._cost_flops is None:
+            try:
+                self._cost_flops = float(
+                    self._lower_for_cost().cost_analysis()["flops"])
+            except Exception:
+                self._cost_flops = 0.0
+        return self._cost_flops
+
     def flops(self, steps_total: int):
-        """Scaled-arch FLOPs live in the dry-run cost records
-        (launch/dryrun.py memory/cost analysis), not here."""
-        return 0.0, 0.0
+        """Compiled-program FLOPs x executed steps; the user/server
+        split is each paradigm's (see subclass overrides)."""
+        return 0.0, self._step_cost_flops() * steps_total
 
 
 # ------------------------------------------------------------------- CL
@@ -208,6 +230,14 @@ class ScaledCentralizedScheme(_ScaledScheme):
 
     def _step_wcfg(self):
         return None
+
+    def _lower_for_cost(self):
+        state_sds = jax.eval_shape(
+            lambda k: init_train_state(k, self.cfg, self._step_wcfg(),
+                                       self.optimizer), key_sds())
+        return self._exe.lower(state_sds,
+                               M.input_specs(self.cfg, self.shape),
+                               key_sds(), 3e-4)
 
     def init(self, seed: int, xtr, ytr):
         xtr = self._check_corpus(xtr)
@@ -299,48 +329,69 @@ class ScaledSplitScheme(ScaledCentralizedScheme):
         return SchemeState(train=state,
                            data=(np.asarray(xtr), np.asarray(xtr))), None
 
-    def _drawn_leg_tx(self, key, start: int, n_steps: int) -> float:
-        """DRAWN link-leg transmissions of `n_steps` fused steps starting
-        at cumulative step `start`: the train step folds the microbatch
-        index onto the step key before `_link`, the gradient leg folds 1
-        on top (core/channel.py `_cc_bwd`) — same replay contract as
-        split.sl_cycle_drawn_tx, generalized to n_micro > 1. Without
-        ARQ/fading this is identically 2 legs x n_micro x n_steps."""
+    def _drawn_leg_diag(self, key, start: int, n_steps: int):
+        """DRAWN link-leg diagnostics of `n_steps` fused steps starting
+        at cumulative step `start` -> (n_tx, n_erased_legs,
+        backoff_units): the train step folds the microbatch index onto
+        the step key before `_link`, the gradient leg folds 1 on top
+        (core/channel.py `_cc_bwd`) — same replay contract as
+        split.sl_cycle_drawn_diag, generalized to n_micro > 1. On a
+        fault-free link this is identically (2 x n_micro x n_steps,
+        0, 0) with no RNG touched."""
         radio = self.radio
         if n_steps <= 0:
-            return 0.0
-        if radio.perfect or not radio.fading or radio.arq_attempts <= 1:
-            return float(2 * self._n_micro * n_steps)
+            return 0.0, 0.0, 0.0
+        if W.fault_free(radio.fading, radio.perfect, radio.arq_attempts,
+                        radio.arq_min_f2, radio.arq_max_tx,
+                        radio.ge_p_gb):
+            return float(2 * self._n_micro * n_steps), 0.0, 0.0
+        kw = dict(fading=radio.fading, perfect=False,
+                  arq_attempts=radio.arq_attempts,
+                  arq_min_f2=radio.arq_min_f2,
+                  arq_max_tx=radio.arq_max_tx,
+                  ge_p_gb=radio.ge_p_gb, ge_p_bg=radio.ge_p_bg)
 
         def one(s, i):
             ck = jax.random.fold_in(jax.random.fold_in(key, s), i)
-            up = W.drawn_tree_tx(ck, 1, fading=True, perfect=False,
-                                 arq_attempts=radio.arq_attempts,
-                                 arq_min_f2=radio.arq_min_f2)
-            down = W.drawn_tree_tx(jax.random.fold_in(ck, 1), 1,
-                                   fading=True, perfect=False,
-                                   arq_attempts=radio.arq_attempts,
-                                   arq_min_f2=radio.arq_min_f2)
-            return up + down
+            up = W.drawn_tree_diag(ck, 1, **kw)
+            down = W.drawn_tree_diag(jax.random.fold_in(ck, 1), 1, **kw)
+            return (up[0] + down[0], up[1] + down[1], up[2] + down[2])
 
         steps = jnp.repeat(jnp.arange(start, start + n_steps),
                            self._n_micro)
         micros = jnp.tile(jnp.arange(self._n_micro), n_steps)
-        return float(jax.vmap(one)(steps, micros).sum())
+        tx, er, bo = jax.vmap(one)(steps, micros)
+        return float(tx.sum()), float(er.sum()), float(bo.sum())
+
+    def _drawn_leg_tx(self, key, start: int, n_steps: int) -> float:
+        """Back-compat alias: just the transmission count."""
+        return self._drawn_leg_diag(key, start, n_steps)[0]
 
     def round(self, state, batch, key, lr):
         step = lambda st, b, k: self._exe(st, b, k, lr)   # noqa: E731
         st, m, steps = train_cycle(step, state.train, batch, key,
                                    state.steps)
         n = steps - state.steps
-        n_tx = self._drawn_leg_tx(key, state.steps, n)
+        n_tx, n_er, bo = self._drawn_leg_diag(key, state.steps, n)
         # each microbatch leg carries leg_elems / n_micro elements
-        bits = n_tx * (self._leg_elems / self._n_micro) \
+        leg_bits = (self._leg_elems / self._n_micro) \
             * float(self.radio.quant_bits)
+        bits = n_tx * leg_bits
         new = SchemeState(st, state.data, steps, state.epoch + 1)
         return new, RoundReport(
             loss=float(m["loss"]), steps=n, bits=bits, n_tx=n_tx,
-            energy_j=self.radio.energy_j(bits))
+            energy_j=self.radio.energy_j(bits),
+            erased_bits=n_er * self.radio.arq_max_tx * leg_bits,
+            outage_s=bo * self.radio.arq_backoff_s)
+
+    def flops(self, steps_total: int):
+        """One fused program covers BOTH sides of the cut; apportion by
+        layer share — `split_layer` of `n_layers` runs on-device
+        (plus its gradient), the rest server-side."""
+        total = self._step_cost_flops() * steps_total
+        cut = max(1, min(self.wcfg.split_layer, self.cfg.n_layers - 1))
+        ufrac = cut / float(self.cfg.n_layers)
+        return total * ufrac, total * (1.0 - ufrac)
 
 
 # ------------------------------------------------------------------- FL
@@ -404,10 +455,22 @@ class ScaledFederatedScheme(_ScaledScheme):
     def round(self, state, batch, key, lr):
         st, metrics = self._exe(state.train, batch, key, lr)
         r = self.radio
-        n_tx = W.drawn_stacked_tx(
+        out = W.drawn_stacked_tx(
             jax.random.fold_in(key, SYNC_KEY_FOLD), self.n_users,
             len(self._packet_sizes), fading=r.fading, perfect=r.perfect,
-            arq_attempts=r.arq_attempts, arq_min_f2=r.arq_min_f2)
+            arq_attempts=r.arq_attempts, arq_min_f2=r.arq_min_f2,
+            arq_max_tx=r.arq_max_tx, ge_p_gb=r.ge_p_gb,
+            ge_p_bg=r.ge_p_bg, with_erased=(r.arq_max_tx > 0))
+        erased_bits = 0.0
+        if r.arq_max_tx > 0:
+            # the fused program's in-jit erasure-aware FedAvg saw the
+            # SAME draw; replaying it here is what lets the host bill
+            # the wasted air time of exhausted uploads
+            n_tx, erased = out
+            erased_bits = float(r.quant_bits) * float(
+                (self._packet_sizes[None, :] * n_tx * erased).sum())
+        else:
+            n_tx = out
         bits = float(r.quant_bits) * float(
             (self._packet_sizes[None, :] * n_tx).sum())
         new = SchemeState(st, state.data,
@@ -416,7 +479,25 @@ class ScaledFederatedScheme(_ScaledScheme):
         return new, RoundReport(
             loss=float(metrics["loss"]), steps=self.local_steps,
             bits=bits, n_tx=float(n_tx.sum()),
-            energy_j=r.energy_j(bits))
+            energy_j=r.energy_j(bits), erased_bits=erased_bits,
+            outage_s=float(W.backoff_s(n_tx, r.arq_backoff_s)))
+
+    def _lower_for_cost(self):
+        def mk(k):
+            s0 = init_train_state(k, self.cfg, None, "sgd")
+            return jax.tree.map(lambda p: jnp.broadcast_to(
+                p, (self.n_users,) + p.shape), s0)
+        state_sds = jax.eval_shape(mk, key_sds())
+        batch_sds = {
+            k: jax.ShapeDtypeStruct((self.n_users,) + v.shape, v.dtype)
+            for k, v in M.input_specs(self.cfg, self.shape).items()}
+        return self._exe.lower(state_sds, batch_sds, key_sds(), 3e-4)
+
+    def flops(self, steps_total: int):
+        """One program IS a whole communication cycle of user-side local
+        SGD (the server only averages): all FLOPs are the users'."""
+        cycles = steps_total / float(max(self.local_steps, 1))
+        return self._step_cost_flops() * cycles, 0.0
 
     def evaluate(self, state, xte, yte) -> float:
         trainable = jax.tree.map(lambda p: p[0], state.train.trainable)

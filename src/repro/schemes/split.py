@@ -81,39 +81,49 @@ def sl_bits_per_step(wcfg, quant_bits: int) -> float:
 sl_cycle = train_cycle
 
 
-def sl_cycle_drawn_tx(key, start: int, n_steps: int, radio: Radio) -> float:
-    """DRAWN transmissions of `n_steps` fused SL steps starting at
-    cumulative step `start` under `key` (the cycle's base key, folded
-    per step as in `train_cycle`).
+def sl_cycle_drawn_diag(key, start: int, n_steps: int, radio: Radio):
+    """(n_tx, n_erased_legs, backoff_units) totals over both legs of
+    `n_steps` fused SL steps starting at cumulative step `start` under
+    `key` (the cycle's base key, folded per step as in `train_cycle`).
 
     The fused path's two crossings per step happen INSIDE the jitted
     train step (`channel_crossing`), which exposes no per-step
-    diagnostics — but the fade/ARQ redraw is a pure function of the
-    key, so the drawn counts are replayed here outside the jit
-    (`wire.drawn_tree_tx`) and billed exactly like the two-party
+    diagnostics — but the fade/ARQ/fault redraw is a pure function of
+    the key, so the drawn counts (and under bounded ARQ, the erased-leg
+    count and backoff units) are replayed here outside the jit
+    (`wire.drawn_tree_diag`) and billed exactly like the two-party
     protocol bills its explicit Deliveries. Key stream replayed: the
     train step folds the microbatch index (0 — the paper model runs
     one microbatch per step) onto the step key before `_link`; the
-    gradient leg folds 1 on top (channel.py `_cc_bwd`). Without
-    ARQ/fading this is identically `2 * n_steps` (one transmission per
-    leg), matching the pre-ARQ accounting bit-for-bit."""
+    gradient leg folds 1 on top (channel.py `_cc_bwd`). On a
+    `wire.fault_free` link this is identically `(2 * n_steps, 0, 0)`
+    (one transmission per leg), matching the pre-ARQ accounting
+    bit-for-bit. An ERASED leg arrived as zeros inside the step (the
+    graceful skip — see channel_crossing); its air time still counted."""
     if n_steps <= 0:
-        return 0.0
-    if radio.perfect or not radio.fading or radio.arq_attempts <= 1:
-        return 2.0 * n_steps
+        return 0.0, 0.0, 0.0
+    if W.fault_free(radio.fading, radio.perfect, radio.arq_attempts,
+                    radio.arq_min_f2, radio.arq_max_tx, radio.ge_p_gb):
+        return 2.0 * n_steps, 0.0, 0.0
+    kw = dict(fading=radio.fading, perfect=False,
+              arq_attempts=radio.arq_attempts,
+              arq_min_f2=radio.arq_min_f2, arq_max_tx=radio.arq_max_tx,
+              ge_p_gb=radio.ge_p_gb, ge_p_bg=radio.ge_p_bg)
 
     def one(s):
         ck = jax.random.fold_in(jax.random.fold_in(key, s), 0)
-        up = W.drawn_tree_tx(ck, 1, fading=True, perfect=False,
-                             arq_attempts=radio.arq_attempts,
-                             arq_min_f2=radio.arq_min_f2)
-        down = W.drawn_tree_tx(jax.random.fold_in(ck, 1), 1, fading=True,
-                               perfect=False,
-                               arq_attempts=radio.arq_attempts,
-                               arq_min_f2=radio.arq_min_f2)
-        return up + down
+        up = W.drawn_tree_diag(ck, 1, **kw)
+        down = W.drawn_tree_diag(jax.random.fold_in(ck, 1), 1, **kw)
+        return up[0] + down[0], up[1] + down[1], up[2] + down[2]
 
-    return float(jax.vmap(one)(jnp.arange(start, start + n_steps)).sum())
+    tx, er, bo = jax.vmap(one)(jnp.arange(start, start + n_steps))
+    return float(tx.sum()), float(er.sum()), float(bo.sum())
+
+
+def sl_cycle_drawn_tx(key, start: int, n_steps: int, radio: Radio) -> float:
+    """DRAWN transmissions of `n_steps` fused SL steps (the n_tx slice
+    of `sl_cycle_drawn_diag` — kept as the narrow legacy entry point)."""
+    return sl_cycle_drawn_diag(key, start, n_steps, radio)[0]
 
 
 @functools.lru_cache(maxsize=8)
@@ -232,14 +242,19 @@ class SplitScheme:
         n = steps - state.steps
         new = SchemeState(st, state.data, steps, state.epoch + 1)
         # fused-path crossings live inside the jitted step; the DRAWN
-        # per-leg ARQ transmission counts are replayed outside the jit
-        # (sl_cycle_drawn_tx) so bits/n_tx/energy bill actual
+        # per-leg ARQ transmission counts (plus erased legs and backoff
+        # units under bounded ARQ) are replayed outside the jit
+        # (sl_cycle_drawn_diag) so bits/n_tx/energy bill actual
         # retransmissions exactly like the two-party protocol
-        n_tx = sl_cycle_drawn_tx(key, state.steps, n, self.radio)
-        bits = n_tx * (self.bits_per_batch / 2.0)
+        n_tx, n_er, bo = sl_cycle_drawn_diag(key, state.steps, n,
+                                             self.radio)
+        leg_bits = self.bits_per_batch / 2.0
+        bits = n_tx * leg_bits
         return new, RoundReport(
             loss=float(m["loss"]), steps=n, bits=bits, n_tx=n_tx,
-            energy_j=self.radio.energy_j(bits))
+            energy_j=self.radio.energy_j(bits),
+            erased_bits=n_er * self.radio.arq_max_tx * leg_bits,
+            outage_s=bo * self.radio.arq_backoff_s)
 
     def _round_two_party(self, state, batch, key, lr):
         sess, steps = state.train, state.steps

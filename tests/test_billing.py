@@ -1,0 +1,134 @@
+"""Billing invariants under the fault model (property tests).
+
+The bounded-ARQ/Gilbert-Elliott wire must keep the accounting algebra
+closed no matter the knobs: bits are non-negative, every packet that
+reaches the receiver used at least one transmission, and the attempted
+air time partitions EXACTLY into the delivered slice and the erased
+slice (`erased_bits + delivered == bits`). Degenerate fault configs
+(arq_max_tx=0, ge_p_gb=0) must reproduce the legacy wire byte-for-byte
+— the golden-parity discipline every PR leans on.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hyp import given, settings, strategies as st
+
+from repro.core import wire as W
+from repro.schemes.radio import Radio
+
+HS = settings(max_examples=8, deadline=None)
+
+
+def _tree(seed, n_leaves=3, n=2):
+    ks = jax.random.split(jax.random.PRNGKey(seed), n_leaves)
+    return {f"w{i}": jax.random.normal(k, (n, 3 + i, 2))
+            for i, k in enumerate(ks)}
+
+
+@HS
+@given(seed=st.integers(0, 2 ** 16), arq_max_tx=st.integers(1, 4),
+       min_f2=st.floats(0.1, 3.0))
+def test_attempted_bits_partition_into_delivered_plus_erased(
+        seed, arq_max_tx, min_f2):
+    """erased_bits + payload-delivered bits == attempted bits, exactly:
+    the replayed per-packet (n_tx, erased) decomposes the bill with no
+    remainder, and every packet burned 1..arq_max_tx transmissions."""
+    radio = Radio(quant_bits=8, snr_db=10.0, arq_max_tx=arq_max_tx,
+                  arq_min_f2=min_f2, ge_p_gb=0.3, ge_p_bg=0.4)
+    tree = _tree(seed)
+    dlv = radio.send_stacked(jax.random.PRNGKey(seed), tree)
+    sizes = np.asarray([l.size // l.shape[0]
+                        for l in jax.tree.leaves(tree)], np.float64)
+    n_tx, erased = W.drawn_stacked_tx(
+        jax.random.PRNGKey(seed), 2, len(sizes), fading=radio.fading,
+        perfect=False, arq_attempts=radio.arq_attempts,
+        arq_min_f2=min_f2, arq_max_tx=arq_max_tx, ge_p_gb=0.3,
+        ge_p_bg=0.4, with_erased=True)
+    assert np.all(n_tx >= 1) and np.all(n_tx <= arq_max_tx)
+    # an erased packet exhausted its whole window
+    assert np.all(n_tx[np.asarray(erased, bool)] == arq_max_tx)
+    attempted = 8.0 * float((sizes * n_tx).sum())
+    erased_b = 8.0 * float((sizes * n_tx * erased).sum())
+    delivered = 8.0 * float((sizes * n_tx * ~np.asarray(erased)).sum())
+    assert dlv.bits == pytest.approx(attempted)
+    assert dlv.erased_bits == pytest.approx(erased_b)
+    assert erased_b + delivered == pytest.approx(dlv.bits)
+    assert 0.0 <= dlv.erased_bits <= dlv.bits
+    # per-user slices reassemble the totals
+    assert sum(dlv.user_bits) == pytest.approx(dlv.bits)
+    assert sum(dlv.user_erased_bits) == pytest.approx(dlv.erased_bits)
+    assert sum(dlv.user_n_tx) == pytest.approx(dlv.n_tx)
+
+
+@HS
+@given(seed=st.integers(0, 2 ** 16), bits=st.integers(4, 8),
+       arq=st.integers(1, 3))
+def test_degenerate_fault_config_is_bitwise_legacy(seed, bits, arq):
+    """arq_max_tx=0 + ge_p_gb=0 + nearest rounding (the defaults) must
+    produce BYTE-identical payloads and diagnostics to a call that
+    never mentions the fault knobs."""
+    tree = _tree(seed)
+    key = jax.random.PRNGKey(seed)
+    base, diag0 = W.transmit_stacked(key, tree, bits=bits, snr_db=8.0,
+                                     arq_attempts=arq, return_diag=True)
+    faulted, diag1 = W.transmit_stacked(
+        key, tree, bits=bits, snr_db=8.0, arq_attempts=arq,
+        return_diag=True, arq_max_tx=0, ge_p_gb=0.0, ge_p_bg=0.5,
+        rounding="nearest")
+    for a, b in zip(jax.tree.leaves(base), jax.tree.leaves(faulted)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(diag0["n_tx"]),
+                                  np.asarray(diag1["n_tx"]))
+    assert not np.any(np.asarray(diag1["erased"]))
+
+
+@HS
+@given(base=st.floats(0.0, 0.1), n1=st.integers(1, 4),
+       n2=st.integers(1, 4))
+def test_backoff_billing_is_exponential_and_additive(base, n1, n2):
+    """Retry j waits base*2^(j-1): a packet with k transmissions waited
+    base*(2^(k-1) - 1); packets add; base=0 bills no outage time."""
+    one = W.backoff_s(np.asarray([n1]), base)
+    exp = base * (2.0 ** (n1 - 1) - 1.0)
+    assert one == pytest.approx(exp)
+    both = W.backoff_s(np.asarray([n1, n2]), base)
+    assert both == pytest.approx(
+        W.backoff_s(np.asarray([n1]), base)
+        + W.backoff_s(np.asarray([n2]), base))
+    assert W.backoff_s(np.asarray([n1, n2]), 0.0) == 0.0
+
+
+@HS
+@given(a=st.integers(1, 6), gb=st.floats(0.01, 0.9),
+       bg=st.floats(0.1, 0.9))
+def test_expected_tx_bounded_by_window(a, gb, bg):
+    """The analytic expectation (incl. the Gilbert-Elliott stationary
+    mix) stays inside [1, window] — the only possible drawn range."""
+    r = Radio(arq_max_tx=a, arq_min_f2=0.5, ge_p_gb=gb, ge_p_bg=bg)
+    assert 1.0 <= r.expected_tx() <= float(a) + 1e-9
+
+
+def test_erased_packets_deliver_zeros():
+    """Graceful degradation: an erased packet's payload leaf arrives as
+    EXACT zeros (the additive identity — aggregation can weight it out
+    without a NaN path)."""
+    radio = Radio(quant_bits=8, snr_db=10.0, arq_max_tx=2,
+                  arq_min_f2=50.0)   # impossible threshold: all erased
+    tree = _tree(0)
+    dlv = radio.send_stacked(jax.random.PRNGKey(0), tree)
+    assert all(dlv.user_erased)
+    assert dlv.erased_bits == pytest.approx(dlv.bits)
+    for leaf in jax.tree.leaves(dlv.payload):
+        np.testing.assert_array_equal(np.asarray(leaf), 0.0)
+
+
+def test_unbounded_arq_never_erases():
+    """arq_max_tx=0 keeps the legacy contract: retries until success
+    (within arq_attempts), never an erasure, erased_bits identically 0."""
+    radio = Radio(quant_bits=8, snr_db=10.0, arq_attempts=4,
+                  arq_min_f2=1.5)
+    dlv = radio.send_stacked(jax.random.PRNGKey(1), _tree(1))
+    assert dlv.erased_bits == 0.0 and dlv.user_erased is None
+    assert dlv.n_tx >= 6.0     # 2 users x 3 packets, >= 1 tx each

@@ -1,0 +1,290 @@
+"""Fault-tolerant fleets: bounded ARQ erasures, Gilbert-Elliott burst
+outages, quorum-gated aggregation, FaultPlan chaos schedules, and the
+opt-in stochastic-rounding wire flag. Billing-algebra properties live
+in tests/test_billing.py; kill-and-resume parity in tests/test_resume.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import WirelessConfig
+from repro.core import quantization as Q
+from repro.core import wire as W
+from repro.schemes import (ClientSpec, Experiment, FaultPlan,
+                           FederatedScheme, Radio, build_scheme)
+
+N_TRAIN, N_TEST = 2048, 512
+
+
+# ----------------------------------------------------------- fault_free
+def test_fault_free_predicate():
+    """The one gate every bitwise-legacy fast path hangs off."""
+    assert W.fault_free()                      # plain fading, 1 attempt
+    assert W.fault_free(perfect=True, arq_max_tx=5, ge_p_gb=0.9)
+    assert not W.fault_free(ge_p_gb=0.1)       # GE chain can erase
+    assert not W.fault_free(arq_max_tx=2)      # fading + bound can erase
+    assert W.fault_free(fading=False, arq_max_tx=2, arq_min_f2=0.5)
+    assert not W.fault_free(fading=False, arq_max_tx=2, arq_min_f2=1.5)
+    assert not W.fault_free(arq_attempts=3)    # retransmissions possible
+    assert W.fault_free(fading=False, arq_attempts=3)
+
+
+def test_gilbert_elliott_draw_is_key_deterministic_and_bursty():
+    """Same key -> same erasure mask; GE off -> mask matches the pure
+    bounded-ARQ draw only in distribution, but a bad GE slot erases the
+    WHOLE packet window (that's the burstiness)."""
+    kw = dict(fading=True, arq_min_f2=0.25, arq_max_tx=3,
+              ge_p_gb=0.4, ge_p_bg=0.3)
+    k = jax.random.PRNGKey(5)
+    a = W.drawn_stacked_tx(k, 4, 6, with_erased=True, **kw)
+    b = W.drawn_stacked_tx(k, 4, 6, with_erased=True, **kw)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
+    # erased packets always burn the full window
+    assert np.all(a[0][a[1]] == 3)
+    # a different key moves the mask (the chain is really drawn)
+    c = W.drawn_stacked_tx(jax.random.PRNGKey(6), 4, 6,
+                           with_erased=True, **kw)
+    assert not np.array_equal(a[1], c[1]) or not np.array_equal(a[0], c[0])
+
+
+# ------------------------------------------------------------ FaultPlan
+def test_fault_plan_is_deterministic_and_default_inactive():
+    plan = FaultPlan(seed=3, p_outage=0.4, p_dropout=0.3)
+    o1, f1 = plan.events(7, 16)
+    o2, f2 = plan.events(7, 16)
+    np.testing.assert_array_equal(o1, o2)
+    np.testing.assert_array_equal(f1, f2)
+    # outage and mid-round drop are exclusive; fracs live in (0, 1)
+    drops = ~np.isnan(f1)
+    assert not np.any(o1 & drops)
+    assert np.all((f1[drops] > 0.0) & (f1[drops] < 1.0))
+    # the stream varies across cycles
+    o3, _ = plan.events(8, 16)
+    assert not np.array_equal(o1, o3)
+    # a default plan is inactive and draws NOTHING
+    idle = FaultPlan()
+    assert not idle.active
+    oo, ff = idle.events(7, 16)
+    assert not oo.any() and np.isnan(ff).all()
+
+
+# --------------------------------------------------- FL quorum + erasure
+def _faulty_fl_wcfg(**kw):
+    base = dict(mode="fl", quant_bits=8, n_users=3, local_steps=2)
+    base.update(kw)
+    return WirelessConfig(**base)
+
+
+def test_fl_abandoned_round_reanchors_on_broadcast():
+    """Every upload erased (bounded ARQ + impossible outage threshold):
+    the sync is below any quorum, the round is abandoned, and every
+    user's post-round model equals the cycle's broadcast (= the initial
+    model) — while the wasted air time is still billed."""
+    wcfg = _faulty_fl_wcfg(arq_max_tx=2, arq_min_f2=50.0)
+    scheme = FederatedScheme(wcfg, quorum=0.5)
+    exp = Experiment(scheme, cycles=1, seed=0,
+                     n_train=N_TRAIN, n_test=N_TEST)
+    exp.run()
+    (rep,) = exp.reports
+    assert rep.metrics == {"n_erased_users": 3, "quorum_met": False}
+    assert rep.bits > 0 and rep.erased_bits == rep.bits
+    # abandoned sync: model re-anchored on the pre-round broadcast
+    from repro.runtime.train_step import init_train_state
+    from repro.schemes import CFG
+    init0 = init_train_state(jax.random.PRNGKey(0), CFG, None,
+                             "sgd").trainable["model"]
+    post = exp.final_state.train.trainable["model"]
+    for a, b in zip(jax.tree.leaves(init0), jax.tree.leaves(post)):
+        np.testing.assert_array_equal(np.asarray(a),
+                                      np.asarray(b[0]))
+
+
+def test_fl_graceful_degradation_commits_on_survivors():
+    """A lossy-but-not-dead link: the round commits whenever the
+    delivered fraction meets quorum; erased uploads carry zero weight;
+    fault metrics are present exactly because the fault machinery is
+    on."""
+    wcfg = _faulty_fl_wcfg(arq_max_tx=2, arq_min_f2=0.4, ge_p_gb=0.2,
+                           ge_p_bg=0.6, arq_backoff_s=0.01)
+    scheme = FederatedScheme(wcfg, quorum=0.0)
+    exp = Experiment(scheme, cycles=2, seed=1,
+                     n_train=N_TRAIN, n_test=N_TEST)
+    res = exp.run()
+    assert all(np.isfinite(l) for l in res.loss)
+    for rep in exp.reports:
+        assert {"n_erased_users", "quorum_met"} <= set(rep.metrics)
+        assert 0 <= rep.metrics["n_erased_users"] <= 3
+        assert 0.0 <= rep.erased_bits <= rep.bits
+        assert rep.outage_s >= 0.0
+        # quorum 0: any single delivered update commits
+        assert rep.metrics["quorum_met"] == \
+            (rep.metrics["n_erased_users"] < 3)
+
+
+def test_fl_quorum_one_on_clean_link_is_bitwise_default():
+    """quorum=1.0 never triggers on a fault-free link: trajectory and
+    billing are bitwise the default scheme's (no fault metric keys
+    either — the legacy report shape is untouched)."""
+    wcfg = _faulty_fl_wcfg()
+    a = Experiment(FederatedScheme(wcfg), cycles=2, seed=0,
+                   n_train=N_TRAIN, n_test=N_TEST)
+    b = Experiment(FederatedScheme(wcfg, quorum=1.0), cycles=2, seed=0,
+                   n_train=N_TRAIN, n_test=N_TEST)
+    ra, rb = a.run(), b.run()
+    np.testing.assert_array_equal(ra.accuracy, rb.accuracy)
+    np.testing.assert_array_equal(ra.loss, rb.loss)
+    assert ra.total_bits == rb.total_bits
+    for rep in b.reports:
+        assert rep.metrics == {} and rep.erased_bits == 0.0
+        assert rep.outage_s == 0.0
+
+
+# ------------------------------------------------- population FaultPlan
+def _fleet(base, **kw):
+    clients = [ClientSpec.fl(base, name="f0"),
+               ClientSpec.fl(base, snr_db=10.0, name="f1"),
+               ClientSpec.sl(base, name="s0")]
+    return build_scheme(base, clients=clients, **kw)
+
+
+def test_population_outage_bills_whole_round_as_erased():
+    """p_outage=1: every client is unreachable every cycle. No compute,
+    full expected round payload billed as attempted-but-erased bits,
+    zero energy (the device is dead; the base station kept the slot),
+    quorum never met, model frozen."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    scheme = _fleet(base, fault_plan=FaultPlan(seed=0, p_outage=1.0),
+                    quorum=0.5)
+    exp = Experiment(scheme, cycles=2, seed=0,
+                     n_train=N_TRAIN, n_test=N_TEST)
+    res = exp.run()
+    assert res.accuracy[0] == res.accuracy[1]    # nothing ever trains
+    for rep in exp.reports:
+        assert rep.metrics["n_erased"] == 3
+        assert rep.metrics["quorum_met"] is False
+        assert rep.steps == 0
+        for i, c in enumerate(rep.clients):
+            assert c.status == "erased" and c.steps == 0
+            assert c.weight == 0.0 and c.energy_j == 0.0
+            assert c.bits == scheme._round_bits_estimate(i)
+            assert c.erased_bits == c.bits > 0.0
+        assert rep.erased_bits == pytest.approx(
+            sum(c.erased_bits for c in rep.clients))
+
+
+def test_population_midround_dropout_bills_partial_upload():
+    """p_dropout=1: every client dies a drawn fraction of the way
+    through its upload — partial bits billed (all erased), energy
+    billed (those bits were on the air), zero weight, zero steps."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    scheme = _fleet(base, fault_plan=FaultPlan(seed=0, p_dropout=1.0))
+    exp = Experiment(scheme, cycles=1, seed=0,
+                     n_train=N_TRAIN, n_test=N_TEST)
+    exp.run()
+    (rep,) = exp.reports
+    assert rep.metrics["n_dropped_midround"] == 3
+    _, frac = scheme.fault_plan.events(0, 3)
+    for i, c in enumerate(rep.clients):
+        assert c.status == "dropped_midround"
+        est = scheme._round_bits_estimate(i)
+        assert c.bits == pytest.approx(frac[i] * est)
+        assert 0.0 < c.bits < est
+        assert c.erased_bits == c.bits
+        assert c.energy_j > 0.0            # partial upload WAS on air
+        assert c.weight == 0.0 and c.steps == 0
+
+
+def test_population_inactive_plan_is_bitwise_neutral():
+    """Threading a default FaultPlan + quorum=0 through a fleet leaves
+    trajectory, billing, and the report shape bitwise identical to no
+    plan at all (no fault metric keys appear)."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    plain = Experiment(_fleet(base), cycles=1, seed=0,
+                       n_train=N_TRAIN, n_test=N_TEST)
+    idle = Experiment(_fleet(base, fault_plan=FaultPlan(), quorum=0.0),
+                      cycles=1, seed=0, n_train=N_TRAIN, n_test=N_TEST)
+    rp, ri = plain.run(), idle.run()
+    np.testing.assert_array_equal(rp.accuracy, ri.accuracy)
+    assert rp.total_bits == ri.total_bits
+    for a, b in zip(plain.reports, idle.reports):
+        assert [c.bits for c in a.clients] == [c.bits for c in b.clients]
+        assert set(a.metrics) == set(b.metrics)
+        assert "n_erased" not in b.metrics and "quorum_met" not in b.metrics
+
+
+def test_population_quorum_validation():
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    with pytest.raises(ValueError, match="quorum"):
+        _fleet(base, quorum=1.5)
+    with pytest.raises(ValueError, match="quorum"):
+        _fleet(base, quorum=-0.1)
+
+
+# ------------------------------------------------- SL graceful degradation
+def test_fused_sl_survives_erasures_with_finite_loss():
+    """Bounded ARQ on the SL activation legs: erased crossings arrive
+    as zeros in-graph, training continues, erased legs are billed at
+    the full exhausted window and backoff lands in outage_s."""
+    wcfg = WirelessConfig(mode="sl", quant_bits=8, arq_max_tx=2,
+                          arq_min_f2=1.0, ge_p_gb=0.2, ge_p_bg=0.5,
+                          arq_backoff_s=0.02)
+    exp = Experiment(build_scheme(wcfg), cycles=1, seed=0,
+                     n_train=N_TRAIN, n_test=N_TEST)
+    res = exp.run()
+    (rep,) = exp.reports
+    assert np.isfinite(rep.loss) and 0.0 < res.accuracy[0] < 1.0
+    assert rep.erased_bits > 0.0
+    assert rep.erased_bits <= rep.bits
+    assert rep.outage_s > 0.0
+
+
+# ---------------------------------------------------- stochastic rounding
+def test_stochastic_rounding_unbiased_and_off_by_default():
+    """`u=None` (the default) rounds to nearest — bitwise the legacy
+    quantizer; with a uniform draw the codeword is unbiased:
+    E_u[round(x/s)] == x/s for any x."""
+    # one 1.0 element pins the scale at 1/qmax, so the 0.3 block sits
+    # BETWEEN two codeword levels (0.3 * 127 = 38.1)
+    x = jnp.concatenate([jnp.ones((1,)), jnp.full((4095,), 0.3)])
+    q0, s0 = Q.quantize(x, 8)
+    q1, s1 = Q.quantize(x, 8, u=None)
+    np.testing.assert_array_equal(np.asarray(q0), np.asarray(q1))
+    assert float(s0) == float(s1)
+    u = jax.random.uniform(jax.random.PRNGKey(0), x.shape)
+    qs, ss = Q.quantize(x, 8, u=u)
+    # nearest is deterministic; stochastic straddles the two levels
+    lv = np.unique(np.asarray(qs)[1:])
+    assert len(lv) == 2 and lv[1] == lv[0] + 1
+    mean = float(np.asarray(qs)[1:].mean())
+    assert mean == pytest.approx(float(x[1] / ss), abs=0.02)
+
+
+def test_stochastic_rounding_is_packed_only():
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 4))}
+    with pytest.raises(ValueError, match="packed"):
+        W.transmit_tree(jax.random.PRNGKey(1), tree, 8, 10.0,
+                        impl="per_leaf", rounding="stochastic")
+    with pytest.raises(ValueError, match="rounding"):
+        W.transmit_tree(jax.random.PRNGKey(1), tree, 8, 10.0,
+                        rounding="banker")
+    # Radio: kernel impl + stochastic rounding must refuse, not silently
+    # round to nearest
+    r = Radio(use_kernel=True, rounding="stochastic")
+    with pytest.raises(ValueError, match="packed"):
+        r.send_tree(jax.random.PRNGKey(2), tree)
+
+
+def test_stochastic_rounding_changes_payload_not_billing():
+    """Opting in changes the received codewords (same key) but not one
+    bit of the accounting — rounding is orthogonal to ARQ/fades."""
+    tree = {"w": jax.random.normal(jax.random.PRNGKey(3), (64,))}
+    key = jax.random.PRNGKey(4)
+    near = Radio(quant_bits=4, snr_db=30.0).send_tree(key, tree)
+    stoc = Radio(quant_bits=4, snr_db=30.0,
+                 rounding="stochastic").send_tree(key, tree)
+    assert not np.array_equal(np.asarray(near.payload["w"]),
+                              np.asarray(stoc.payload["w"]))
+    assert near.bits == stoc.bits and near.n_tx == stoc.n_tx
+    assert near.energy_j == stoc.energy_j

@@ -1,0 +1,126 @@
+"""Crash-consistent resume: kill an Experiment at cycle k, resume from
+its latest snapshot, and the continued run must reproduce the
+uninterrupted run's trajectory AND billing bit-for-bit — accuracy
+list, total_bits, and the complete per-round/per-client report trees.
+Snapshots are atomic npz files (checkpoint/ckpt.py `save_experiment`);
+the data-rng state rides the snapshot so cycle k+1 consumes exactly
+the stream it would have seen.
+"""
+import dataclasses
+import glob
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt as CKPT
+from repro.configs.base import WirelessConfig
+from repro.schemes import (ClientSpec, Experiment, FaultPlan,
+                           build_scheme)
+
+N_TRAIN, N_TEST = 2048, 512
+CYCLES, KILL_AT = 4, 2
+
+
+def _fl_faulty():
+    return build_scheme(WirelessConfig(
+        mode="fl", quant_bits=8, n_users=3, local_steps=2,
+        arq_max_tx=2, arq_min_f2=0.4, ge_p_gb=0.2, ge_p_bg=0.6,
+        arq_backoff_s=0.01))
+
+
+def _fleet_faulty():
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.fl(base, name="f0"),
+               ClientSpec.fl(base, snr_db=10.0, name="f1"),
+               ClientSpec.sl(base, name="s0")]
+    return build_scheme(base, clients=clients, quorum=0.34,
+                        fault_plan=FaultPlan(seed=0, p_outage=0.3,
+                                             p_dropout=0.3))
+
+
+def _sl_faulty():
+    return build_scheme(WirelessConfig(
+        mode="sl", quant_bits=8, arq_max_tx=2, arq_min_f2=0.7))
+
+
+def _cl():
+    return build_scheme(WirelessConfig(mode="cl", quant_bits=8,
+                                       snr_db=15.0))
+
+
+MAKERS = {"fl-faulty": _fl_faulty, "fleet-faulty": _fleet_faulty,
+          "sl-faulty": _sl_faulty, "cl": _cl}
+
+
+def _run(scheme, tmp_path=None, cycles=CYCLES, resume=False, every=0):
+    exp = Experiment(
+        scheme, cycles=cycles, seed=0, n_train=N_TRAIN, n_test=N_TEST,
+        checkpoint_dir=str(tmp_path) if tmp_path is not None else None,
+        checkpoint_every=every,
+        resume_from=str(tmp_path) if resume else None)
+    return exp, exp.run()
+
+
+@pytest.mark.parametrize("kind", sorted(MAKERS))
+def test_kill_and_resume_is_bit_for_bit(kind, tmp_path):
+    """Acceptance: straight run == (run killed after k cycles, resumed
+    to the end) on every scheme family, including faulty links, a
+    FaultPlan+quorum fleet, and CL (whose init-time corpus upload must
+    not be double-counted on resume)."""
+    make = MAKERS[kind]
+    e1, r1 = _run(make())                              # uninterrupted
+    e2, _ = _run(make(), tmp_path, cycles=KILL_AT, every=1)   # "crashes"
+    assert CKPT.latest_experiment_cycle(str(tmp_path)) == KILL_AT
+    e3, r3 = _run(make(), tmp_path, resume=True)       # resumed to end
+
+    np.testing.assert_array_equal(r1.accuracy, r3.accuracy)
+    np.testing.assert_array_equal(r1.loss, r3.loss)
+    assert r1.total_bits == r3.total_bits
+    assert [dataclasses.asdict(r) for r in e1.reports] \
+        == [dataclasses.asdict(r) for r in e3.reports]
+    # the resumed run really skipped the first k cycles' snapshots
+    assert len(e3.reports) == CYCLES
+    # atomic writes: no tmp files survive
+    assert not glob.glob(os.path.join(str(tmp_path), "*.tmp*"))
+
+
+def test_latest_experiment_cycle_picks_max(tmp_path):
+    assert CKPT.latest_experiment_cycle(str(tmp_path)) is None
+    for c in (1, 3, 2):
+        CKPT.save_experiment(str(tmp_path), c, {"w": np.zeros(2)},
+                             {"cycle": c})
+    assert CKPT.latest_experiment_cycle(str(tmp_path)) == 3
+    train, meta = CKPT.load_experiment(str(tmp_path),
+                                       {"w": np.ones(2)})
+    assert meta["cycle"] == 3
+    np.testing.assert_array_equal(np.asarray(train["w"]), 0.0)
+
+
+def test_snapshot_roundtrips_scalars_and_arrays(tmp_path):
+    """Python-scalar template leaves come back as the SAME python type
+    (a resumed step counter must not silently become np.int64), arrays
+    come back exactly, and shape mismatches fail loudly."""
+    train = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+             "step": 7, "lr": 0.125}
+    path = CKPT.save_experiment(str(tmp_path), 4, train,
+                                {"cycle": 4, "note": "x"})
+    out, meta = CKPT.load_experiment(path, train)
+    assert type(out["step"]) is int and out["step"] == 7
+    assert type(out["lr"]) is float and out["lr"] == 0.125
+    np.testing.assert_array_equal(np.asarray(out["w"]), train["w"])
+    assert meta == {"cycle": 4, "note": "x"}
+    with pytest.raises(Exception):
+        CKPT.load_experiment(path, {"w": np.zeros((3, 3)),
+                                    "step": 0, "lr": 0.0})
+
+
+def test_checkpoint_validations(tmp_path):
+    with pytest.raises(ValueError, match="checkpoint_dir"):
+        Experiment(_cl(), cycles=1, checkpoint_every=1).run()
+    # the two-party SL protocol holds live sessions — not snapshottable
+    sl2 = build_scheme(WirelessConfig(mode="sl", quant_bits=8),
+                       protocol="two_party")
+    with pytest.raises(ValueError, match="two-party"):
+        Experiment(sl2, cycles=1, checkpoint_dir=str(tmp_path),
+                   checkpoint_every=1).run()
