@@ -70,6 +70,11 @@ def _bench_robustness(full):
     return robustness.main(full)
 
 
+def _bench_serve(full):
+    from benchmarks import serve
+    return serve.main(full)
+
+
 BENCHES = {
     "fig3a": _bench_fig3a,
     "fig3b": _bench_fig3b,
@@ -82,6 +87,7 @@ BENCHES = {
     "population": _bench_population,
     "scaled": _bench_scaled,
     "robustness": _bench_robustness,
+    "serve": _bench_serve,
 }
 
 

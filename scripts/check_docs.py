@@ -1,6 +1,7 @@
 """Docs-consistency gate (scripts/ci.sh): every public symbol of the
-`repro.schemes` API must appear in docs/ARCHITECTURE.md's API table,
-so the table cannot silently rot as the API grows.
+`repro.schemes` and `repro.serve` APIs must appear in
+docs/ARCHITECTURE.md's API tables, so the tables cannot silently rot
+as the APIs grow.
 
     PYTHONPATH=src python scripts/check_docs.py
 """
@@ -34,29 +35,42 @@ def api_table_symbols(text: str) -> set:
     return syms
 
 
+#: every public API the ARCHITECTURE.md tables must keep covering
+MODULES = ("repro.schemes", "repro.serve")
+
+
 def main() -> int:
     sys.path.insert(0, os.path.join(ROOT, "src"))
-    import repro.schemes as schemes
+    import importlib
 
     with open(DOC) as f:
         documented = api_table_symbols(f.read())
-    public = set(schemes.__all__)
-    missing = sorted(public - documented)
-    if missing:
-        print(f"docs/ARCHITECTURE.md API table is missing "
-              f"{len(missing)} public repro.schemes symbol(s):")
-        for name in missing:
-            print(f"  - {name}")
-        print("add them to the 'Public API' table (see docs/"
-              "ARCHITECTURE.md) or unexport them from schemes/__init__.")
+    public = set()
+    failed = False
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        mod_public = set(mod.__all__)
+        public |= mod_public
+        missing = sorted(mod_public - documented)
+        if missing:
+            failed = True
+            print(f"docs/ARCHITECTURE.md API table is missing "
+                  f"{len(missing)} public {modname} symbol(s):")
+            for name in missing:
+                print(f"  - {name}")
+            print(f"add them to the 'Public API' tables (see docs/"
+                  f"ARCHITECTURE.md) or unexport them from "
+                  f"{modname.split('.')[-1]}/__init__.")
+    if failed:
         return 1
     stale = sorted(documented - public)
     if stale:
         # documented-but-gone symbols are a warning, not a failure:
         # the table may legitimately describe non-exported helpers
-        print(f"note: documented but not in repro.schemes.__all__: "
+        print(f"note: documented but not in any __all__: "
               f"{', '.join(stale)}")
-    print(f"docs OK: all {len(public)} repro.schemes symbols documented")
+    print(f"docs OK: all {len(public)} symbols of "
+          f"{' + '.join(MODULES)} documented")
     return 0
 
 

@@ -18,7 +18,11 @@
 # billed zero. The robustness chaos smoke (benchmarks/robustness.py)
 # sweeps FaultPlan outages x quorum on a bounded-ARQ fleet, kills each
 # case at the midpoint, resumes from the crash-consistent snapshot,
-# and fails unless every resumed run is bit-for-bit.
+# and fails unless every resumed run is bit-for-bit. The serving smoke
+# (benchmarks/serve.py) runs continuous vs static batching on a
+# bounded-ARQ link and fails unless in-flight admission wins at every
+# width on a schedule-invariant, exactly-split (delivered + erased)
+# radio bill.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -98,6 +102,34 @@ ok = ok and all(b > 0 for b in res["cases"]["fl"]["round_bits"])
 ok = ok and all(b > 0 for b in res["cases"]["sl"]["round_bits"])
 ok = ok and res["cases"]["cl"]["init_bits"] > 0
 ok = ok and all(b == 0 for b in res["cases"]["cl"]["round_bits"])
+sys.exit(0 if ok else 1)
+EOF
+
+echo "=== serving smoke (continuous vs static batching, BENCH_serve.json) ==="
+python -m benchmarks.run --only serve
+python - <<'EOF'
+import json, sys
+res = json.load(open("benchmarks/results/BENCH_serve.json"))
+ok = True
+for case, rec in res["cases"].items():
+    c, s = rec["continuous"], rec["static"]
+    print(f"serve {case}: continuous {c['cycles']} cycles "
+          f"({c['tokens_per_cycle']:.2f} tok/cyc, p99 "
+          f"{c['p99_latency_cycles']:.0f}) vs static {s['cycles']} "
+          f"({s['tokens_per_cycle']:.2f} tok/cyc, p99 "
+          f"{s['p99_latency_cycles']:.0f}) -> "
+          f"{rec['speedup_cycles']:.2f}x | {c['bits']:.0f} bits "
+          f"({c['erased_bits']:.0f} erased)")
+    # the tentpole claim: in-flight admission beats the barrier at
+    # mixed lengths, on the SAME schedule-invariant radio bill
+    ok = ok and rec["speedup_cycles"] > 1.0
+    ok = ok and c["bits"] == s["bits"]
+    for d in (c, s):
+        ok = ok and abs(d["delivered_bits"] + d["erased_bits"]
+                        - d["bits"]) < 1e-6
+# the bounded-ARQ link actually erased something somewhere
+ok = ok and any(rec["continuous"]["erased_bits"] > 0
+                for rec in res["cases"].values())
 sys.exit(0 if ok else 1)
 EOF
 

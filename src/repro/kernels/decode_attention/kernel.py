@@ -36,7 +36,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref,
     q = q_ref[0, 0]                       # [G, hd]
     k = k_ref[0, 0]                       # [bs, hd]
     v = v_ref[0, 0]                       # [bs, hd]
-    length = len_ref[0]
+    length = len_ref[pl.program_id(0)]    # this batch row's valid prefix
 
     s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [G, bs]
     pos = j * block_s + jax.lax.broadcasted_iota(jnp.int32, (1, block_s), 1)
@@ -64,7 +64,9 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      length: jax.Array, window: int = 0,
                      scale: float | None = None,
                      interpret: bool = True) -> jax.Array:
-    """q [B, Hkv, G, hd]; k/v [B, Hkv, S, hd]; length scalar int32.
+    """q [B, Hkv, G, hd]; k/v [B, Hkv, S, hd]; length scalar int32 OR a
+    per-batch-row [B] vector (continuous-batching decode: every slot
+    masks its own prefix; a scalar is broadcast to all rows).
     `scale` defaults to 1/sqrt(hd) — pass explicitly when hd is padded.
     Returns [B, Hkv, G, hd] fp32."""
     B, Hkv, G, hd = q.shape
@@ -92,4 +94,5 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((G, hd), jnp.float32),
         ],
         interpret=interpret,
-    )(length.reshape(1).astype(jnp.int32), q, k, v)
+    )(jnp.broadcast_to(jnp.asarray(length, jnp.int32).reshape(-1), (B,)),
+      q, k, v)

@@ -15,7 +15,8 @@ from repro.kernels.decode_attention.kernel import decode_attention
 def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                length: jax.Array, window: int = 0,
                interpret: bool = True) -> jax.Array:
-    """q [B, H, hd]; caches [B, Hkv, S, hd]. Returns [B, H, hd] fp32."""
+    """q [B, H, hd]; caches [B, Hkv, S, hd]; `length` a scalar or a
+    per-row [B] vector of valid-prefix counts. Returns [B, H, hd] fp32."""
     B, H, hd = q.shape
     Hkv = k_cache.shape[1]
     G = H // Hkv

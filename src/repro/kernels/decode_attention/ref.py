@@ -1,5 +1,6 @@
 """Pure-jnp oracle: models/layers.decode_attention_jnp reshaped to the
-kernel's [B, Hkv, G, hd] layout."""
+kernel's [B, Hkv, G, hd] layout. `length` may be a scalar or a per-row
+[B] vector (the serving engine's per-slot prefix lengths)."""
 from __future__ import annotations
 
 import jax.numpy as jnp

@@ -1,12 +1,22 @@
-"""Batched serving driver: prefill a prompt batch, then decode N tokens
-against the KV/state cache.
+"""Serving driver: many users over the semantic link, billed per user.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen1.5-0.5b \
-        --reduced --batch 4 --prompt-len 32 --new-tokens 16
+        --reduced --batch 4 --prompt-len 32 --new-tokens 16 \
+        --engine continuous --snr-db 10
 
-The same decode_step the multi-pod dry-run lowers for decode_32k /
-long_500k runs here at CPU scale; on TPU the driver shards the cache over
-the production mesh (batch over (pod, data), kv-seq over model).
+Thin front-end over `repro.serve.ServeEngine`: requests come from a
+`RequestTrace` (`--trace file.json` to replay, `--requests N` for a
+synthetic arrival process, else a uniform all-at-once trace matching
+the legacy demo), every prompt uplink and generated-token downlink
+crosses the per-user `Radio` (`Radio.send_tokens`), and the run prints
+the exact Delivery bill next to the throughput numbers. `--engine
+continuous` (default) admits a queued request the moment a slot frees;
+`--engine static` re-admits only when the whole batch drains.
+
+Families without a per-slot decode path (ssm / hybrid / audio) fall
+back to the legacy single-batch loop — still billed: the prompt batch
+rides ONE uplink and the generated tokens ONE downlink through the
+same Radio, closing the old drive-the-model-for-free gap.
 """
 from __future__ import annotations
 
@@ -23,20 +33,65 @@ from repro.launch.mesh import make_test_mesh
 from repro.models import api as M
 from repro.nn import init_params, use_mesh
 from repro.runtime.serve_step import make_decode_step
+from repro.schemes.radio import Radio
+from repro.serve import (RequestTrace, ServeEngine, SLOT_FAMILIES,
+                         make_trace, uniform_trace)
 
 
 def parse_args(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="continuous",
+                    choices=["continuous", "static"])
+    ap.add_argument("--batch", type=int, default=4,
+                    help="decode slots (engine) / batch rows (legacy)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=0,
+                    help=">0: synthetic arrival trace of this many "
+                         "requests instead of the uniform demo trace")
+    ap.add_argument("--trace", default=None,
+                    help="replay a RequestTrace JSON file")
+    ap.add_argument("--snr-db", type=float, default=None,
+                    help="base link SNR; omit for an ideal noiseless "
+                         "link (still billed)")
+    ap.add_argument("--arq-max-tx", type=int, default=0,
+                    help=">0: bounded ARQ — exhausted uplinks are "
+                         "erased and the request abandoned")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--mesh", default="none", choices=["none", "test"])
     ap.add_argument("--seed", type=int, default=0)
     return ap.parse_args(argv)
+
+
+def make_radio(args) -> Radio:
+    if args.snr_db is None:
+        return Radio(perfect=True, fading=False,
+                     arq_max_tx=args.arq_max_tx)
+    return Radio(snr_db=args.snr_db, fading=True,
+                 arq_max_tx=args.arq_max_tx,
+                 arq_attempts=2 if args.arq_max_tx else 1)
+
+
+def resolve_trace(args, snr_db: float) -> RequestTrace:
+    if args.trace:
+        return RequestTrace.load(args.trace)
+    if args.requests > 0:
+        return make_trace(args.seed, args.requests)
+    return uniform_trace(args.seed, args.batch, args.prompt_len,
+                         args.new_tokens, snr_db)
+
+
+def gen_matrix(report, n_new: int) -> np.ndarray:
+    """Per-request generated ids as a padded [n_requests, n_new] matrix
+    (abandoned requests are all-pad rows)."""
+    gen = np.zeros((len(report.results), n_new), np.int32)
+    for i, r in enumerate(report.results):
+        row = np.asarray(r.tokens[:n_new], np.int32)
+        gen[i, :len(row)] = row
+    return gen
 
 
 def sample(key, logits, temperature: float, greedy: bool):
@@ -45,19 +100,18 @@ def sample(key, logits, temperature: float, greedy: bool):
     return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
 
 
-def main(argv=None) -> dict:
-    args = parse_args(argv)
-    cfg = get_arch(args.arch)
-    if args.reduced:
-        cfg = cfg.reduced()
+def legacy_main(args, cfg, mesh) -> dict:
+    """Single static batch, token-by-token — the only decode path for
+    scalar-index families. Prompt uplink + token downlink are billed
+    through the same Radio the engine uses."""
     model = M.get_model(cfg)
     if model.decode_step is None:
         raise SystemExit(f"{args.arch} has no decode step (encoder-only)")
-
-    mesh = make_test_mesh() if args.mesh == "test" else None
     B, P, N = args.batch, args.prompt_len, args.new_tokens
     total = P + N
     key = jax.random.PRNGKey(args.seed)
+    radio = make_radio(args)
+    bits = energy = erased = 0.0
 
     with use_mesh(mesh):
         params = init_params(key, M.param_specs(cfg))
@@ -72,7 +126,12 @@ def main(argv=None) -> dict:
 
         prompt = jax.random.randint(jax.random.fold_in(key, 1), (B, P), 1,
                                     cfg.vocab_size, jnp.int32)
-        # prefill token-by-token through the decode path (cache-consistent)
+        # uplink: the users' prompts cross the radio BEFORE the server
+        # sees them — the server decodes what was received
+        d = radio.send_tokens(jax.random.fold_in(key, 4), prompt,
+                              cfg.vocab_size)
+        bits += d.bits; energy += d.energy_j; erased += d.erased_bits
+        prompt = jnp.asarray(d.payload)
         t0 = time.time()
         logits = None
         for i in range(P):
@@ -81,8 +140,8 @@ def main(argv=None) -> dict:
         t_prefill = time.time() - t0
 
         out = []
-        tok = sample(jax.random.fold_in(key, 2), logits[:, 0] if logits is
-                     not None else None, args.temperature, args.greedy)[:, None]
+        tok = sample(jax.random.fold_in(key, 2), logits[:, 0],
+                     args.temperature, args.greedy)[:, None]
         t0 = time.time()
         for j in range(N):
             out.append(np.asarray(tok))
@@ -92,13 +151,54 @@ def main(argv=None) -> dict:
         t_decode = time.time() - t0
 
     gen = np.concatenate(out, axis=1)
+    # downlink: generated ids return to the users over the same radio
+    d = radio.send_tokens(jax.random.fold_in(key, 5),
+                          jnp.asarray(gen), cfg.vocab_size)
+    bits += d.bits; energy += d.energy_j; erased += d.erased_bits
     print(f"prefill {P} toks: {t_prefill:.2f}s | decode {N} toks: "
           f"{t_decode:.2f}s ({t_decode / N * 1e3:.1f} ms/tok)")
-    print("generated ids (first row):", gen[0].tolist())
+    print(f"radio: {bits:.0f} bits ({erased:.0f} erased), "
+          f"{energy * 1e3:.3f} mJ")
     assert gen.shape == (B, N)
     assert np.isfinite(np.asarray(logits, np.float32)).all()
     return {"generated": gen, "t_prefill_s": t_prefill,
-            "t_decode_s": t_decode}
+            "t_decode_s": t_decode, "bits": bits, "erased_bits": erased,
+            "energy_j": energy}
+
+
+def main(argv=None) -> dict:
+    args = parse_args(argv)
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = make_test_mesh() if args.mesh == "test" else None
+    if cfg.family not in SLOT_FAMILIES:
+        print(f"{cfg.family}: scalar-index decode only — legacy loop")
+        return legacy_main(args, cfg, mesh)
+
+    radio = make_radio(args)
+    trace = resolve_trace(args, args.snr_db if args.snr_db is not None
+                          else 20.0)
+    with use_mesh(mesh):
+        params = init_params(jax.random.PRNGKey(args.seed),
+                             M.param_specs(cfg))
+        engine = ServeEngine(cfg, params, n_slots=args.batch, radio=radio,
+                             temperature=args.temperature,
+                             greedy=args.greedy)
+        report = engine.serve(trace, args.engine)
+
+    d = report.to_dict()
+    print(f"{args.engine}: {trace.n_requests} requests on "
+          f"{args.batch} slots -> {d['cycles']} cycles, "
+          f"{d['generated_tokens']} tokens "
+          f"({d['tokens_per_s']:.1f} tok/s) | statuses {d['statuses']}")
+    print(f"latency p50 {d['p50_latency_cycles']:.0f} / "
+          f"p99 {d['p99_latency_cycles']:.0f} cycles | radio "
+          f"{d['bits']:.0f} bits ({d['erased_bits']:.0f} erased), "
+          f"{d['energy_j'] * 1e3:.3f} mJ")
+    assert abs(d["delivered_bits"] + d["erased_bits"] - d["bits"]) < 1e-6
+    return {"generated": gen_matrix(report, args.new_tokens),
+            "report": d, "results": report.results}
 
 
 if __name__ == "__main__":

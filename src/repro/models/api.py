@@ -44,7 +44,9 @@ _FAMILIES = {
     "audio": ModelApi(encdec.model_specs, encdec.forward,
                       encdec.cache_shapes, encdec.init_cache,
                       encdec.decode_step),
-    "tiny": ModelApi(lstm_tiny.model_specs, lstm_tiny.forward),
+    "tiny": ModelApi(lstm_tiny.model_specs, lstm_tiny.forward,
+                     lstm_tiny.cache_shapes, lstm_tiny.init_cache,
+                     lstm_tiny.decode_step),
 }
 
 

@@ -199,9 +199,11 @@ def chunked_attention(q, k, v, cfg, causal: bool = True,
 def decode_attention_jnp(q, k_cache, v_cache, length, window: int = 0,
                          offset=0):
     """One-token GQA attention against a cache. q [B,H,hd],
-    caches [B,Hkv,S,hd], `length` = scalar count of valid positions
-    (global), `offset` = global position of cache column 0 (used when the
-    caller pre-slices a window out of a longer cache — §Perf-3)."""
+    caches [B,Hkv,S,hd], `length` = count of valid positions — a global
+    scalar, or a per-row [B] vector (continuous-batching serving, where
+    every slot sits at its own depth). `offset` = global position of
+    cache column 0 (used when the caller pre-slices a window out of a
+    longer cache — §Perf-3)."""
     B, Hkv, S, hd = k_cache.shape
     H = q.shape[1]
     G = H // Hkv
@@ -209,10 +211,11 @@ def decode_attention_jnp(q, k_cache, v_cache, length, window: int = 0,
     logits = jnp.einsum("bhgd,bhsd->bhgs", qf, k_cache.astype(qf.dtype))
     logits = logits.astype(jnp.float32) / math.sqrt(hd)
     pos = offset + jnp.arange(S)
-    valid = pos < length
+    lth = jnp.asarray(length).reshape(-1, 1)          # [1,1] or [B,1]
+    valid = pos[None, :] < lth
     if window:
-        valid &= pos >= length - window
-    logits = jnp.where(valid[None, None, None, :], logits, NEG_INF)
+        valid &= pos[None, :] >= lth - window
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgs,bhsd->bhgd", w.astype(v_cache.dtype), v_cache)
     return out.reshape(B, H, hd)
@@ -282,11 +285,58 @@ def decode_attention_dist(q, k_cache, v_cache, length, window, mesh,
     )(q, k_cache, v_cache)
 
 
+def decode_attention_slots(q, k_cache, v_cache, lengths, window: int = 0):
+    """Per-slot flash-decode: q [B,H,hd], caches [B,Hkv,S,hd],
+    `lengths` [B] — each row attends its OWN prefix (the serving
+    engine's hot path, where every slot is at a different depth).
+    Routed through the Pallas decode_attention kernel on TPU (or when
+    REPRO_SERVE_KERNEL=1 forces interpret mode); the pure-jnp masked
+    softmax is the bit-equivalent fallback everywhere else."""
+    use_kernel = _os.environ.get("REPRO_SERVE_KERNEL", "auto")
+    on_tpu = jax.default_backend() == "tpu"
+    if use_kernel == "1" or (use_kernel == "auto" and on_tpu):
+        from repro.kernels.decode_attention.ops import gqa_decode
+        return gqa_decode(q, k_cache, v_cache, lengths, window=window,
+                          interpret=not on_tpu).astype(q.dtype)
+    return decode_attention_jnp(q, k_cache, v_cache, lengths,
+                                window=window).astype(q.dtype)
+
+
+def attention_decode_slots(p, x, cfg, cache_k, cache_v, indices, window=0):
+    """Slot-axis decode: x [B,1,d], `indices` [B] — each row writes its
+    k/v at its own cache position and attends its own prefix. The
+    continuous-batching analogue of `attention_decode`; rows are fully
+    independent, so admitting a new request into a freed slot never
+    perturbs its neighbours."""
+    B = x.shape[0]
+    hd = cfg.hd
+    positions = indices[:, None]                           # [B,1]
+    q, k, v = _qkv(p, x, cfg, positions)
+    S = cache_k.shape[2]
+    hit = jnp.arange(S)[None, :] == indices[:, None]       # [B,S]
+    cache_k = jnp.where(hit[:, None, :, None],
+                        k.transpose(0, 2, 1, 3).astype(cache_k.dtype),
+                        cache_k)
+    cache_v = jnp.where(hit[:, None, :, None],
+                        v.transpose(0, 2, 1, 3).astype(cache_v.dtype),
+                        cache_v)
+    out = decode_attention_slots(q[:, 0], cache_k, cache_v, indices + 1,
+                                 window)
+    out = out.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype)
+    return constrain(linear(p["wo"], out), "batch", "seq",
+                     "act_embed"), cache_k, cache_v
+
+
 def attention_decode(p, x, cfg, cache_k, cache_v, index, window=0):
-    """x [B,1,d]; cache [B,Hkv,S,hd]; index = scalar write position.
+    """x [B,1,d]; cache [B,Hkv,S,hd]; index = scalar write position, or
+    a per-slot [B] vector (dispatches to `attention_decode_slots`; the
+    scalar path stays bitwise the legacy decode).
     Returns (out [B,1,d], new_k, new_v)."""
     from repro.nn.sharding import current_mesh
 
+    if jnp.asarray(index).ndim:
+        return attention_decode_slots(p, x, cfg, cache_k, cache_v, index,
+                                      window)
     B = x.shape[0]
     hd = cfg.hd
     positions = jnp.broadcast_to(index[None, None], (B, 1))

@@ -96,6 +96,66 @@ def forward(params: dict, batch: dict, cfg=None, window: int = 0):
     return logits, {"aux_loss": jnp.zeros((), jnp.float32)}
 
 
+# ------------------------------------------------- streaming decode (serving)
+# The serving engine treats the classifier as a 2-token-vocab decoder:
+# prompt tokens stream in one at a time against an O(1) recurrent cache
+# (conv tap buffer + pending pool half + LSTM state), and the "generated
+# token" is the sentiment class. Feeding a whole sequence through
+# decode_step reproduces forward()'s logits exactly (tests/test_serve.py)
+# because the conv/pool/LSTM pipeline is causal: token i completes conv
+# position i-2, and every completed pool PAIR advances the LSTM.
+
+def cache_shapes(cfg, batch_size: int, seq_len: int):
+    """Same (shape, logical axes, dtype) contract as the transformer KV
+    cache; `seq_len` is irrelevant — the state is O(1) per slot."""
+    B = batch_size
+    return {
+        "emb": ((B, CONV_K - 1, EMBED), ("batch", None, None), jnp.float32),
+        "pend": ((B, CONV_F), ("batch", None), jnp.float32),
+        "h": ((B, LSTM_H), ("batch", None), jnp.float32),
+        "c": ((B, LSTM_H), ("batch", None), jnp.float32),
+    }
+
+
+def init_cache(cfg, batch_size: int, seq_len: int) -> dict:
+    return {name: jnp.zeros(shape, dtype)
+            for name, (shape, axes, dtype) in
+            cache_shapes(cfg, batch_size, seq_len).items()}
+
+
+def decode_step(params: dict, cache: dict, token: jax.Array,
+                index: jax.Array, cfg=None, window: int = 0) -> tuple:
+    """token [B,1] int32; index scalar or per-slot [B] int32 (number of
+    tokens this row consumed so far). Returns (logits [B,1,2], cache):
+    softmax over the 2-logit output equals the paper head's sigmoid, so
+    argmax/categorical sampling IS the sentiment prediction."""
+    B = token.shape[0]
+    idx = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+    e_new = jnp.take(params["embed"], token[:, 0], axis=0)        # [B,8]
+    e0, e1 = cache["emb"][:, 0], cache["emb"][:, 1]
+    w = params["conv_w"]
+    conv = jax.nn.relu(e0 @ w[0] + e1 @ w[1] + e_new @ w[2]
+                       + params["conv_b"])                        # [B,32]
+    j = idx - (CONV_K - 1)          # conv position this token completes
+    is_even = (j >= 0) & (j % 2 == 0)
+    is_odd = (j >= 0) & (j % 2 == 1)
+    pend = jnp.where(is_even[:, None], conv, cache["pend"])
+    pooled = jnp.maximum(cache["pend"], conv)     # the pair, when is_odd
+    gates = pooled @ params["lstm_wx"] + cache["h"] @ params["lstm_wh"] \
+        + params["lstm_b"]
+    gi, gf, gg, go = jnp.split(gates, 4, axis=-1)
+    c_new = jax.nn.sigmoid(gf) * cache["c"] \
+        + jax.nn.sigmoid(gi) * jnp.tanh(gg)
+    h_new = jax.nn.sigmoid(go) * jnp.tanh(c_new)
+    h = jnp.where(is_odd[:, None], h_new, cache["h"])
+    c = jnp.where(is_odd[:, None], c_new, cache["c"])
+    z = linear(params["out"],
+               jax.nn.relu(linear(params["dense"], h)))           # [B,1]
+    logits = jnp.concatenate([jnp.zeros_like(z), z], axis=-1)[:, None, :]
+    return logits, {"emb": jnp.stack([e1, e_new], axis=1), "pend": pend,
+                    "h": h, "c": c}
+
+
 def bce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
     """Binary cross-entropy on sigmoid logits."""
     z = logits[:, 0].astype(jnp.float32)

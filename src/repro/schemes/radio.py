@@ -207,13 +207,28 @@ class Radio:
         sizes = [int(l.size) // int(l.shape[0]) for l in leaves]
         return self._deliver(payload, diag["n_tx"], sizes, diag["erased"])
 
+    # disjoint key fold for the per-row token ARQ/erasure draw — never
+    # collides with transmit_tokens' own split of the same key, so
+    # turning the fault model on does not perturb the channel noise
+    _TOKEN_ARQ_FOLD = 4242
+
     def send_tokens(self, key, tokens, vocab_size: int,
                     labels=None) -> Delivery:
-        """CL uplink: raw token ids as fixed-width codewords, one packet
-        (fade) per row. Labels ride a 1-bit control channel. Bits — and
-        one transmission per row in `n_tx` — are charged perfect or
-        not: a perfect link is noiseless, not free, so the dataset
-        crossing is billed either way (the one CL convention)."""
+        """CL / serving uplink: raw token ids as fixed-width codewords,
+        one packet (fade) per row. Labels ride a 1-bit control channel.
+        Bits — and one transmission per row in `n_tx` — are charged
+        perfect or not: a perfect link is noiseless, not free, so the
+        dataset crossing is billed either way (the one CL convention).
+
+        Under bounded ARQ (`arq_max_tx > 0`) each row additionally
+        draws its own retransmission count on a disjoint key fold
+        (`wire.drawn_stacked_tx`, same convention as the fused paths):
+        an exhausted row is ERASED — delivered as pad/zero ids, its
+        whole attempted slice billed into `erased_bits`, and flagged in
+        `user_erased` — so a serving request's prompt uplink can fail
+        without crashing the batch (docs/ACCOUNTING.md §Serving)."""
+        import jax.numpy as jnp
+
         from repro.core.centralized import token_bits
         n_bits = token_bits(vocab_size)
         if self.perfect:
@@ -222,8 +237,35 @@ class Radio:
             payload = CH.transmit_tokens(key, tokens, vocab_size,
                                          snr_db=self.snr_db,
                                          fading=self.fading)
-        bits = W.payload_bits(tokens, n_bits)
+        base_bits = W.payload_bits(tokens, n_bits)
         if labels is not None:
-            bits += W.payload_bits(labels, 1)
+            base_bits += W.payload_bits(labels, 1)
         n_rows = tokens.shape[0] if getattr(tokens, "ndim", 1) > 1 else 1
-        return Delivery(payload, bits, self.energy_j(bits), float(n_rows))
+        if self.arq_max_tx <= 0 or W.fault_free(
+                self.fading, self.perfect, self.arq_attempts,
+                self.arq_min_f2, self.arq_max_tx, self.ge_p_gb):
+            # legacy billing, bitwise: one transmission per row
+            return Delivery(payload, base_bits, self.energy_j(base_bits),
+                            float(n_rows))
+        n_tx, erased = W.drawn_stacked_tx(
+            jax.random.fold_in(key, self._TOKEN_ARQ_FOLD), n_rows, 1,
+            self.fading, self.perfect, self.arq_attempts, self.arq_min_f2,
+            self.arq_max_tx, self.ge_p_gb, self.ge_p_bg, with_erased=True)
+        n_tx = np.asarray(n_tx, np.float64)[:, 0]
+        erased = np.asarray(erased, bool)[:, 0]
+        row_bits = base_bits / n_rows
+        bits = float(row_bits * n_tx.sum())
+        erased_bits = float(row_bits * (n_tx * erased).sum())
+        if erased.any():
+            # an erased row's CRC failed: the receiver substitutes pad
+            # ids (0), mirroring the zeroed erased packets of the wire
+            er = jnp.asarray(erased)
+            payload = jnp.where(er[:, None] if getattr(tokens, "ndim", 1)
+                                > 1 else er[0], 0, payload)
+        return Delivery(
+            payload, bits, self.energy_j(bits), float(n_tx.sum()),
+            tuple(float(row_bits * t) for t in n_tx),
+            tuple(float(t) for t in n_tx), erased_bits,
+            float(W.backoff_s(n_tx, self.arq_backoff_s)),
+            tuple(bool(e) for e in erased),
+            tuple(float(row_bits * t * e) for t, e in zip(n_tx, erased)))

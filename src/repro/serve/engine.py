@@ -1,0 +1,331 @@
+"""Continuous-batching semantic serving engine over per-user Radios.
+
+Many concurrent users stream prompts up through their OWN `Radio`
+(per-user SNR, bounded-ARQ erasures) and receive generated tokens back
+down it; the server runs ONE jitted batched decode step over a
+fixed-capacity slot axis every cycle. Requests occupy a slot from
+admission to completion; a completed (or abandoned) slot re-admits
+from the arrival queue on the very next cycle — no global barrier
+between requests (`mode="continuous"`). `mode="static"` is the
+classical baseline: a batch is admitted only when EVERY slot is free,
+so the whole batch drains at the pace of its slowest member.
+
+Engine invariants (pinned by tests/test_serve.py):
+
+* Deterministic replay — same (trace.seed, trace) => same generated
+  tokens and same billing, cycle for cycle.
+* Exact billing — every crossing is a `Delivery` from the user's own
+  Radio; per request and in total, erased_bits + delivered == bits.
+* Graceful erasure — an exhausted prompt uplink retries up to
+  `max_link_tries` sends and is then ABANDONED (billed, never served);
+  the batch and every other slot are untouched.
+* Slot hygiene — a freed slot's cache is zeroed before the next
+  admission, so no stale KV / recurrent state leaks across users.
+
+RNG streams (all under `PRNGKey(trace.seed + 13)`, disjoint from every
+training stream — docs/ACCOUNTING.md §RNG): per request rid,
+`kreq = fold_in(base, rid)`; prompt content `fold_in(kreq, 3)`; uplink
+attempt a `fold_in(fold_in(kreq, 1), a)`; downlink attempt a
+`fold_in(fold_in(kreq, 2), a)`; sampling for generated token t
+`fold_in(fold_in(kreq, 9), t)`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.models import api as M
+from repro.runtime.serve_step import make_decode_step
+from repro.schemes.radio import Radio
+from repro.serve.trace import RequestTrace
+
+#: families whose decode path accepts a per-slot [B] index vector
+SLOT_FAMILIES = ("dense", "moe", "vlm", "tiny")
+#: the serving RNG stream offset (docs/ACCOUNTING.md §RNG)
+SERVE_STREAM = 13
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """One request's outcome + its exact radio bill."""
+    rid: int
+    status: str = "queued"       # ok | downlink_erased | uplink_erased
+    tokens: Tuple[int, ...] = ()
+    prompt_len: int = 0
+    snr_db: float = 0.0
+    admit_cycle: int = -1
+    complete_cycle: int = -1
+    latency_cycles: int = -1     # completion - arrival + 1 (queue incl.)
+    uplink_bits: float = 0.0
+    downlink_bits: float = 0.0
+    bits: float = 0.0
+    erased_bits: float = 0.0
+    energy_j: float = 0.0
+    n_tx: float = 0.0
+    outage_s: float = 0.0
+
+
+@dataclasses.dataclass
+class ServeReport:
+    """Whole-run outcome: per-request results + engine aggregates."""
+    mode: str
+    n_slots: int
+    results: Tuple[RequestResult, ...]
+    cycles: int
+    wall_s: float
+
+    @property
+    def generated_tokens(self) -> int:
+        return sum(len(r.tokens) for r in self.results)
+
+    @property
+    def bits(self) -> float:
+        return sum(r.bits for r in self.results)
+
+    @property
+    def erased_bits(self) -> float:
+        return sum(r.erased_bits for r in self.results)
+
+    @property
+    def delivered_bits(self) -> float:
+        return self.bits - self.erased_bits
+
+    @property
+    def energy_j(self) -> float:
+        return sum(r.energy_j for r in self.results)
+
+    def latencies(self):
+        return sorted(r.latency_cycles for r in self.results
+                      if r.latency_cycles >= 0)
+
+    def latency_quantile(self, q: float) -> float:
+        lat = self.latencies()
+        if not lat:
+            return float("nan")
+        return float(lat[min(len(lat) - 1, int(q * len(lat)))])
+
+    def tokens_per_s(self) -> float:
+        return self.generated_tokens / max(self.wall_s, 1e-9)
+
+    def to_dict(self) -> dict:
+        return {
+            "mode": self.mode, "n_slots": self.n_slots,
+            "cycles": self.cycles, "wall_s": self.wall_s,
+            "generated_tokens": self.generated_tokens,
+            "tokens_per_s": self.tokens_per_s(),
+            "bits": self.bits, "erased_bits": self.erased_bits,
+            "delivered_bits": self.delivered_bits,
+            "energy_j": self.energy_j,
+            "p50_latency_cycles": self.latency_quantile(0.50),
+            "p99_latency_cycles": self.latency_quantile(0.99),
+            "statuses": {s: sum(1 for r in self.results if r.status == s)
+                         for s in sorted({r.status for r in self.results})},
+        }
+
+
+class ServeEngine:
+    """Slot-based inference server for one model over one base Radio.
+
+    `radio` carries the shared link knobs (quantizer, fading, ARQ /
+    fault model, bandwidth, power); each request's own `snr_db`
+    overrides the budget per user, exactly like training fleets
+    (`Radio.from_wcfg(..., snr_db=...)`). `None` = ideal noiseless
+    links — still billed (a perfect link is noiseless, not free)."""
+
+    def __init__(self, cfg, params, *, n_slots: int = 8,
+                 radio: Optional[Radio] = None, temperature: float = 1.0,
+                 greedy: bool = False, max_link_tries: int = 2):
+        if cfg.family not in SLOT_FAMILIES:
+            raise ValueError(
+                f"family {cfg.family!r} has no per-slot decode path; "
+                f"serving supports {SLOT_FAMILIES}")
+        if n_slots < 1:
+            raise ValueError("n_slots must be >= 1")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = int(n_slots)
+        self.radio = radio if radio is not None \
+            else Radio(perfect=True, fading=False)
+        self.temperature = float(temperature)
+        self.greedy = bool(greedy)
+        self.max_link_tries = max(1, int(max_link_tries))
+        self.out_vocab = 2 if cfg.family == "tiny" else cfg.vocab_size
+        self._model = M.get_model(cfg)
+        self._compiled = {}      # max_len -> (step_sample, reset_slot)
+
+    # ------------------------------------------------------------ jitted
+    def _build(self, S: int):
+        if S in self._compiled:
+            return self._compiled[S]
+        cfg, B = self.cfg, self.n_slots
+        step = make_decode_step(cfg, ShapeConfig("serve", S, B, "decode"))
+        axes = {k: ax for k, (sh, ax, dt) in
+                self._model.cache_shapes(cfg, B, S).items()}
+
+        @partial(jax.jit, static_argnames=("greedy",))
+        def step_sample(params, cache, tokens, idx, keys, temperature,
+                        greedy):
+            logits, cache = step(params, cache, tokens, idx)
+            lg = logits[:, 0].astype(jnp.float32)
+            if greedy:
+                nxt = jnp.argmax(lg, axis=-1)
+            else:
+                nxt = jax.vmap(jax.random.categorical)(
+                    keys, lg / jnp.maximum(temperature, 1e-6))
+            return nxt.astype(jnp.int32), cache
+
+        @jax.jit
+        def reset_slot(cache, b):
+            def zero(leaf, ax):
+                i = list(ax).index("batch")
+                mask = (jnp.arange(leaf.shape[i]) == b).reshape(
+                    [leaf.shape[i] if d == i else 1
+                     for d in range(leaf.ndim)])
+                return jnp.where(mask, jnp.zeros((), leaf.dtype), leaf)
+            return {k: zero(v, axes[k]) for k, v in cache.items()}
+
+        self._compiled[S] = (step_sample, reset_slot)
+        return self._compiled[S]
+
+    # ------------------------------------------------------------- radio
+    def _bill(self, res: RequestResult, d, leg: str) -> None:
+        res.bits += d.bits
+        res.erased_bits += d.erased_bits
+        res.energy_j += d.energy_j
+        res.n_tx += d.n_tx
+        res.outage_s += d.outage_s
+        if leg == "up":
+            res.uplink_bits += d.bits
+        else:
+            res.downlink_bits += d.bits
+
+    def _send_row(self, radio: Radio, kleg, row: np.ndarray, vocab: int,
+                  res: RequestResult, leg: str):
+        """One row of token ids through `radio`, retried up to
+        `max_link_tries` sends under bounded ARQ. Returns (received row
+        | None if every try was erased, erased_last_try)."""
+        payload, erased = None, False
+        for attempt in range(self.max_link_tries):
+            d = radio.send_tokens(jax.random.fold_in(kleg, attempt),
+                                  jnp.asarray(row)[None, :], vocab)
+            self._bill(res, d, leg)
+            erased = bool(d.user_erased[0]) if d.user_erased else False
+            if not erased:
+                payload = np.asarray(d.payload[0])
+                break
+        return payload, erased
+
+    # ------------------------------------------------------------- serve
+    def serve(self, trace: RequestTrace, mode: str = "continuous"
+              ) -> ServeReport:
+        if mode not in ("continuous", "static"):
+            raise ValueError(f"unknown mode {mode!r}")
+        barrier = mode == "static"
+        cfg, B = self.cfg, self.n_slots
+        reqs = trace.sorted()
+        if not reqs:
+            return ServeReport(mode, B, (), 0, 0.0)
+        S = max(8, trace.max_seq_len())
+        step_sample, reset_slot = self._build(S)
+        base = jax.random.PRNGKey(trace.seed + SERVE_STREAM)
+
+        results = {}
+        slots = [None] * B
+        cache = self._model.init_cache(cfg, B, S)
+        qi, cycle = 0, 0
+        t0 = time.time()
+
+        def admit(r) -> Optional[dict]:
+            kreq = jax.random.fold_in(base, r.rid)
+            res = RequestResult(r.rid, prompt_len=r.prompt_len,
+                                snr_db=r.snr_db)
+            results[r.rid] = res
+            prompt = np.asarray(jax.random.randint(
+                jax.random.fold_in(kreq, 3), (r.prompt_len,), 1,
+                cfg.vocab_size, jnp.int32))
+            radio = dataclasses.replace(self.radio, snr_db=r.snr_db)
+            rx, erased = self._send_row(radio, jax.random.fold_in(kreq, 1),
+                                        prompt, cfg.vocab_size, res, "up")
+            if erased:
+                res.status = "uplink_erased"     # abandoned, bill stands
+                return None
+            res.status = "serving"
+            res.admit_cycle = cycle
+            return {"r": r, "res": res, "kreq": kreq, "radio": radio,
+                    "prompt": rx, "pos": 0, "last": 0, "new": []}
+
+        def complete(st) -> None:
+            r, res = st["r"], st["res"]
+            gen = np.asarray(st["new"], np.int32)
+            _, erased = self._send_row(st["radio"],
+                                       jax.random.fold_in(st["kreq"], 2),
+                                       gen, self.out_vocab, res, "down")
+            res.status = "downlink_erased" if erased else "ok"
+            res.tokens = tuple(int(t) for t in gen)
+            res.complete_cycle = cycle
+            res.latency_cycles = cycle - r.arrival_cycle + 1
+
+        while qi < len(reqs) or any(s is not None for s in slots):
+            # ---- admission (continuous: any free slot; static: barrier)
+            if not barrier or all(s is None for s in slots):
+                for b in range(B):
+                    if slots[b] is not None:
+                        continue
+                    while qi < len(reqs) \
+                            and reqs[qi].arrival_cycle <= cycle:
+                        st = admit(reqs[qi])
+                        qi += 1
+                        if st is not None:
+                            cache = reset_slot(cache, jnp.int32(b))
+                            slots[b] = st
+                            break
+            if not any(s is not None for s in slots):
+                if qi < len(reqs):   # idle: jump to the next arrival
+                    cycle = max(cycle + 1, reqs[qi].arrival_cycle)
+                    continue
+                break
+
+            # ---- one batched decode cycle over the slot axis
+            toks = np.zeros((B, 1), np.int32)
+            idx = np.zeros(B, np.int32)
+            keys = np.zeros((B, 2), np.uint32)
+            for b, st in enumerate(slots):
+                if st is None:
+                    continue
+                P = st["r"].prompt_len
+                toks[b, 0] = st["prompt"][st["pos"]] if st["pos"] < P \
+                    else st["last"]
+                idx[b] = st["pos"]
+                t = st["pos"] - (P - 1)
+                if t >= 0 and not self.greedy:
+                    keys[b] = np.asarray(jax.random.fold_in(
+                        jax.random.fold_in(st["kreq"], 9), t))
+            nxt, cache = step_sample(self.params, cache,
+                                     jnp.asarray(toks), jnp.asarray(idx),
+                                     jnp.asarray(keys),
+                                     jnp.float32(self.temperature),
+                                     self.greedy)
+            nxt = np.asarray(nxt)
+            for b, st in enumerate(slots):
+                if st is None:
+                    continue
+                if st["pos"] >= st["r"].prompt_len - 1:
+                    tok = int(nxt[b])
+                    st["new"].append(tok)
+                    st["last"] = tok
+                st["pos"] += 1
+                if len(st["new"]) >= st["r"].max_new_tokens:
+                    complete(st)
+                    slots[b] = None
+            cycle += 1
+
+        wall = time.time() - t0
+        ordered = tuple(results[r.rid] for r in reqs)
+        return ServeReport(mode, B, ordered, cycle, wall)

@@ -229,3 +229,31 @@ def test_decode_attention_masks_future():
     out2 = da_ops.gqa_decode(q, k2, v2, length)
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
                                rtol=1e-5, atol=1e-5)
+
+
+def test_decode_attention_per_slot_lengths():
+    """The serving engine's actual batched call: every slot at its OWN
+    depth, a [B] length vector. Kernel (interpret) == jnp ref == the
+    same rows run one-at-a-time with scalar lengths."""
+    from repro.models.layers import decode_attention_jnp
+    key = jax.random.PRNGKey(17)
+    kq, kk, kv = jax.random.split(key, 3)
+    b, hkv, g, s, hd = 8, 2, 4, 128, 64          # 8 serving slots
+    q = jax.random.normal(kq, (b, hkv * g, hd), jnp.float32)
+    k = jax.random.normal(kk, (b, hkv, s, hd), jnp.float32)
+    v = jax.random.normal(kv, (b, hkv, s, hd), jnp.float32)
+    lengths = jnp.array([1, 7, 16, 33, 64, 100, 127, 128], jnp.int32)
+    out = da_ops.gqa_decode(q, k, v, lengths, interpret=True)
+    ref = decode_attention_ref(q.reshape(b, hkv, g, hd), k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(ref.reshape(b, hkv * g, hd)),
+                               rtol=2e-4, atol=2e-4)
+    jref = decode_attention_jnp(q, k, v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(jref),
+                               rtol=2e-4, atol=2e-4)
+    # row independence: each slot's output equals its own scalar run
+    for i in range(b):
+        one = da_ops.gqa_decode(q[i:i + 1], k[i:i + 1], v[i:i + 1],
+                                lengths[i], interpret=True)
+        np.testing.assert_allclose(np.asarray(out[i:i + 1]),
+                                   np.asarray(one), rtol=1e-6, atol=1e-6)
