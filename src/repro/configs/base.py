@@ -158,6 +158,23 @@ class WirelessConfig:
     # "median" (coordinate-wise; robust to a single user's deep-fade
     # MSB flips at zero extra bits)
     aggregate: str = "mean"
+    # beyond-paper: FL round scheduling — "barrier" (paper/PR 5: the
+    # sync's aggregate is consumed by the same round) or "delayed"
+    # (DiLoCo-style async, one-round staleness: round k trains against
+    # round k-1's aggregate while round k-1's upload syncs — the
+    # collective overlaps the next local phase). Billing is identical:
+    # the same fold_in(key, 999) draw covers both.
+    sync: str = "barrier"
+    # on-wire codeword container — "float32" (abstract b-bit symbols,
+    # bills quant_bits), "int8" (byte codewords, Q<=8, bills 8) or
+    # "int4" (two codewords per byte, Q<=4, bills 4). Packed/kernel
+    # wire paths only; see wire.wire_width.
+    wire_dtype: str = "float32"
+    # route wire crossings through the Pallas kernel; in FL this also
+    # fuses quantize->channel->dequantize->FedAvg into ONE launch
+    # (wire.transmit_stacked_mean — allclose, not bitwise, to the
+    # default dequant-then-mean path, hence opt-in)
+    use_kernel: bool = False
 
 
 def register(cfg: ArchConfig) -> ArchConfig:

@@ -83,3 +83,20 @@ def payload_bits(x: jax.Array, bits: int) -> int:
     Tree-level accounting (FL uploads, SL legs, ARQ expectation) lives
     in core.wire.payload_bits, which all hot paths now share."""
     return int(x.size) * bits
+
+
+def pack_nibbles(code: jax.Array) -> jax.Array:
+    """[..., C] codewords (each < 16) -> [..., C // 2] uint8, adjacent
+    pairs packed little-end-first: byte = even | (odd << 4). The int4
+    on-wire layout — two codewords per byte. C must be even."""
+    lo = code[..., 0::2].astype(jnp.uint8)
+    hi = code[..., 1::2].astype(jnp.uint8)
+    return lo | (hi << 4)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    """Inverse of pack_nibbles: [..., C // 2] uint8 -> [..., C] int32."""
+    lo = (packed & jnp.uint8(0xF)).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1],
+                                                2 * packed.shape[-1])

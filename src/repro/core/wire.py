@@ -318,19 +318,37 @@ def drawn_stacked_tx(key, n: int, n_packets: int, fading: bool = True,
     return (n_tx, np.asarray(erased)) if with_erased else n_tx
 
 
-def payload_bits(tree, bits: int, expected_tx: float = 1.0) -> float:
+def wire_width(wire_dtype: str, bits: int) -> int:
+    """Billed on-air bits PER CODEWORD for a wire dtype. The float32
+    wire transports abstract b-bit symbols, so it bills the quantizer
+    width; the byte-packed dtypes bill their physical container width —
+    int8 is one byte per codeword regardless of Q, int4 packs two
+    codewords per byte. THE one width rule every bill shares (Radio
+    delivery, scheme key-replay billing, payload_bits)."""
+    if wire_dtype == "int8":
+        return 8
+    if wire_dtype == "int4":
+        return 4
+    return int(bits)
+
+
+def payload_bits(tree, bits: int, expected_tx: float = 1.0,
+                 wire_dtype: str = "float32") -> float:
     """On-air payload of transmitting every leaf of `tree` at b-bit
     quantization, scaled by the expected (ARQ) transmission count.
     The ONE accounting helper for FL uploads and SL legs — always a
-    float, so int/float mixing between call sites is gone."""
+    float, so int/float mixing between call sites is gone. With a
+    packed `wire_dtype` the billed width is the container's
+    (`wire_width`): int4 at Q<=4 bills half the bits of int8."""
     n = sum(int(l.size) for l in jax.tree.leaves(tree))
-    return float(n) * float(bits) * float(expected_tx)
+    return float(n) * float(wire_width(wire_dtype, bits)) \
+        * float(expected_tx)
 
 
 # ------------------------------------------------------------ fused channel
 def wire_transform(buf: jax.Array, rand: jax.Array, scale, p, bits: int,
-                   code_dtype=jnp.uint32, stochastic: bool = False
-                   ) -> jax.Array:
+                   code_dtype=jnp.uint32, stochastic: bool = False,
+                   nibble_packed: bool = False) -> jax.Array:
     """The fused quantize -> BPSK/Rayleigh bit-flip -> dequantize math on
     a packed buffer. `scale`/`p` broadcast against `buf` (per-row
     [..., R, 1] vectors). Identical ops to the Pallas kernel body — this
@@ -348,7 +366,15 @@ def wire_transform(buf: jax.Array, rand: jax.Array, scale, p, bits: int,
     codewords stochastically instead of to nearest, with the uniform
     derived from the SAME per-element rand word through one extra
     fmix32 salt (_SR_SALT, disjoint from every bit plane) — unbiased
-    quantization at zero extra RNG draws."""
+    quantization at zero extra RNG draws.
+
+    `nibble_packed=True` is the ON-WIRE int4 mode (quant_bits <= 4):
+    adjacent codeword pairs along the last axis share one byte between
+    quantize and dequantize (Q.pack_nibbles). Flips are still derived
+    per-codeword from each element's OWN rand word — the flip-mask
+    bytes are packed the same way and XORed against the packed buffer —
+    so the output is bit-identical to the float32/uint32 path at the
+    same Q (tested in tests/test_wire.py)."""
     qm = float(2 ** (bits - 1) - 1)
     x = buf / scale
     if stochastic:
@@ -358,8 +384,15 @@ def wire_transform(buf: jax.Array, rand: jax.Array, scale, p, bits: int,
     else:
         r = jnp.round(x)
     q = jnp.clip(r, -qm, qm).astype(jnp.int32)
+    flips = bit_flip_mask(rand, bits, p)
+    if nibble_packed:
+        # bits <= 4 -> codes and flip masks both fit one nibble
+        byte = Q.pack_nibbles((q + jnp.int32(qm)).astype(jnp.uint32))
+        byte = byte ^ Q.pack_nibbles(flips)
+        q_hat = jnp.clip(Q.unpack_nibbles(byte) - jnp.int32(qm), -qm, qm)
+        return (q_hat.astype(jnp.float32) * scale).astype(buf.dtype)
     code = (q + jnp.int32(qm)).astype(code_dtype)
-    code = code ^ bit_flip_mask(rand, bits, p).astype(code_dtype)
+    code = code ^ flips.astype(code_dtype)
     q_hat = jnp.clip(code.astype(jnp.int32) - jnp.int32(qm), -qm, qm)
     return (q_hat.astype(jnp.float32) * scale).astype(buf.dtype)
 
@@ -512,18 +545,30 @@ def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
     p_row = jnp.take(p, row_id, axis=1)[..., None]                # [n, R, 1]
 
     if impl == "kernel":
-        from repro.kernels.quant_channel.kernel import packed_wire_2d
+        from repro.kernels.quant_channel import kernel as K
         r, c = plan.n_rows, plan.cols
-        y = packed_wire_2d(buf.reshape(n * r, c), rand.reshape(n * r, c),
-                           scale_row.reshape(n * r, 1),
-                           p_row.reshape(n * r, 1), bits,
-                           interpret=interpret,
-                           wire_dtype=wire_dtype).reshape(n, r, c)
+        # Opt-in TPU in-kernel PRNG (K.TPU_KERNEL_RNG): compiled-TPU
+        # runs draw the rand words inside the kernel from a seed folded
+        # off kb — a DIFFERENT stream than the host jax.random.bits
+        # words, which is why it hides behind the flag (host-vs-kernel
+        # bitwise parity only holds with it off).
+        tpu_rng = K.TPU_KERNEL_RNG and not interpret \
+            and jax.default_backend() == "tpu"
+        seed = jax.random.bits(kb, (1, 1), jnp.uint32).astype(jnp.int32) \
+            if tpu_rng else None
+        y = K.packed_wire_2d(buf.reshape(n * r, c), rand.reshape(n * r, c),
+                             scale_row.reshape(n * r, 1),
+                             p_row.reshape(n * r, 1), bits,
+                             interpret=interpret,
+                             wire_dtype=wire_dtype,
+                             rng_mode=("tpu" if tpu_rng else "host"),
+                             seed=seed).reshape(n, r, c)
     else:
         y = wire_transform(buf, rand, scale_row, p_row, bits,
                            code_dtype=(jnp.uint8 if wire_dtype == "int8"
                                        else jnp.uint32),
-                           stochastic=(rounding == "stochastic"))
+                           stochastic=(rounding == "stochastic"),
+                           nibble_packed=(wire_dtype == "int4"))
     if can_erase:
         erased_row = jnp.take(erased, row_id, axis=1)[..., None]  # [n, R, 1]
         y = jnp.where(erased_row, jnp.zeros((), y.dtype), y)
@@ -532,17 +577,18 @@ def _transmit_stacked_planned(key, leaves, plan: WirePlan, bits: int,
 
 
 def _check_wire_dtype(wire_dtype: str, bits: int, impl: str) -> str:
-    if wire_dtype not in ("float32", "int8"):
+    if wire_dtype not in ("float32", "int8", "int4"):
         raise ValueError(f"unknown wire_dtype {wire_dtype!r}")
-    if wire_dtype == "int8":
-        if bits > 8:
+    if wire_dtype != "float32":
+        width = 8 if wire_dtype == "int8" else 4
+        if bits > width:
             raise ValueError(
-                f"int8 on-wire dtype holds at most 8-bit codewords, got "
-                f"quant_bits={bits}")
+                f"{wire_dtype} on-wire dtype holds at most {width}-bit "
+                f"codewords, got quant_bits={bits}")
         if impl not in ("packed", "kernel"):
             raise ValueError(
-                "wire_dtype='int8' is only implemented for the packed "
-                f"jnp and Pallas kernel paths, not impl={impl!r}")
+                f"wire_dtype={wire_dtype!r} is only implemented for the "
+                f"packed jnp and Pallas kernel paths, not impl={impl!r}")
     return wire_dtype
 
 
@@ -584,7 +630,11 @@ def transmit_stacked(key, tree, bits: int, snr_db, fading: bool = True,
 
     `wire_dtype="int8"` (quant_bits <= 8, packed impl) carries the
     codeword buffer as one byte per element across the channel instead
-    of float32 — bit-identical output, 4x less on-wire HBM traffic."""
+    of float32 — bit-identical output, 4x less on-wire HBM traffic.
+    `wire_dtype="int4"` (quant_bits <= 4) packs TWO codewords per byte
+    (Q.pack_nibbles) — still bit-identical to the float path at the
+    same Q, and `payload_bits`/Radio bill the halved container width
+    (`wire_width`)."""
     leaves, treedef = jax.tree.flatten(tree)
     if not leaves:
         return (tree, {"n_tx": jnp.zeros((1, 0), jnp.int32),
@@ -604,6 +654,123 @@ def transmit_stacked(key, tree, bits: int, snr_db, fading: bool = True,
         rounding=_check_rounding(rounding, impl))
     rx = jax.tree.unflatten(treedef, list(out))
     return (rx, {"n_tx": n_tx, "erased": erased}) if return_diag else rx
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "plan", "bits", "fading", "perfect", "arq_attempts", "arq_min_f2",
+    "arq_max_tx", "ge_p_gb", "ge_p_bg", "impl", "interpret", "wire_dtype"))
+def _transmit_stacked_mean_planned(key, leaves, plan: WirePlan, bits: int,
+                                   snr_db, fading: bool, perfect: bool,
+                                   arq_attempts: int, arq_min_f2: float,
+                                   impl: str, interpret: bool,
+                                   wire_dtype: str = "float32",
+                                   arq_max_tx: int = 0,
+                                   ge_p_gb: float = 0.0,
+                                   ge_p_bg: float = 0.5):
+    """The fused quantize -> channel -> dequantize -> WEIGHTED-MEAN pass
+    over a stacked N-user upload: the dequantized [N, R, C] buffer is
+    never materialized — each user's received rows are scaled by the
+    alive-weight and accumulated straight into the [R, C] aggregate
+    (one kernel launch under impl="kernel", with the user axis as the
+    innermost accumulation grid dim). Returns (mean leaves (UNstacked),
+    n_tx, erased, n_alive). Weights are uniform over alive users
+    (1/n_alive; a user with ANY erased packet counts dead); when every
+    user is erased the aggregate is all-zeros and n_alive == 0 — the
+    caller picks its own fallback. The jnp path accumulates users in
+    the same ascending order, so packed and kernel outputs are
+    bit-identical in interpret mode; NOTE the ordered weighted sum is
+    NOT bitwise-equal to dequant-then-`jnp.mean` (different reduction
+    order), which is why the FL step only takes this path under
+    `use_kernel`."""
+    from repro.core import channel as CH  # lazy: channel imports wire
+
+    n = leaves[0].shape[0] if leaves else 1
+    npk = plan.n_packets
+    kf, kb = jax.random.split(key)
+    if perfect:
+        p = jnp.zeros((n, npk), jnp.float32)
+        n_tx = jnp.ones((n, npk), jnp.int32)
+        erased = jnp.zeros((n, npk), bool)
+    else:
+        f2, n_tx, erased = _packet_fades(kf, n, npk, fading, arq_attempts,
+                                         arq_min_f2, arq_max_tx, ge_p_gb,
+                                         ge_p_bg)
+        p = CH.bpsk_bit_error_prob(snr_db, f2)
+    rand = jax.random.bits(kb, (n, plan.n_rows, plan.cols), jnp.uint32)
+    can_erase = (not perfect) and arq_max_tx > 0
+
+    alive = ~erased.any(axis=1) if can_erase \
+        else jnp.ones((n,), bool)                                  # [N]
+    n_alive = alive.sum().astype(jnp.int32)
+    w = alive.astype(jnp.float32) / jnp.maximum(n_alive, 1)        # [N]
+
+    buf = jax.vmap(lambda *ls: _pack_leaves(ls, plan))(*leaves)    # [n, R, C]
+    row_id = jnp.asarray(_row_ids(plan))
+    amax = jnp.stack(
+        [jnp.max(jnp.abs(l.reshape(l.shape[0], -1).astype(jnp.float32)),
+                 axis=1) for l in leaves], axis=1)                 # [n, P]
+    scale = jnp.maximum(amax, 1e-12) / Q.qmax(bits)
+    scale_row = jnp.take(scale, row_id, axis=1)[..., None]         # [n, R, 1]
+    p_row = jnp.take(p, row_id, axis=1)[..., None]                 # [n, R, 1]
+
+    r, c = plan.n_rows, plan.cols
+    if impl == "kernel":
+        from repro.kernels.quant_channel.kernel import packed_wire_mean_2d
+        w_row = jnp.broadcast_to(w[:, None, None], (n, r, 1))
+        acc = packed_wire_mean_2d(
+            buf.reshape(n * r, c), rand.reshape(n * r, c),
+            scale_row.reshape(n * r, 1), p_row.reshape(n * r, 1),
+            w_row.reshape(n * r, 1), bits, n, interpret=interpret,
+            wire_dtype=wire_dtype)
+    else:
+        y = wire_transform(buf, rand, scale_row, p_row, bits,
+                           code_dtype=(jnp.uint8 if wire_dtype == "int8"
+                                       else jnp.uint32),
+                           nibble_packed=(wire_dtype == "int4"))
+        # Ascending-user accumulation of the MATERIALIZED products, via
+        # scan: the loop boundary stops XLA contracting w*y + acc into
+        # an FMA, so each product is rounded to float32 before the add —
+        # exactly what the kernel's store-then-accumulate does (bitwise
+        # parity in interpret mode, pinned in tests/test_wire.py).
+        prods = w[:, None, None] * y                       # [n, R, C]
+        acc = jax.lax.scan(lambda a, pr: (a + pr, None),
+                           jnp.zeros((r, c), jnp.float32), prods)[0]
+    return tuple(_unpack_leaves(acc, plan)), n_tx, erased, n_alive
+
+
+def transmit_stacked_mean(key, tree, bits: int, snr_db,
+                          fading: bool = True, perfect: bool = False,
+                          arq_attempts: int = 1, arq_min_f2: float = 0.25,
+                          impl: str = "kernel", interpret: bool = True,
+                          wire_dtype: str = "float32", arq_max_tx: int = 0,
+                          ge_p_gb: float = 0.0, ge_p_bg: float = 0.5):
+    """Fused transmit-and-aggregate of a stacked [N, ...] upload: one
+    pass computes what `transmit_stacked` + dequantized alive-weighted
+    mean would, without materializing the received [N, ...] tree.
+    Returns (mean_tree with UNstacked leaves, {"n_tx", "erased",
+    "n_alive"}). Same key contract, fades, rand stream and billing
+    draws as `transmit_stacked` — `drawn_stacked_tx` replays this
+    call's costs identically. The aggregation itself is an ordered
+    weighted sum, allclose-but-not-bitwise to the legacy
+    dequant-then-mean (see _transmit_stacked_mean_planned)."""
+    leaves, treedef = jax.tree.flatten(tree)
+    if not leaves:
+        return tree, {"n_tx": jnp.zeros((1, 0), jnp.int32),
+                      "erased": jnp.zeros((1, 0), bool),
+                      "n_alive": jnp.int32(0)}
+    plan = _plan_from_shapes(treedef,
+                             tuple(tuple(l.shape[1:]) for l in leaves),
+                             tuple(np.dtype(l.dtype) for l in leaves),
+                             WIRE_COLS)
+    out, n_tx, erased, n_alive = _transmit_stacked_mean_planned(
+        key, tuple(leaves), plan, int(bits), snr_db, bool(fading),
+        bool(perfect), int(arq_attempts), float(arq_min_f2), impl,
+        bool(interpret),
+        wire_dtype=_check_wire_dtype(wire_dtype, int(bits), impl),
+        arq_max_tx=int(arq_max_tx), ge_p_gb=float(ge_p_gb),
+        ge_p_bg=float(ge_p_bg))
+    rx = jax.tree.unflatten(treedef, list(out))
+    return rx, {"n_tx": n_tx, "erased": erased, "n_alive": n_alive}
 
 
 def transmit_tree(key, tree, bits: int, snr_db, fading: bool = True,

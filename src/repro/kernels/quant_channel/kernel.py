@@ -40,6 +40,13 @@ from repro.core.wire import bit_flip_mask, fmix32
 BLOCK_M = 128
 BLOCK_N = 512
 
+# Opt-in: on real TPU (compiled, not interpret) generate the per-element
+# rand word with pltpu.prng_random_bits INSIDE the kernel instead of the
+# host-side jax.random.bits input. Changes the bit-flip stream (the TPU
+# PRNG is not the threefry stream), so it is a flag, never a default —
+# the host-vs-kernel bitwise-equivalence tests only hold with this off.
+TPU_KERNEL_RNG = False
+
 # back-compat alias: ref.py and older callers import the finalizer here
 _finalize = fmix32
 
@@ -60,40 +67,128 @@ def _qc_kernel(x_ref, rand_ref, p_ref, o_ref, *, bits: int):
     o_ref[...] = (q_hat.astype(jnp.float32) * scale).astype(o_ref.dtype)
 
 
+def _wire_tile(x, rand, scale, p, *, bits: int, code_dtype=jnp.uint32):
+    """One tile of the packed-wire math (quantize -> flip -> dequantize),
+    shared by the plain and fused-mean kernel bodies. Returns float32.
+
+    `code_dtype=jnp.uint8` is the on-wire int8 mode (bits <= 8): the
+    codeword tile lives as one byte per element between quantize and
+    dequantize — same codes, same flip mask, bit-identical output. The
+    int4 mode (bits <= 4) also lands here with uint8 codewords: nibble
+    XOR never carries across the nibble boundary, so the physically
+    byte-packed layout (two codewords per byte, Q.pack_nibbles — done
+    for real by the jnp packed path in core/wire.py) produces values
+    identical to per-codeword uint8 XOR; the kernel keeps the
+    vector-friendly one-codeword-per-lane tile and stays bit-exact
+    against it (tests/test_wire.py)."""
+    qmax = float(2 ** (bits - 1) - 1)
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    code = (q + jnp.int32(qmax)).astype(code_dtype)
+    code = code ^ bit_flip_mask(rand, bits, p).astype(code_dtype)
+    q_hat = jnp.clip(code.astype(jnp.int32) - jnp.int32(qmax), -qmax, qmax)
+    return q_hat.astype(jnp.float32) * scale
+
+
 def _packed_kernel(x_ref, rand_ref, scale_ref, p_ref, o_ref, *, bits: int,
                    code_dtype=jnp.uint32):
     """Packed-wire body: per-ROW quantization scale and bit-error prob
     (delivered as [bm, 1] tiles) instead of a blockwise scale — each row
-    belongs to exactly one packet (leaf / user), see core/wire.py.
-    `code_dtype=jnp.uint8` is the on-wire int8 mode (bits <= 8): the
-    codeword tile lives as one byte per element between quantize and
-    dequantize — same codes, same flip mask, bit-identical output."""
-    x = x_ref[...]
-    scale = scale_ref[...]                       # [bm, 1], broadcasts
-    qmax = float(2 ** (bits - 1) - 1)
-    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
-    code = (q + jnp.int32(qmax)).astype(code_dtype)
-    code = code ^ bit_flip_mask(rand_ref[...], bits,
-                                p_ref[...]).astype(code_dtype)
-    q_hat = jnp.clip(code.astype(jnp.int32) - jnp.int32(qmax), -qmax, qmax)
-    o_ref[...] = (q_hat.astype(jnp.float32) * scale).astype(o_ref.dtype)
+    belongs to exactly one packet (leaf / user), see core/wire.py."""
+    y = _wire_tile(x_ref[...], rand_ref[...], scale_ref[...], p_ref[...],
+                   bits=bits, code_dtype=code_dtype)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _packed_kernel_tpu_rng(seed_ref, x_ref, scale_ref, p_ref, o_ref, *,
+                           bits: int, code_dtype, grid_j: int):
+    """Packed-wire body with the rand word generated IN-KERNEL by the
+    TPU hardware PRNG (pltpu.prng_random_bits) instead of arriving as a
+    [bm, bn] input tile — kills the host-side jax.random.bits draw and
+    its HBM round-trip. Each grid tile seeds with (caller seed, flat
+    tile id) so tiles draw independent streams. Compiled-TPU only: the
+    interpret path keeps the input-word kernel (`_packed_kernel`)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    i, j = pl.program_id(0), pl.program_id(1)
+    pltpu.prng_seed(seed_ref[0, 0], i * grid_j + j)
+    rand = pltpu.bitcast(pltpu.prng_random_bits(x_ref.shape), jnp.uint32)
+    y = _wire_tile(x_ref[...], rand, scale_ref[...], p_ref[...],
+                   bits=bits, code_dtype=code_dtype)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def _packed_mean_kernel(x_ref, rand_ref, scale_ref, p_ref, w_ref, o_ref, *,
+                        bits: int, code_dtype=jnp.uint32):
+    """Fused quant -> channel -> dequant -> WEIGHTED-MEAN body for a
+    stacked N-user upload: the user axis is the innermost grid dim, and
+    each user's dequantized tile is scaled by its aggregation weight
+    ([bm, 1] w tile: alive / n_alive) and accumulated straight into the
+    output block — the [N, R, C] received buffer never exists. Users
+    accumulate in ascending order, matching the jnp fallback's ordered
+    sum bit-for-bit (core/wire._transmit_stacked_mean_planned)."""
+    u = pl.program_id(2)
+    y = _wire_tile(x_ref[...], rand_ref[...], scale_ref[...], p_ref[...],
+                   bits=bits, code_dtype=code_dtype)
+    contrib = (w_ref[...] * y).astype(o_ref.dtype)
+
+    @pl.when(u == 0)
+    def _init():
+        o_ref[...] = contrib
+
+    @pl.when(u != 0)
+    def _accum():
+        o_ref[...] += contrib
+
+
+def _code_dtype_for(wire_dtype: str):
+    return jnp.uint8 if wire_dtype in ("int8", "int4") else jnp.uint32
 
 
 def packed_wire_2d(buf: jax.Array, rand: jax.Array, scale_row: jax.Array,
                    p_row: jax.Array, bits: int,
                    interpret: bool = True,
-                   wire_dtype: str = "float32") -> jax.Array:
+                   wire_dtype: str = "float32",
+                   rng_mode: str = "host",
+                   seed: jax.Array | None = None) -> jax.Array:
     """buf [R, C] float32, rand [R, C] uint32, scale_row/p_row [R, 1]
     float32. Grid over the packed 2D view; one launch per pytree (or per
     N-user upload when the caller stacks users into R).
     `wire_dtype="int8"` (bits <= 8) keeps the codeword tile in uint8 —
-    4x less VMEM for the buffer that crosses the channel."""
+    4x less VMEM for the buffer that crosses the channel; `"int4"`
+    (bits <= 4) bills two codewords per byte (see _wire_tile).
+    `rng_mode="tpu"` (compiled TPU only; gated by TPU_KERNEL_RNG at the
+    wire layer) generates the rand words in-kernel from `seed` [1, 1]
+    int32 and ignores `rand`; interpret mode must stay "host"."""
     R, C = buf.shape
     bm = next(b for b in (BLOCK_M, 64, 32, 16, 8, 4, 2, 1) if R % b == 0)
     bn = min(BLOCK_N, C)
     assert C % bn == 0, (R, C, bm, bn)
     grid = (R // bm, C // bn)
-    code_dtype = jnp.uint8 if wire_dtype == "int8" else jnp.uint32
+    code_dtype = _code_dtype_for(wire_dtype)
+    if rng_mode not in ("host", "tpu"):
+        raise ValueError(f"unknown rng_mode {rng_mode!r}")
+    if rng_mode == "tpu":
+        if interpret:
+            raise ValueError(
+                "rng_mode='tpu' (in-kernel pltpu.prng_random_bits) needs "
+                "compiled TPU execution; interpret mode keeps the "
+                "host-side rand-word input (rng_mode='host')")
+        if seed is None:
+            raise ValueError("rng_mode='tpu' requires a [1, 1] int32 seed")
+        return pl.pallas_call(
+            functools.partial(_packed_kernel_tpu_rng, bits=bits,
+                              code_dtype=code_dtype, grid_j=C // bn),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+                pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((R, C), buf.dtype),
+            interpret=interpret,
+        )(seed, buf, scale_row, p_row)
     return pl.pallas_call(
         functools.partial(_packed_kernel, bits=bits, code_dtype=code_dtype),
         grid=grid,
@@ -107,6 +202,43 @@ def packed_wire_2d(buf: jax.Array, rand: jax.Array, scale_row: jax.Array,
         out_shape=jax.ShapeDtypeStruct((R, C), buf.dtype),
         interpret=interpret,
     )(buf, rand, scale_row, p_row)
+
+
+def packed_wire_mean_2d(buf: jax.Array, rand: jax.Array,
+                        scale_row: jax.Array, p_row: jax.Array,
+                        w_row: jax.Array, bits: int, n: int,
+                        interpret: bool = True,
+                        wire_dtype: str = "float32") -> jax.Array:
+    """Fused stacked transmit + weighted mean: buf/rand [N*R, C] (users
+    stacked along rows), scale_row/p_row/w_row [N*R, 1] -> [R, C] the
+    weighted sum over users of the dequantized rows. ONE kernel launch
+    for FL's whole quantize -> channel -> dequantize -> aggregate upload
+    (grid (R/bm, C/bn, N), user axis innermost so each output block is
+    revisited consecutively)."""
+    NR, C = buf.shape
+    assert NR % n == 0, (NR, n)
+    R = NR // n
+    bm = next(b for b in (BLOCK_M, 64, 32, 16, 8, 4, 2, 1) if R % b == 0)
+    bn = min(BLOCK_N, C)
+    assert C % bn == 0, (R, C, bm, bn)
+    gi = R // bm
+    grid = (gi, C // bn, n)
+    code_dtype = _code_dtype_for(wire_dtype)
+    return pl.pallas_call(
+        functools.partial(_packed_mean_kernel, bits=bits,
+                          code_dtype=code_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, u: (u * gi + i, j)),
+            pl.BlockSpec((bm, bn), lambda i, j, u: (u * gi + i, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, u: (u * gi + i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, u: (u * gi + i, 0)),
+            pl.BlockSpec((bm, 1), lambda i, j, u: (u * gi + i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, u: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(buf, rand, scale_row, p_row, w_row)
 
 
 def quant_channel_2d(x: jax.Array, rand: jax.Array, p: jax.Array,

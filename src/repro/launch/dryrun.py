@@ -49,7 +49,8 @@ from repro.launch.hlo_analysis import analyze as hlo_analyze
 
 def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
                mode: str = "cl", out_dir: str = RESULTS_DIR,
-               tag: str = "", microbatch: int = 0) -> dict:
+               tag: str = "", microbatch: int = 0,
+               sync: str = "barrier") -> dict:
     import dataclasses
     cfg = get_arch(arch)
     shape_cfg = SHAPES[shape_name]
@@ -60,13 +61,14 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
     record: dict = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
-        "n_chips": n_chips, "mode": mode, "tag": tag,
+        "n_chips": n_chips, "mode": mode, "tag": tag, "sync": sync,
     }
     t0 = time.time()
     try:
         with use_mesh(mesh):
             if shape_cfg.kind == "train":
-                lowered = _lower_train(cfg, shape_cfg, mesh, mode)
+                lowered = _lower_train(cfg, shape_cfg, mesh, mode,
+                                       sync=sync)
             elif shape_cfg.kind == "prefill":
                 lowered = _lower_prefill(cfg, shape_cfg, mesh, mode)
             else:
@@ -105,19 +107,20 @@ def dryrun_one(arch: str, shape_name: str, multi_pod: bool,
     return record
 
 
-def _wcfg_for(mode: str, mesh):
+def _wcfg_for(mode: str, mesh, sync: str = "barrier"):
     """The dry-run link config per mode: CL has no radio in the step;
     FL's user count is the mesh's pod-axis extent (each user one pod
-    slice; 2 users on a single-pod mesh, replicated)."""
+    slice; 2 users on a single-pod mesh, replicated). `sync` picks the
+    FL round schedule (barrier / delayed — the async overlap shape)."""
     if mode == "cl":
         return None
     if mode == "fl":
-        return WirelessConfig(mode="fl",
+        return WirelessConfig(mode="fl", sync=sync,
                               n_users=max(mesh.shape.get("pod", 1), 2))
     return WirelessConfig(mode="sl")
 
 
-def _lower_train(cfg, shape_cfg, mesh, mode):
+def _lower_train(cfg, shape_cfg, mesh, mode, sync: str = "barrier"):
     n_data = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
     if cfg.family == "tiny":
         # the paper model runs the tiny schemes (no lower_step); lower
@@ -136,7 +139,8 @@ def _lower_train(cfg, shape_cfg, mesh, mode):
         fn = jax.jit(step, in_shardings=(state_sh, batch_sh, None),
                      out_shardings=(state_sh, None), donate_argnums=(0,))
         return fn.lower(state_sds, batch_sds, key_sds())
-    scheme = build_scheme(_wcfg_for(mode, mesh), cfg=cfg, shape=shape_cfg)
+    scheme = build_scheme(_wcfg_for(mode, mesh, sync), cfg=cfg,
+                          shape=shape_cfg)
     return scheme.lower_step(mesh, n_data_shards=n_data)
 
 
@@ -180,6 +184,10 @@ def main():
     ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
     ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
     ap.add_argument("--mode", default="cl", choices=["cl", "fl", "sl"])
+    ap.add_argument("--sync", default="barrier",
+                    choices=["barrier", "delayed"],
+                    help="FL round schedule to lower (delayed: the "
+                         "async one-round-staleness carry)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--tag", default="")
     ap.add_argument("--microbatch", type=int, default=0,
@@ -196,7 +204,8 @@ def main():
             for mp in meshes:
                 r = dryrun_one(arch, shape, mp, mode=args.mode,
                                out_dir=args.out, tag=args.tag,
-                               microbatch=args.microbatch)
+                               microbatch=args.microbatch,
+                               sync=args.sync)
                 status = "OK " if r.get("ok") else "FAIL"
                 print(f"[{status}] {arch:24s} {shape:12s} {r['mesh']:8s} "
                       f"compile={r.get('compile_s', '-')}s "

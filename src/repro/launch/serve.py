@@ -63,6 +63,13 @@ def parse_args(argv=None):
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--mesh", default="none", choices=["none", "test"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--aot-warmup", action="store_true",
+                    help="compile the decode step before admitting "
+                         "requests and print aot_warmup_compile_wall_s= "
+                         "(near-zero on a warm persistent cache)")
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="skip the persistent XLA compile cache "
+                         "(launch/compile_cache.py)")
     return ap.parse_args(argv)
 
 
@@ -168,6 +175,9 @@ def legacy_main(args, cfg, mesh) -> dict:
 
 def main(argv=None) -> dict:
     args = parse_args(argv)
+    if not args.no_compile_cache:
+        from repro.launch.compile_cache import enable_persistent_cache
+        enable_persistent_cache()
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -185,6 +195,9 @@ def main(argv=None) -> dict:
         engine = ServeEngine(cfg, params, n_slots=args.batch, radio=radio,
                              temperature=args.temperature,
                              greedy=args.greedy)
+        if args.aot_warmup:
+            wall = engine.warmup_compile(trace.max_seq_len())
+            print(f"aot_warmup_compile_wall_s={wall:.3f}", flush=True)
         report = engine.serve(trace, args.engine)
 
     d = report.to_dict()

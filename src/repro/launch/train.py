@@ -69,6 +69,26 @@ def parse_args(argv=None):
     ap.add_argument("--n-users", type=int, default=3, help="FL users N")
     ap.add_argument("--local-steps", type=int, default=5,
                     help="FL local steps/epochs J")
+    ap.add_argument("--sync", default="barrier",
+                    choices=["barrier", "delayed"],
+                    help="FL round scheduling: barrier (paper) or "
+                         "delayed (async, one-round staleness — the "
+                         "sync overlaps the next local phase)")
+    ap.add_argument("--wire-dtype", default="float32",
+                    choices=["float32", "int8", "int4"],
+                    help="FL sync codeword container (int4: two "
+                         "codewords/byte, needs --quant-bits<=4)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="FL: fuse quantize->channel->dequantize->"
+                         "FedAvg into one Pallas launch")
+    ap.add_argument("--aot-warmup", action="store_true",
+                    help="compile the round program ahead of the first "
+                         "cycle and print aot_warmup_compile_wall_s= "
+                         "(pairs with the persistent compile cache: "
+                         "second runs report near-zero wall)")
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="skip the persistent XLA compile cache "
+                         "(launch/compile_cache.py)")
     ap.add_argument("--n-train", type=int, default=0,
                     help="corpus rows (0 = 3072 tiny / 512 scaled)")
     ap.add_argument("--n-test", type=int, default=0,
@@ -90,7 +110,10 @@ def build_wcfg(args) -> WirelessConfig | None:
         return WirelessConfig(mode="fl", snr_db=args.snr_db,
                               quant_bits=args.quant_bits,
                               local_steps=args.local_steps,
-                              n_users=args.n_users)
+                              n_users=args.n_users,
+                              sync=args.sync,
+                              wire_dtype=args.wire_dtype,
+                              use_kernel=args.use_kernel)
     return WirelessConfig(mode="sl", snr_db=args.snr_db,
                           quant_bits=args.quant_bits,
                           split_layer=args.split_layer)
@@ -98,6 +121,9 @@ def build_wcfg(args) -> WirelessConfig | None:
 
 def main(argv=None) -> dict:
     args = parse_args(argv)
+    if not args.no_compile_cache:
+        from repro.launch.compile_cache import enable_persistent_cache
+        enable_persistent_cache()
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -105,6 +131,7 @@ def main(argv=None) -> dict:
     wcfg = build_wcfg(args)
     n_train = args.n_train or (3072 if tiny else 512)
     n_test = args.n_test or (512 if tiny else 128)
+    mesh = make_test_mesh() if args.mesh == "test" else None
 
     if tiny:
         scheme = build_scheme(wcfg)
@@ -127,13 +154,22 @@ def main(argv=None) -> dict:
             kwargs = {}
         else:
             kwargs = {"optimizer": args.optimizer or "adamw"}
-        scheme = build_scheme(wcfg, cfg=cfg, shape=shape,
-                              steps_per_cycle=args.cycle_steps, **kwargs)
+        # build UNDER the mesh: the scaled FL scheme binds explicit
+        # in/out shardings to its executable at construction
+        with use_mesh(mesh):
+            scheme = build_scheme(wcfg, cfg=cfg, shape=shape,
+                                  steps_per_cycle=args.cycle_steps,
+                                  **kwargs)
         spc = args.local_steps if args.mode == "fl" else args.cycle_steps
         lr = args.lr if args.lr is not None else 3e-4
         lr_schedule = lambda e: lr               # noqa: E731
     cycles = max(1, math.ceil(args.steps / max(spc, 1)))
-    mesh = make_test_mesh() if args.mesh == "test" else None
+
+    if args.aot_warmup:
+        from repro.launch.compile_cache import warmup
+        with use_mesh(mesh):
+            wall = warmup(scheme)
+        print(f"aot_warmup_compile_wall_s={wall:.3f}", flush=True)
 
     history = []
     t0 = time.time()

@@ -65,18 +65,40 @@ def fl_round_tiny(key, user_states, user_batches, cfg, wcfg, lr):
 
 # --------------------------------------------------------- production (pod)
 def make_fl_train_step(cfg, shape_cfg, wcfg, n_users: int = 2,
-                       lr: float = 3e-4, momentum: float = 0.9):
+                       lr: float = 3e-4, momentum: float = 0.9,
+                       sync: str | None = None):
     """FL step for the assigned archs on the multi-pod mesh. State trees
     carry a leading [n_users] axis (logical axis "users" -> mesh "pod").
     batch: [n_users, local_batch, S].
 
-    Returns fl_step(state, batch, key[, lr]) -> (state, metrics): one
-    whole communication cycle — wcfg.local_steps pod-local SGD steps
-    per user, then the quantized channel sync — as ONE XLA program. The
-    builder's `lr` is only the default of the optional 4th argument, so
-    (like make_train_step) a whole lr schedule reuses one compiled
+    `sync` (default wcfg.sync, "barrier"):
+      * "barrier" — the PR 5 semantics, bit-for-bit: J local steps, then
+        the quantized sync whose aggregate the SAME round consumes.
+        fl_step(state, batch, key[, lr]) -> (state, metrics).
+      * "delayed" — DiLoCo-style async aggregation with ONE round of
+        staleness: round k's local phase starts from the aggregate of
+        round k-1's upload, while round k's sync transmits round k-1's
+        local output. The two subgraphs share no data edge inside one
+        program, so on a multi-core/pod backend the cross-pod collective
+        overlaps the next local phase instead of serializing after it.
+        fl_step(carry, batch, key[, lr]) -> (carry, metrics) with
+        carry = {"state": TrainState, "agg": stacked model tree}; seed
+        both sides with the initial broadcast weights. An all-erased
+        sync keeps the previous aggregate. The sync key is the same
+        fold_in(key, 999), so key-replay billing (wire.drawn_stacked_tx)
+        is IDENTICAL to barrier mode for the same round keys.
+
+    The builder's `lr` is only the default of the optional 4th argument,
+    so (like make_train_step) a whole lr schedule reuses one compiled
     executable. The sync honors the full link config incl. outage-ARQ
-    (wcfg.arq_attempts / arq_min_f2)."""
+    (wcfg.arq_attempts / arq_min_f2), `wcfg.wire_dtype` (int8/int4
+    packed codewords) and — under `wcfg.use_kernel` — the fused
+    quant->channel->dequant->mean Pallas launch
+    (wire.transmit_stacked_mean; allclose-but-not-bitwise to the
+    dequant-then-mean default, which is why it is opt-in)."""
+    sync = str(getattr(wcfg, "sync", "barrier")) if sync is None else sync
+    if sync not in ("barrier", "delayed"):
+        raise ValueError(f"unknown sync mode {sync!r}")
 
     def local_steps(state, batch, key, lr):
         local_step = make_local_step(cfg, lr, momentum)
@@ -92,47 +114,83 @@ def make_fl_train_step(cfg, shape_cfg, wcfg, n_users: int = 2,
     ge_p_gb = float(getattr(wcfg, "ge_p_gb", 0.0))
     ge_p_bg = float(getattr(wcfg, "ge_p_bg", 0.5))
     rounding = str(getattr(wcfg, "rounding", "nearest"))
+    wire_dtype = str(getattr(wcfg, "wire_dtype", "float32"))
+    use_kernel = bool(getattr(wcfg, "use_kernel", False))
+    if use_kernel and rounding != "nearest":
+        raise ValueError("the fused-mean kernel sync (wcfg.use_kernel) "
+                         "only rounds to nearest")
+    link = dict(bits=wcfg.quant_bits, snr_db=wcfg.snr_db,
+                fading=wcfg.fading, perfect=wcfg.perfect_channel,
+                arq_attempts=wcfg.arq_attempts,
+                arq_min_f2=wcfg.arq_min_f2, wire_dtype=wire_dtype)
 
-    def fl_step(state: TrainState, batch: dict, key: jax.Array, lr=lr):
-        state, metrics = local_steps(state, batch, key, lr)
-        # ---- quantized channel sync (the only cross-user collective):
-        # the whole N-user model upload is one packed-wire pass (the
-        # user axis stays a leading batch axis of the packed buffer, so
-        # the mean below remains the single cross-pod all-reduce)
+    def sync_agg(kch, model, fallback):
+        """Quantized channel sync + FedAvg of the stacked `model` tree
+        (the only cross-user collective): returns the aggregate
+        broadcast back to [n_users, ...], degrading to `fallback`
+        leaves when every user's upload erased."""
+        if use_kernel:
+            # fused path: quantize -> channel -> dequantize -> weighted
+            # mean in ONE Pallas launch, no [N, ...] received buffer
+            mean_tree, diag = WIRE.transmit_stacked_mean(
+                kch, model, impl="kernel", arq_max_tx=arq_max_tx,
+                ge_p_gb=ge_p_gb, ge_p_bg=ge_p_bg, **link)
+            alive = diag["n_alive"] > 0
+            return jax.tree.map(
+                lambda m, fb: jnp.where(
+                    alive, jnp.broadcast_to(m, fb.shape), fb),
+                mean_tree, fallback)
         fault_knobs = {}
         if arq_max_tx > 0 or ge_p_gb > 0.0 or rounding != "nearest":
             fault_knobs = dict(arq_max_tx=arq_max_tx, ge_p_gb=ge_p_gb,
                                ge_p_bg=ge_p_bg, rounding=rounding)
         received = WIRE.transmit_stacked(
-            jax.random.fold_in(key, SYNC_KEY_FOLD),
-            state.trainable["model"],
-            bits=wcfg.quant_bits, snr_db=wcfg.snr_db, fading=wcfg.fading,
-            perfect=wcfg.perfect_channel,
-            arq_attempts=wcfg.arq_attempts, arq_min_f2=wcfg.arq_min_f2,
-            return_diag=(arq_max_tx > 0), **fault_knobs)
+            kch, model, return_diag=(arq_max_tx > 0), **link,
+            **fault_knobs)
         if arq_max_tx > 0:
             # erasure-aware FedAvg, in-jit (the diag rides the same XLA
             # program): users with ANY erased packet carry zero weight;
-            # if everyone erased, each user keeps its own pre-sync
-            # weights (an abandoned round — the host replays the same
-            # draw via wire.drawn_stacked_tx to know it happened)
+            # if everyone erased, each user keeps its `fallback` leaf
+            # (an abandoned round — the host replays the same draw via
+            # wire.drawn_stacked_tx to know it happened)
             received, diag = received
             alive = ~diag["erased"].any(axis=1)                   # [N]
             n_alive = alive.sum().astype(jnp.float32)
             w = alive.astype(jnp.float32) / jnp.maximum(n_alive, 1.0)
 
-            def agg(r, leaf):
+            def agg(r, fb):
                 wb = w.reshape((-1,) + (1,) * (r.ndim - 1))
-                avg = jnp.broadcast_to((r * wb).sum(axis=0), leaf.shape)
-                return jnp.where(n_alive > 0, avg, leaf)
-            model = jax.tree.map(agg, received, state.trainable["model"])
-        else:
-            model = jax.tree.map(
-                lambda r, leaf: jnp.broadcast_to(jnp.mean(r, axis=0),
-                                                 leaf.shape),
-                received, state.trainable["model"])
+                avg = jnp.broadcast_to((r * wb).sum(axis=0), fb.shape)
+                return jnp.where(n_alive > 0, avg, fb)
+            return jax.tree.map(agg, received, fallback)
+        return jax.tree.map(
+            lambda r, fb: jnp.broadcast_to(jnp.mean(r, axis=0), fb.shape),
+            received, fallback)
+
+    def fl_step(state: TrainState, batch: dict, key: jax.Array, lr=lr):
+        state, metrics = local_steps(state, batch, key, lr)
+        # barrier: this round's aggregate is consumed by this round —
+        # the sync serializes after the local phase. Fallback on an
+        # all-erased sync: each user keeps its own pre-sync weights.
+        model = sync_agg(jax.random.fold_in(key, SYNC_KEY_FOLD),
+                         state.trainable["model"],
+                         state.trainable["model"])
         trainable = dict(state.trainable, model=model)
         return TrainState(trainable, state.opt_state, state.step), \
             jax.tree.map(lambda m: m.mean(), metrics)
 
-    return fl_step
+    def fl_step_delayed(carry: dict, batch: dict, key: jax.Array, lr=lr):
+        state, agg = carry["state"], carry["agg"]
+        # local phase k starts from round k-1's aggregate; the sync
+        # below transmits round k-1's LOCAL output. Neither subgraph
+        # consumes the other's result, so XLA may overlap the cross-pod
+        # collective with the local phase — the delayed-sync tentpole.
+        st_in = TrainState(dict(state.trainable, model=agg),
+                           state.opt_state, state.step)
+        new_state, metrics = local_steps(st_in, batch, key, lr)
+        new_agg = sync_agg(jax.random.fold_in(key, SYNC_KEY_FOLD),
+                           state.trainable["model"], agg)
+        return {"state": new_state, "agg": new_agg}, \
+            jax.tree.map(lambda m: m.mean(), metrics)
+
+    return fl_step_delayed if sync == "delayed" else fl_step

@@ -103,7 +103,10 @@ class Radio:
                        arq_min_f2=float(getattr(wcfg, "arq_min_f2", 0.25)),
                        bandwidth_hz=float(wcfg.bandwidth_hz),
                        tx_power_w=float(wcfg.tx_power_w),
-                       use_kernel=use_kernel,
+                       use_kernel=bool(use_kernel or
+                                       getattr(wcfg, "use_kernel", False)),
+                       wire_dtype=str(getattr(wcfg, "wire_dtype",
+                                              "float32")),
                        arq_max_tx=int(getattr(wcfg, "arq_max_tx", 0)),
                        ge_p_gb=float(getattr(wcfg, "ge_p_gb", 0.0)),
                        ge_p_bg=float(getattr(wcfg, "ge_p_bg", 0.5)),
@@ -127,10 +130,18 @@ class Radio:
             return pi_bad * float(a) + (1.0 - pi_bad) * base
         return base
 
+    def wire_width(self) -> int:
+        """Billed on-air bits per codeword: the quantizer width on the
+        float32 wire, the physical container width on the packed dtypes
+        (int8 -> 8, int4 -> 4; wire.wire_width)."""
+        return W.wire_width(self.wire_dtype, self.quant_bits)
+
     def payload_bits(self, tree) -> float:
         """Analytic one-transmission payload of `tree` at this radio's
-        quantization (wire.payload_bits — the one accounting helper)."""
-        return W.payload_bits(tree, self.quant_bits)
+        quantization (wire.payload_bits — the one accounting helper),
+        billed at the wire container width (`wire_width`)."""
+        return W.payload_bits(tree, self.quant_bits,
+                              wire_dtype=self.wire_dtype)
 
     def rate_bps(self) -> float:
         """Expected link rate E_f[C] in bits/s (Monte-Carlo ergodic
@@ -152,11 +163,12 @@ class Radio:
     def _deliver(self, payload, n_tx, sizes, erased=None) -> Delivery:
         n_tx = np.asarray(n_tx, np.float64)
         sizes = np.asarray(sizes, np.float64)
-        bits = float(self.quant_bits) * float((sizes * n_tx).sum())
+        width = float(self.wire_width())
+        bits = width * float((sizes * n_tx).sum())
         user_bits = user_n_tx = user_erased = None
         if n_tx.ndim == 2:      # stacked send: keep the per-user split
             user_bits = tuple(float(b) for b in
-                              self.quant_bits * (sizes * n_tx).sum(axis=1))
+                              width * (sizes * n_tx).sum(axis=1))
             user_n_tx = tuple(float(t) for t in n_tx.sum(axis=1))
         erased_bits = 0.0
         user_erased_bits = None
@@ -164,13 +176,12 @@ class Radio:
             # every transmission of an exhausted packet was wasted air
             # time: bill its whole attempted slice as erased
             e = np.asarray(erased, bool)
-            erased_bits = float(self.quant_bits) \
-                * float((sizes * n_tx * e).sum())
+            erased_bits = width * float((sizes * n_tx * e).sum())
             if n_tx.ndim == 2:
                 user_erased = tuple(bool(x) for x in e.any(axis=1))
                 user_erased_bits = tuple(
                     float(b) for b in
-                    self.quant_bits * (sizes * n_tx * e).sum(axis=1))
+                    width * (sizes * n_tx * e).sum(axis=1))
         outage_s = W.backoff_s(n_tx, self.arq_backoff_s)
         return Delivery(payload, bits, self.energy_j(bits),
                         float(n_tx.sum()), user_bits, user_n_tx,

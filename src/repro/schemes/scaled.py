@@ -213,6 +213,19 @@ class _ScaledScheme:
         split is each paradigm's (see subclass overrides)."""
         return 0.0, self._step_cost_flops() * steps_total
 
+    def warmup_compile(self) -> float:
+        """Ahead-of-time compile of the round program (the `--aot-warmup`
+        flag): lower on abstract inputs and compile NOW, returning the
+        wall seconds it took. With the persistent compile cache enabled
+        (launch/compile_cache.py) the first run pays the real XLA wall
+        here and seeds the cache; every later process gets a cache hit —
+        near-zero compile wall — at the same call."""
+        import time
+        lowered = self._lower_for_cost()   # tracing wall, never cached
+        t0 = time.perf_counter()
+        lowered.compile()
+        return time.perf_counter() - t0
+
 
 # ------------------------------------------------------------------- CL
 class ScaledCentralizedScheme(_ScaledScheme):
@@ -401,7 +414,22 @@ class ScaledFederatedScheme(_ScaledScheme):
     steps per user + the quantized stacked sync) as one XLA program;
     the sync is billed by replaying its fade/ARQ draw outside the jit
     on the same `fold_in(key, 999)` channel key. Reports the paper's
-    per-user bits convention (`bits_normalizer = n_users`)."""
+    per-user bits convention (`bits_normalizer = n_users`).
+
+    `wcfg.sync="delayed"` runs the one-round-staleness async schedule
+    (see make_fl_train_step): the scheme state becomes the carry
+    {"state": TrainState, "agg": stacked model tree}; billing is
+    UNCHANGED (same key fold, same draw — a delayed round puts the same
+    packets on the air as a barrier round). `evaluate` deploys the
+    aggregate view (the server's weights), not the in-flight locals.
+
+    Built under `use_mesh`, the round executable is jitted with
+    EXPLICIT in/out shardings (the same trees lower_step declares) and
+    `init` commits the state to them — otherwise cycle 0 (uncommitted
+    init arrays) and cycle 1 (jit-committed outputs) present different
+    arg shardings and XLA compiles the whole program twice (the 10.9 s
+    "steady-state" BENCH_scaled artifact was really this second compile
+    wall landing on the single post-compile sample)."""
     mode = "fl"
 
     def __init__(self, cfg, shape=None, wcfg=None, **kw):
@@ -418,9 +446,23 @@ class ScaledFederatedScheme(_ScaledScheme):
         super().__init__(cfg, shape, wcfg, **kw)
         self.n_users = wcfg.n_users
         self.local_steps = wcfg.local_steps
+        self.sync = str(getattr(wcfg, "sync", "barrier"))
         self.bits_normalizer = float(self.n_users)
-        self._exe = jax.jit(make_fl_train_step(cfg, self.shape, wcfg,
-                                               n_users=self.n_users))
+        step = make_fl_train_step(cfg, self.shape, wcfg,
+                                  n_users=self.n_users)
+        from repro.nn import current_mesh
+        self._mesh = current_mesh()
+        self._train_sh = None
+        if self._mesh is None:
+            self._exe = jax.jit(step)
+        else:
+            state_sh = train_state_sds_and_shardings(
+                cfg, None, self._mesh, "sgd", n_users=self.n_users)[1]
+            batch_sh = self._batch_shardings(self._mesh)
+            self._train_sh = self._as_train(state_sh)
+            self._exe = jax.jit(
+                step, in_shardings=(self._train_sh, batch_sh, None, None),
+                out_shardings=(self._train_sh, None))
         # per-packet payload of the stacked sync: one packet per
         # (user, model leaf), sized by the per-user leaf
         specs = M.param_specs(cfg)
@@ -428,6 +470,27 @@ class ScaledFederatedScheme(_ScaledScheme):
         self._packet_sizes = np.asarray(
             [int(np.prod(s.shape)) for s in
              jax.tree.leaves(shapes_tree(specs))], np.float64)
+
+    def _as_train(self, state_tree):
+        """The scheme-state train tree for one user-stacked TrainState
+        tree (works on arrays, ShapeDtypeStructs and shardings alike):
+        the state itself under barrier sync, the delayed-sync carry —
+        state + last aggregate (seeded with the same broadcast model)
+        — otherwise."""
+        if self.sync != "delayed":
+            return state_tree
+        return {"state": state_tree, "agg": state_tree.trainable["model"]}
+
+    def _batch_sds(self):
+        return {k: jax.ShapeDtypeStruct((self.n_users,) + v.shape,
+                                        v.dtype)
+                for k, v in M.input_specs(self.cfg, self.shape).items()}
+
+    def _batch_shardings(self, mesh):
+        batch_ax = {k: ("users",) + ax for k, ax in
+                    M.input_axes(self.cfg, self.shape).items()}
+        from repro.runtime.train_step import axes_to_shardings
+        return axes_to_shardings(self._batch_sds(), batch_ax, mesh)
 
     def init(self, seed: int, xtr, ytr):
         xtr = self._check_corpus(xtr)
@@ -437,10 +500,16 @@ class ScaledFederatedScheme(_ScaledScheme):
         user_states = jax.tree.map(
             lambda p: jnp.broadcast_to(p, (self.n_users,) + p.shape),
             state0)
+        train = self._as_train(user_states)
+        if self._train_sh is not None:
+            # commit to the executable's declared input shardings so
+            # round 0 presents the same arg signature as every later
+            # round — one compile for the whole run
+            train = jax.device_put(train, self._train_sh)
         per = len(xtr) // self.n_users
         shards = [(xtr[u * per:(u + 1) * per], ytr[u * per:(u + 1) * per])
                   for u in range(self.n_users)]
-        return SchemeState(train=user_states, data=shards), None
+        return SchemeState(train=train, data=shards), None
 
     def cycle_batches(self, state, rng, cycle):
         b = self.shape.global_batch
@@ -467,11 +536,13 @@ class ScaledFederatedScheme(_ScaledScheme):
             # SAME draw; replaying it here is what lets the host bill
             # the wasted air time of exhausted uploads
             n_tx, erased = out
-            erased_bits = float(r.quant_bits) * float(
+            erased_bits = float(r.wire_width()) * float(
                 (self._packet_sizes[None, :] * n_tx * erased).sum())
         else:
             n_tx = out
-        bits = float(r.quant_bits) * float(
+        # billed at the ON-WIRE width: quant_bits for abstract float32
+        # symbols, the container width for int8/int4 packed codewords
+        bits = float(r.wire_width()) * float(
             (self._packet_sizes[None, :] * n_tx).sum())
         new = SchemeState(st, state.data,
                           state.steps + self.local_steps,
@@ -487,11 +558,9 @@ class ScaledFederatedScheme(_ScaledScheme):
             s0 = init_train_state(k, self.cfg, None, "sgd")
             return jax.tree.map(lambda p: jnp.broadcast_to(
                 p, (self.n_users,) + p.shape), s0)
-        state_sds = jax.eval_shape(mk, key_sds())
-        batch_sds = {
-            k: jax.ShapeDtypeStruct((self.n_users,) + v.shape, v.dtype)
-            for k, v in M.input_specs(self.cfg, self.shape).items()}
-        return self._exe.lower(state_sds, batch_sds, key_sds(), 3e-4)
+        train_sds = self._as_train(jax.eval_shape(mk, key_sds()))
+        return self._exe.lower(train_sds, self._batch_sds(),
+                               key_sds(), 3e-4)
 
     def flops(self, steps_total: int):
         """One program IS a whole communication cycle of user-side local
@@ -500,7 +569,16 @@ class ScaledFederatedScheme(_ScaledScheme):
         return self._step_cost_flops() * cycles, 0.0
 
     def evaluate(self, state, xte, yte) -> float:
-        trainable = jax.tree.map(lambda p: p[0], state.train.trainable)
+        if self.sync == "delayed":
+            # deploy the SERVER's view: the last synced aggregate, with
+            # the non-model trainables (if any) from the local state
+            st = state.train["state"]
+            trainable = jax.tree.map(
+                lambda p: p[0],
+                dict(st.trainable, model=state.train["agg"]))
+        else:
+            trainable = jax.tree.map(lambda p: p[0],
+                                     state.train.trainable)
         return self._evaluate_trainable(trainable, xte, yte)
 
     # ----------------------------------------------------------- dryrun
@@ -509,15 +587,12 @@ class ScaledFederatedScheme(_ScaledScheme):
         mesh's `pod` axis (the "users" rule in nn/sharding.py)."""
         state_sds, state_sh = train_state_sds_and_shardings(
             self.cfg, None, mesh, "sgd", n_users=self.n_users)
-        batch_sds = {
-            k: jax.ShapeDtypeStruct((self.n_users,) + v.shape, v.dtype)
-            for k, v in M.input_specs(self.cfg, self.shape).items()}
-        batch_ax = {k: ("users",) + ax for k, ax in
-                    M.input_axes(self.cfg, self.shape).items()}
-        from repro.runtime.train_step import axes_to_shardings
-        batch_sh = axes_to_shardings(batch_sds, batch_ax, mesh)
+        train_sds = self._as_train(state_sds)
+        train_sh = self._as_train(state_sh)
+        batch_sds = self._batch_sds()
+        batch_sh = self._batch_shardings(mesh)
         step = make_fl_train_step(self.cfg, self.shape, self.wcfg,
                                   n_users=self.n_users)
-        fn = jax.jit(step, in_shardings=(state_sh, batch_sh, None),
-                     out_shardings=(state_sh, None), donate_argnums=(0,))
-        return fn.lower(state_sds, batch_sds, key_sds())
+        fn = jax.jit(step, in_shardings=(train_sh, batch_sh, None),
+                     out_shardings=(train_sh, None), donate_argnums=(0,))
+        return fn.lower(train_sds, batch_sds, key_sds())

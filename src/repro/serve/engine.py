@@ -194,6 +194,30 @@ class ServeEngine:
         self._compiled[S] = (step_sample, reset_slot)
         return self._compiled[S]
 
+    def warmup_compile(self, max_seq_len: int) -> float:
+        """AOT-compile the batched decode-sample step for `max_seq_len`
+        (what `serve.py --aot-warmup` calls before admitting requests);
+        returns the compile wall seconds. With the persistent compile
+        cache enabled (launch/compile_cache.py) later processes
+        deserialize here instead of recompiling."""
+        S = max(8, int(max_seq_len))
+        step_sample, _ = self._build(S)
+        B = self.n_slots
+        params_sds = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a), a.dtype),
+            self.params)
+        cache_sds = jax.eval_shape(
+            lambda: self._model.init_cache(self.cfg, B, S))
+        t0 = time.perf_counter()
+        step_sample.lower(
+            params_sds, cache_sds,
+            jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            jax.ShapeDtypeStruct((B,), jnp.int32),
+            jax.ShapeDtypeStruct((B, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((), jnp.float32),
+            greedy=self.greedy).compile()
+        return time.perf_counter() - t0
+
     # ------------------------------------------------------------- radio
     def _bill(self, res: RequestResult, d, leg: str) -> None:
         res.bits += d.bits

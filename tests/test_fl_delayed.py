@@ -1,0 +1,130 @@
+"""Delayed-sync (async, one-round-staleness) FL tests.
+
+Pins the three contracts `make_fl_train_step(sync="delayed")` ships:
+the aggregate a round produces is STALE (computed from the previous
+round's weights — independent of this round's batch), the sync
+transmits exactly what `wire.transmit_stacked` would on the same
+`fold_in(key, 999)` channel key, and the host-side key-replay billing
+is identical to barrier mode round for round (same draw, same packets
+on the air)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ShapeConfig, WirelessConfig, get_arch
+from repro.core import wire as W
+from repro.data.pipeline import synthetic_corpus
+from repro.runtime.fl_runtime import SYNC_KEY_FOLD, make_fl_train_step
+from repro.runtime.train_step import init_train_state
+from repro.schemes.scaled import ScaledFederatedScheme
+
+CFG = get_arch("qwen1.5-0.5b").reduced()
+SHAPE = ShapeConfig("t", 16, 2, "train")
+N_USERS, LOCAL = 2, 2
+WCFG = WirelessConfig(mode="fl", n_users=N_USERS, local_steps=LOCAL,
+                      quant_bits=4)
+
+
+def _carry(seed=0):
+    s0 = init_train_state(jax.random.PRNGKey(seed), CFG, None, "sgd")
+    stacked = jax.tree.map(
+        lambda p: jnp.broadcast_to(p, (N_USERS,) + p.shape), s0)
+    return {"state": stacked, "agg": stacked.trainable["model"]}
+
+
+def _batch(seed=0):
+    x, _ = synthetic_corpus(CFG, N_USERS * SHAPE.global_batch,
+                            SHAPE.seq_len, seed)
+    t = jnp.asarray(x).reshape(N_USERS, SHAPE.global_batch, SHAPE.seq_len)
+    return {"tokens": t, "labels": t}
+
+
+def test_delayed_aggregate_is_stale():
+    """Round k's new aggregate must depend ONLY on round k-1's weights:
+    swapping this round's batch changes the local states but not the
+    synced aggregate. Barrier mode is the contrast — its sync airs the
+    post-local weights, so the batch reaches the aggregate."""
+    step_d = jax.jit(make_fl_train_step(
+        CFG, SHAPE, dataclasses.replace(WCFG, sync="delayed"),
+        n_users=N_USERS))
+    key = jax.random.PRNGKey(5)
+    carry = _carry()
+    out_a, _ = step_d(carry, _batch(1), key, 3e-4)
+    out_b, _ = step_d(carry, _batch(2), key, 3e-4)
+    for la, lb in zip(jax.tree.leaves(out_a["agg"]),
+                      jax.tree.leaves(out_b["agg"])):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    diffs = [not np.array_equal(np.asarray(la), np.asarray(lb))
+             for la, lb in zip(
+                 jax.tree.leaves(out_a["state"].trainable["model"]),
+                 jax.tree.leaves(out_b["state"].trainable["model"]))]
+    assert any(diffs), "local phase ignored its batch"
+
+    step_b = jax.jit(make_fl_train_step(CFG, SHAPE, WCFG,
+                                        n_users=N_USERS))
+    state = _carry()["state"]
+    sa, _ = step_b(state, _batch(1), key, 3e-4)
+    sb, _ = step_b(state, _batch(2), key, 3e-4)
+    bdiffs = [not np.array_equal(np.asarray(la), np.asarray(lb))
+              for la, lb in zip(
+                  jax.tree.leaves(sa.trainable["model"]),
+                  jax.tree.leaves(sb.trainable["model"]))]
+    assert any(bdiffs), "barrier sync should see this round's batch"
+
+
+def test_delayed_trajectory_matches_handrolled_reference():
+    """Drive 3 delayed rounds; at each, the new aggregate must equal
+    the hand-rolled schedule — transmit the PREVIOUS carry's local
+    weights on `fold_in(round_key, 999)` through the identical link,
+    then mean over users — and the state handoff must chain (round k's
+    input model is round k-1's aggregate)."""
+    wcfg = dataclasses.replace(WCFG, sync="delayed")
+    step = jax.jit(make_fl_train_step(CFG, SHAPE, wcfg, n_users=N_USERS))
+    link = dict(bits=wcfg.quant_bits, snr_db=wcfg.snr_db,
+                fading=wcfg.fading, perfect=wcfg.perfect_channel,
+                arq_attempts=wcfg.arq_attempts,
+                arq_min_f2=wcfg.arq_min_f2)
+    carry = _carry()
+    for k in range(3):
+        key = jax.random.fold_in(jax.random.PRNGKey(3), k)
+        prev_model = carry["state"].trainable["model"]
+        carry, metrics = step(carry, _batch(k), key, 3e-4)
+        rx = W.transmit_stacked(jax.random.fold_in(key, SYNC_KEY_FOLD),
+                                prev_model, **link)
+        expect = jax.tree.map(
+            lambda r: jnp.broadcast_to(jnp.mean(r, axis=0), r.shape), rx)
+        for got, ref in zip(jax.tree.leaves(carry["agg"]),
+                            jax.tree.leaves(expect)):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                       rtol=0, atol=1e-7)
+        assert np.isfinite(float(metrics["loss"]))
+
+
+@pytest.mark.parametrize("faulty", [False, True])
+def test_billing_identical_delayed_vs_barrier(faulty):
+    """A delayed round puts the same packets on the air as a barrier
+    round: the key-replay bill (bits / n_tx / erased_bits) must match
+    cycle for cycle, including under bounded-ARQ erasures."""
+    extra = dict(snr_db=-8.0, arq_attempts=2, arq_max_tx=2,
+                 arq_min_f2=0.9) if faulty else {}
+    wb = dataclasses.replace(WCFG, **extra)
+    wd = dataclasses.replace(wb, sync="delayed")
+    x, y = synthetic_corpus(CFG, 64, SHAPE.seq_len, 0)
+    reports = {}
+    for name, w in (("barrier", wb), ("delayed", wd)):
+        sch = ScaledFederatedScheme(CFG, SHAPE, w)
+        st, _ = sch.init(0, x, y)
+        rng = np.random.default_rng(1)
+        rows = []
+        for c in range(3):
+            batch = sch.cycle_batches(st, rng, c)
+            st, rep = sch.round(st, batch, sch.round_key(0, c), 3e-4)
+            rows.append((rep.bits, rep.n_tx, rep.erased_bits))
+            assert np.isfinite(rep.loss)
+        reports[name] = rows
+        acc = sch.evaluate(st, x[:4], y[:4])
+        assert np.isfinite(acc)
+    assert reports["barrier"] == reports["delayed"]

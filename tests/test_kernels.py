@@ -257,3 +257,30 @@ def test_decode_attention_per_slot_lengths():
                                 lengths[i], interpret=True)
         np.testing.assert_allclose(np.asarray(out[i:i + 1]),
                                    np.asarray(one), rtol=1e-6, atol=1e-6)
+
+
+# ------------------------------------------------------- TPU in-kernel RNG
+def test_tpu_kernel_rng_flag_defaults_off():
+    """The in-kernel pltpu PRNG path is a real-TPU-only optimization;
+    the module flag ships OFF so every default path keeps the host
+    rand-buffer stream (and its goldens) bit-for-bit."""
+    from repro.kernels.quant_channel import kernel as K
+    assert K.TPU_KERNEL_RNG is False
+
+
+def test_tpu_kernel_rng_rejects_interpret_and_missing_seed():
+    """rng_mode="tpu" needs the compiled TPU lowering (pltpu.prng_*
+    does not exist in interpret mode) and an explicit seed tile."""
+    from repro.kernels.quant_channel.kernel import packed_wire_2d
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, 128), jnp.float32)
+    rand = jax.random.bits(key, (8, 128), jnp.uint32)
+    scale = jnp.ones((8, 1), jnp.float32)
+    p = jnp.zeros((8, 1), jnp.float32)
+    with pytest.raises(ValueError, match="interpret"):
+        packed_wire_2d(x, rand, scale, p, 8, interpret=True,
+                       rng_mode="tpu",
+                       seed=jnp.zeros((1, 1), jnp.int32))
+    with pytest.raises(ValueError, match="seed"):
+        packed_wire_2d(x, rand, scale, p, 8, interpret=False,
+                       rng_mode="tpu")

@@ -227,3 +227,138 @@ def test_fedavg_median_aggregate_still_works():
     med = jax.tree.leaves(synced)[0][0]
     # median of (1, 2, 30)*quant ~ 2 (robust to the outlier user)
     np.testing.assert_allclose(np.asarray(med), 2.0, atol=0.1)
+
+
+# -------------------------------------------------------- int4 on-wire dtype
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_int4_wire_bit_exact_vs_float(bits):
+    """Two-codewords-per-byte packing must be a pure storage change:
+    every Q<=4 crossing delivers bit-identical floats to the abstract
+    float32 wire (the nibble XOR of the bit-flip mask factorizes —
+    flips never carry across the nibble boundary)."""
+    tree = _ragged_tree(8)
+    key = jax.random.PRNGKey(21)
+    i4 = W.transmit_tree(key, tree, bits, 6.0, wire_dtype="int4")
+    f32 = W.transmit_tree(key, tree, bits, 6.0)
+    _assert_tree_equal(i4, f32)
+    stacked = jax.tree.map(lambda p: jnp.stack([p, 2 * p]), tree)
+    i4 = W.transmit_stacked(key, stacked, bits, 6.0, wire_dtype="int4")
+    f32 = W.transmit_stacked(key, stacked, bits, 6.0)
+    _assert_tree_equal(i4, f32)
+
+
+@pytest.mark.parametrize("bits", [2, 4])
+def test_int4_wire_kernel_bit_exact(bits):
+    """The Pallas kernel's nibble-codeword path == the jnp packed path
+    (the kernel carries nibble values in uint8 containers; values are
+    identical to the physically packed bytes)."""
+    tree = _ragged_tree(9)
+    key = jax.random.PRNGKey(22)
+    i4k = W.transmit_tree(key, tree, bits, 6.0, impl="kernel",
+                          wire_dtype="int4")
+    i4j = W.transmit_tree(key, tree, bits, 6.0, wire_dtype="int4")
+    _assert_tree_equal(i4k, i4j)
+    stacked = jax.tree.map(lambda p: jnp.stack([p, 0.5 * p]), tree)
+    i4k = W.transmit_stacked(key, stacked, bits, 6.0, impl="kernel",
+                             wire_dtype="int4")
+    i4j = W.transmit_stacked(key, stacked, bits, 6.0, wire_dtype="int4")
+    _assert_tree_equal(i4k, i4j)
+
+
+@given(seed=st.integers(0, 2**32 - 1), half_cols=st.integers(1, 64))
+@HS
+def test_nibble_pack_roundtrip_property(seed, half_cols):
+    """Property: any uint4 codeword row of even length survives
+    pack_nibbles -> unpack_nibbles exactly, and the packed buffer is
+    half the size."""
+    rng = np.random.default_rng(seed)
+    code = jnp.asarray(rng.integers(0, 16, (3, 2 * half_cols)), jnp.int32)
+    packed = Q.pack_nibbles(code)
+    assert packed.dtype == jnp.uint8
+    assert packed.shape == (3, half_cols)
+    out = Q.unpack_nibbles(packed)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(code))
+
+
+def test_int4_payload_bits_halving():
+    """int4 bills exactly half of int8 — and the same as the abstract
+    float32 wire at Q=4 (the paper's convention already charges 4
+    bits/elem there)."""
+    tree = _ragged_tree()
+    n = sum(l.size for l in jax.tree.leaves(tree))
+    assert W.payload_bits(tree, 4, wire_dtype="int4") == n * 4
+    assert W.payload_bits(tree, 4, wire_dtype="int8") == n * 8
+    assert W.payload_bits(tree, 4, wire_dtype="int4") \
+        == W.payload_bits(tree, 4, wire_dtype="int8") / 2
+    assert W.payload_bits(tree, 4, wire_dtype="int4") \
+        == W.payload_bits(tree, 4)
+    assert W.wire_width("int4", 4) == 4
+    assert W.wire_width("int8", 4) == 8
+    assert W.wire_width("float32", 7) == 7
+
+
+def test_int4_rejects_wide_codewords_and_other_impls():
+    tree = _ragged_tree()
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="quant_bits"):
+        W.transmit_tree(key, tree, 5, 6.0, wire_dtype="int4")
+    with pytest.raises(ValueError, match="impl"):
+        W.transmit_tree(key, tree, 4, 6.0, wire_dtype="int4",
+                        impl="per_leaf")
+
+
+# ------------------------------------------------- fused mean (FL collective)
+@pytest.mark.parametrize("wire_dtype", ["float32", "int8", "int4"])
+def test_stacked_mean_kernel_bitwise_matches_packed(wire_dtype):
+    """The ONE-launch Pallas mean (user axis as the innermost grid dim,
+    accumulated at the output block) is bitwise the jnp packed
+    reference (scan-ordered weighted sum)."""
+    tree = jax.tree.map(lambda p: jnp.stack([p, 2 * p, 0.5 * p]),
+                        _ragged_tree(5))
+    key = jax.random.PRNGKey(13)
+    mk, dk = W.transmit_stacked_mean(key, tree, 4, 6.0, impl="kernel",
+                                     wire_dtype=wire_dtype)
+    mj, dj = W.transmit_stacked_mean(key, tree, 4, 6.0, impl="packed",
+                                     wire_dtype=wire_dtype)
+    _assert_tree_equal(mk, mj)
+    assert int(dk["n_alive"]) == int(dj["n_alive"]) == 3
+
+
+def test_stacked_mean_allclose_legacy_dequant_then_mean():
+    """Same fades/rand/quantizer as transmit_stacked -> the fused mean
+    is the legacy mean up to summation order (allclose, not bitwise —
+    why wcfg.use_kernel is opt-in)."""
+    tree = jax.tree.map(lambda p: jnp.stack([p, 2 * p, 0.5 * p]),
+                        _ragged_tree(6))
+    key = jax.random.PRNGKey(14)
+    mean_tree, diag = W.transmit_stacked_mean(key, tree, 8, 6.0,
+                                              impl="kernel")
+    rx = W.transmit_stacked(key, tree, 8, 6.0, impl="packed")
+    for got, ref in zip(jax.tree.leaves(mean_tree),
+                        jax.tree.leaves(jax.tree.map(
+                            lambda r: jnp.mean(r, axis=0), rx))):
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-6, atol=1e-6)
+    assert float(diag["n_tx"].sum()) == 3 * 5
+
+
+def test_stacked_mean_erasures_drop_users():
+    """Bounded-ARQ erasures: users with any erased packet carry zero
+    weight; the erased mask and n_tx equal transmit_stacked's diag on
+    the same key (one draw, two consumers)."""
+    tree = jax.tree.map(lambda p: jnp.stack([p, p, p]), _ragged_tree(7))
+    key = jax.random.PRNGKey(77)
+    kw = dict(snr_db=-12.0, arq_attempts=2, arq_max_tx=2,
+              arq_min_f2=0.9)
+    mean_tree, diag = W.transmit_stacked_mean(key, tree, 8,
+                                              impl="kernel", **kw)
+    rx, ref_diag = W.transmit_stacked(key, tree, 8, return_diag=True,
+                                      impl="packed", **kw)
+    np.testing.assert_array_equal(np.asarray(diag["erased"]),
+                                  np.asarray(ref_diag["erased"]))
+    np.testing.assert_array_equal(np.asarray(diag["n_tx"]),
+                                  np.asarray(ref_diag["n_tx"]))
+    alive = ~np.asarray(ref_diag["erased"]).any(axis=1)
+    assert int(diag["n_alive"]) == int(alive.sum())
+    for leaf in jax.tree.leaves(mean_tree):
+        assert np.isfinite(np.asarray(leaf)).all()
