@@ -1,0 +1,182 @@
+"""Fleet-engine benchmark: bit-exact engine parity at fleet sizes the
+per-client loop can still handle, plus the struct-of-arrays scaling
+sweep 10^2 -> 10^5 clients (BENCH_fleet.json).
+
+Parity cases run BOTH engines (PopulationScheme loop vs FleetScheme)
+on identical <=16-client mixed fleets and record whether every
+per-round bill (bits / n_tx / energy_j / erased_bits / outage_s)
+matches bit-for-bit — the contract tests/test_fleet.py pins.
+
+The scaling sweep times one billed round per fleet size. At 10^2 and
+10^3 the loop runs as the reference (every client the same explicit
+512-sample shard, uniform-8 participation, so the wall clock measures
+ENGINE overhead, not training); beyond that only the fleet engine runs
+— 10^4/10^5 synthetic clients with bounded-ARQ erasures, faults, and
+Bernoulli sampling, streaming aggregate summaries with no per-client
+Python objects. The ci.sh gate reads `speedup_at_1e3` (>= 5x required)
+and `bills_match`.
+
+    PYTHONPATH=src python -m benchmarks.fleet --quick
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.configs.base import WirelessConfig
+from repro.schemes import (ClientBatch, ClientSpec, Experiment, FaultPlan,
+                           FleetScheme, ParticipationPolicy,
+                           PopulationScheme, corpus)
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+BILL_FIELDS = ("bits", "n_tx", "energy_j", "erased_bits", "outage_s")
+N_TRAIN, N_TEST = 4096, 512
+
+
+def _run(scheme, data, cycles, seed=0):
+    walls, t0 = [], [time.perf_counter()]
+
+    def tick(cyc, acc, rep):
+        walls.append(time.perf_counter() - t0[0])
+        t0[0] = time.perf_counter()
+
+    exp = Experiment(scheme, cycles=cycles, seed=seed, data=data,
+                     on_cycle=tick)
+    exp.run()
+    return exp, walls
+
+
+def _bills_match(ea, eb) -> bool:
+    return all(getattr(ra, f) == getattr(rb, f)
+               for ra, rb in zip(ea.reports, eb.reports)
+               for f in BILL_FIELDS)
+
+
+def _parity_case(specs, data, cycles=2, **kw) -> dict:
+    el, _ = _run(PopulationScheme(None, specs, **kw), data, cycles)
+    ef, _ = _run(FleetScheme(None, ClientBatch.from_specs(specs), **kw),
+                 data, cycles)
+    return {"n": len(specs), "cycles": cycles,
+            "bills_match": _bills_match(el, ef),
+            "round_bits": [r.bits for r in ef.reports],
+            "erased_bits": sum(r.erased_bits for r in ef.reports)}
+
+
+def _scale_specs(n: int, data):
+    """n loop-expressible clients: one shared 512-sample shard each (no
+    per-client corpus pressure), 7 compute classes, bounded ARQ."""
+    (xtr, ytr), _ = data
+    shard = (xtr[:512], ytr[:512])
+    base = WirelessConfig(mode="fl", quant_bits=8, arq_max_tx=3,
+                          snr_db=6.0)
+    return [ClientSpec.fl(base, shard=shard, name=f"c{i}",
+                          compute_s_per_step=float(i % 7))
+            for i in range(n)]
+
+
+def _scale_case(n: int, data, cycles: int, with_loop: bool) -> dict:
+    rec: dict = {"n": n, "cycles": cycles}
+    pol = ParticipationPolicy.uniform(min(8, n))
+    if with_loop:
+        specs = _scale_specs(n, data)
+        el, wl = _run(PopulationScheme(None, specs, policy=pol), data,
+                      cycles)
+        ef, wf = _run(FleetScheme(None, ClientBatch.from_specs(specs),
+                                  policy=pol), data, cycles)
+        rec["bills_match"] = _bills_match(el, ef)
+        rec["loop_round_wall_s"] = [round(w, 4) for w in wl]
+        rec["round_bits"] = [r.bits for r in ef.reports]
+    else:
+        batch = ClientBatch.synthetic(n, seed=0, arq_max_tx=3,
+                                      arq_backoff_s=0.001, ge_p_gb=0.05,
+                                      sl_frac=0.3,
+                                      compute_s_range=(0.0, 2.0),
+                                      p_outage=0.01, p_dropout=0.01)
+        ef, wf = _run(FleetScheme(None, batch, deadline_s=1e9,
+                                  policy=ParticipationPolicy
+                                  .bernoulli(0.5)),
+                      data, cycles)
+        rec["round_bits"] = [r.bits for r in ef.reports]
+        rec["erased_bits"] = sum(r.erased_bits for r in ef.reports)
+        rec["n_active"] = [r.metrics["n_active"] for r in ef.reports]
+    rec["fleet_round_wall_s"] = [round(w, 4) for w in wf]
+    # steady state: the first cycle pays the jit compiles
+    steady = wf[1:] or wf
+    rec["fleet_steady_wall_s"] = round(sum(steady) / len(steady), 4)
+    if with_loop:
+        lsteady = rec["loop_round_wall_s"][1:] or rec["loop_round_wall_s"]
+        rec["loop_steady_wall_s"] = round(sum(lsteady) / len(lsteady), 4)
+        rec["speedup"] = round(
+            rec["loop_steady_wall_s"] / max(rec["fleet_steady_wall_s"],
+                                            1e-9), 2)
+    return rec
+
+
+def run(full: bool = False) -> dict:
+    data = corpus(N_TRAIN, N_TEST, 0)
+    out: dict = {"cases": {}}
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    arq = WirelessConfig(mode="fl", quant_bits=8, arq_max_tx=3,
+                         ge_p_gb=0.2, arq_backoff_s=0.01, snr_db=4.0)
+
+    # --- engine parity at loop-expressible sizes
+    mixed = [ClientSpec.fl(base, snr_db=20.0),
+             ClientSpec.fl(base, snr_db=6.0, quant_bits=4),
+             ClientSpec.sl(base, snr_db=12.0, quant_bits=16),
+             ClientSpec.sl(base, snr_db=20.0)]
+    out["cases"]["parity_mixed_4"] = _parity_case(mixed, data)
+    faulty = [ClientSpec.fl(arq), ClientSpec.fl(arq, snr_db=8.0),
+              ClientSpec.sl(arq, quant_bits=16),
+              ClientSpec.sl(arq, quant_bits=16, local_epochs=2),
+              ClientSpec.cl(arq), ClientSpec.fl(arq, snr_db=12.0)]
+    out["cases"]["parity_faulty_6"] = _parity_case(
+        faulty, data, cycles=3,
+        policy=ParticipationPolicy.bernoulli(0.8), quorum=0.3,
+        fault_plan=FaultPlan(seed=1, p_outage=0.25, p_dropout=0.25))
+
+    # --- scaling sweep 10^2 -> 10^5 (loop reference up to 10^3)
+    cycles = 4 if full else 3
+    out["cases"]["scale_100"] = _scale_case(100, data, cycles, True)
+    out["cases"]["scale_1000"] = _scale_case(1000, data, cycles, True)
+    out["cases"]["scale_10000"] = _scale_case(10_000, data, cycles, False)
+    if full:
+        out["cases"]["scale_100000"] = _scale_case(100_000, data, cycles,
+                                                   False)
+
+    out["speedup_at_1e3"] = out["cases"]["scale_1000"]["speedup"]
+    out["bills_match"] = all(
+        rec["bills_match"] for rec in out["cases"].values()
+        if "bills_match" in rec)
+    return out
+
+
+def main(full: bool = False) -> list[str]:
+    res = run(full)
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "BENCH_fleet.json"), "w") as f:
+        json.dump(res, f, indent=1)
+    rows = []
+    for case, rec in res["cases"].items():
+        if "bills_match" in rec:
+            rows.append(f"fleet,{case},bills_match,"
+                        f"{int(rec['bills_match'])}")
+        if "speedup" in rec:
+            rows.append(f"fleet,{case},speedup,{rec['speedup']:.2f}")
+        if "fleet_steady_wall_s" in rec:
+            rows.append(f"fleet,{case},fleet_steady_wall_s,"
+                        f"{rec['fleet_steady_wall_s']:.4f}")
+    rows.append(f"fleet,all,speedup_at_1e3,{res['speedup_at_1e3']:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: parity + sweep up to 10^4")
+    ap.add_argument("--full", action="store_true",
+                    help="adds the 10^5 synthetic fleet")
+    args = ap.parse_args()
+    for r in main(full=args.full and not args.quick):
+        print(r)

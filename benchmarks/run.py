@@ -60,6 +60,11 @@ def _bench_population(full):
     return population.main(full)
 
 
+def _bench_fleet(full):
+    from benchmarks import fleet
+    return fleet.main(full)
+
+
 def _bench_scaled(full):
     from benchmarks import scaled
     return scaled.main(full)
@@ -85,6 +90,7 @@ BENCHES = {
     "extensions": _bench_extensions,
     "wire": _bench_wire,
     "population": _bench_population,
+    "fleet": _bench_fleet,
     "scaled": _bench_scaled,
     "robustness": _bench_robustness,
     "serve": _bench_serve,

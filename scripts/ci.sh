@@ -15,7 +15,9 @@
 # fleet-dynamics case — uniform-k sampling with one deadline-dropped
 # straggler) writes benchmarks/results/BENCH_population.json with
 # per-round wall time + bits, and the gate checks the dropped clients
-# billed zero. The robustness chaos smoke (benchmarks/robustness.py)
+# billed zero. The fleet-engine smoke (benchmarks/fleet.py) pins the
+# struct-of-arrays engine against the loop (bit-exact bills) and gates
+# its >=5x per-round advantage at 10^3 clients. The robustness chaos smoke (benchmarks/robustness.py)
 # sweeps FaultPlan outages x quorum on a bounded-ARQ fleet, kills each
 # case at the midpoint, resumes from the crash-consistent snapshot,
 # and fails unless every resumed run is bit-for-bit. The serving smoke
@@ -80,6 +82,24 @@ ok = ok and all(s["laggard"] in ("straggler", "sampled_out")
                 for s in dyn["per_client_status"])
 ok = ok and any(s["laggard"] == "straggler"
                 for s in dyn["per_client_status"])
+sys.exit(0 if ok else 1)
+EOF
+
+echo "=== fleet-engine smoke (engine parity + scaling sweep, BENCH_fleet.json) ==="
+# the struct-of-arrays fleet engine vs the per-client loop: bills must
+# match bit-for-bit on every parity case, and the engine must keep a
+# >=5x per-round advantage at 10^3 clients (steady state, post-compile)
+python -m benchmarks.fleet --quick
+python - <<'EOF'
+import json, sys
+res = json.load(open("benchmarks/results/BENCH_fleet.json"))
+s = res["cases"]["scale_1000"]
+print(f"fleet scale_1000: loop {s['loop_steady_wall_s']:.3f}s/round vs "
+      f"fleet {s['fleet_steady_wall_s']:.3f}s/round -> "
+      f"{s['speedup']:.1f}x (bills_match={res['bills_match']})")
+ok = res["bills_match"] and res["speedup_at_1e3"] >= 5.0
+# the bounded-ARQ chaos parity case really erased something
+ok = ok and res["cases"]["parity_faulty_6"]["erased_bits"] > 0
 sys.exit(0 if ok else 1)
 EOF
 

@@ -89,6 +89,22 @@ def parse_args(argv=None):
     ap.add_argument("--no-compile-cache", action="store_true",
                     help="skip the persistent XLA compile cache "
                          "(launch/compile_cache.py)")
+    ap.add_argument("--fleet-size", type=int, default=0,
+                    help="run an N-client fleet of the paper tiny model "
+                         "instead of the single-link schemes (one cycle "
+                         "per --steps step)")
+    ap.add_argument("--fleet-engine", default="synthetic",
+                    choices=["auto", "loop", "fleet", "synthetic"],
+                    help="fleet engine: loop = per-client "
+                         "PopulationScheme, fleet = struct-of-arrays "
+                         "FleetScheme on the same ClientSpecs (bills "
+                         "bit-identical to loop), synthetic = a "
+                         "ClientBatch with NO per-client Python objects "
+                         "(billing plane, scales to 10^5+), auto = loop")
+    ap.add_argument("--fleet-sl-frac", type=float, default=0.0,
+                    help="fraction of fleet clients on the SL paradigm")
+    ap.add_argument("--fleet-sample", type=int, default=8,
+                    help="uniform-k participation per round (0 = all)")
     ap.add_argument("--n-train", type=int, default=0,
                     help="corpus rows (0 = 3072 tiny / 512 scaled)")
     ap.add_argument("--n-test", type=int, default=0,
@@ -133,7 +149,41 @@ def main(argv=None) -> dict:
     n_test = args.n_test or (512 if tiny else 128)
     mesh = make_test_mesh() if args.mesh == "test" else None
 
-    if tiny:
+    data = None
+    if args.fleet_size > 0:
+        if not tiny:
+            raise SystemExit("--fleet-size runs the paper tiny model; "
+                             "drop --arch or use paper-tinylstm")
+        from repro.schemes import (ClientBatch, ClientSpec,
+                                   ParticipationPolicy, corpus)
+        data = corpus(n_train, n_test, args.seed)
+        kwargs = {}
+        if args.fleet_sample > 0:
+            kwargs["policy"] = ParticipationPolicy.uniform(
+                min(args.fleet_sample, args.fleet_size))
+        base = WirelessConfig(mode="fl", snr_db=args.snr_db,
+                              quant_bits=args.quant_bits)
+        if args.fleet_engine == "synthetic":
+            batch = ClientBatch.synthetic(args.fleet_size,
+                                          seed=args.seed,
+                                          quant_bits=args.quant_bits,
+                                          sl_frac=args.fleet_sl_frac)
+            scheme = build_scheme(base, clients=batch, **kwargs)
+        else:
+            # loop-expressible specs: one shared shard per client, so
+            # the corpus bounds the shard, not the fleet size
+            (xtr, ytr), _ = data
+            shard = (xtr[:BATCH], ytr[:BATCH])
+            n_sl = int(round(args.fleet_size * args.fleet_sl_frac))
+            specs = [(ClientSpec.sl(base, shard=shard, quant_bits=16,
+                                    name=f"sl{i}") if i < n_sl else
+                      ClientSpec.fl(base, shard=shard, name=f"fl{i}"))
+                     for i in range(args.fleet_size)]
+            scheme = build_scheme(base, clients=specs,
+                                  engine=args.fleet_engine, **kwargs)
+        spc = 1                  # one communication cycle per step
+        lr_schedule = (lambda e: args.lr) if args.lr is not None else None
+    elif tiny:
         scheme = build_scheme(wcfg)
         if args.mode == "fl":
             spc = args.local_steps * (n_train // args.n_users // BATCH)
@@ -177,10 +227,15 @@ def main(argv=None) -> dict:
     def on_cycle(cyc, acc, rep):
         if cyc % args.log_every == 0 or cyc == cycles - 1:
             dt = (time.time() - t0) / (cyc + 1)
+            extra = ""
+            if "fleet" in rep.metrics:   # streamed fleet summaries
+                counts = rep.metrics["fleet"]["status_counts"]
+                extra = "  [" + " ".join(
+                    f"{k}={v}" for k, v in sorted(counts.items())) + "]"
             print(f"cycle {cyc:4d}  loss {rep.loss:.4f}  acc {acc:.3f}  "
                   f"bits {rep.bits:.3e}  n_tx {rep.n_tx:.0f}  "
-                  f"energy {rep.energy_j:.3e} J  ({dt:.2f}s/cycle)",
-                  flush=True)
+                  f"energy {rep.energy_j:.3e} J  ({dt:.2f}s/cycle)"
+                  f"{extra}", flush=True)
             history.append({"cycle": cyc, "loss": rep.loss, "acc": acc,
                             "bits": rep.bits})
             assert np.isfinite(rep.loss), f"loss diverged at cycle {cyc}"
@@ -194,7 +249,7 @@ def main(argv=None) -> dict:
 
     with use_mesh(mesh):
         exp = Experiment(scheme, cycles=cycles, seed=args.seed,
-                         n_train=n_train, n_test=n_test,
+                         n_train=n_train, n_test=n_test, data=data,
                          lr_schedule=lr_schedule, on_cycle=on_cycle,
                          checkpoint_dir=args.ckpt_dir or None,
                          checkpoint_every=(args.ckpt_every

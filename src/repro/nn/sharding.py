@@ -22,6 +22,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 # Default rules. Order matters: earlier rules are preferred.
 DEFAULT_RULES: list[tuple[str, Any]] = [
     ("users", "pod"),           # FL user replicas live on the pod axis
+    ("clients", ("pod", "data")),   # fleet-engine per-client draws
     ("batch", ("pod", "data")),
     ("vocab", "model"),
     ("embed", "data"),          # fsdp sharding for the param embed dim

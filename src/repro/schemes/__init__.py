@@ -16,6 +16,7 @@ from repro.schemes.base import (BATCH, CFG, LR0, LR_DECAY, LR_EVERY,
 from repro.schemes.centralized import CentralizedScheme
 from repro.schemes.faults import FaultPlan
 from repro.schemes.federated import FederatedScheme
+from repro.schemes.fleet import ClientBatch, FleetScheme
 from repro.schemes.population import (ClientSpec, ParticipationPolicy,
                                       PopulationScheme)
 from repro.schemes.radio import Delivery, Radio
@@ -32,5 +33,6 @@ __all__ = [
     "CentralizedScheme", "FederatedScheme", "SplitScheme", "evaluate_sl",
     "ScaledCentralizedScheme", "ScaledFederatedScheme", "ScaledSplitScheme",
     "ClientSpec", "ParticipationPolicy", "PopulationScheme", "Delivery",
-    "Radio", "Experiment", "build_scheme", "FaultPlan",
+    "Radio", "Experiment", "build_scheme", "FaultPlan", "ClientBatch",
+    "FleetScheme",
 ]

@@ -76,3 +76,32 @@ class FaultPlan:
             drop = (~out) & (ud < self.p_dropout)
             frac = np.where(drop, np.clip(uf, 1e-3, 1.0 - 1e-3), np.nan)
         return out, frac
+
+    def events_arrays(self, cycle: int, p_outage, p_dropout):
+        """Heterogeneous-probability `events`: per-CLIENT outage and
+        dropout probabilities as [n] arrays, drawn from the identical
+        key stream (the scale engine's path — `schemes/fleet.py`).
+        Constant arrays reproduce `events(cycle, n)` bitwise: the
+        uniforms are the same draws and `u < p` compares elementwise
+        exactly as the scalar broadcast does. The dropout uniforms are
+        drawn iff ANY client has p_dropout > 0, matching the scalar
+        gate."""
+        p_outage = np.asarray(p_outage, np.float64)
+        p_dropout = np.asarray(p_dropout, np.float64)
+        n = int(p_outage.shape[0])
+        out = np.zeros(n, bool)
+        frac = np.full(n, np.nan)
+        if n == 0 or not (np.any(p_outage > 0.0)
+                          or np.any(p_dropout > 0.0)):
+            return out, frac
+        key = jax.random.fold_in(
+            jax.random.PRNGKey(self.seed + _PLAN_FOLD_SEED), cycle)
+        ko, kd, kf = jax.random.split(key, 3)
+        u = np.asarray(jax.random.uniform(ko, (n,)))
+        out = u < p_outage
+        if np.any(p_dropout > 0.0):
+            ud = np.asarray(jax.random.uniform(kd, (n,)))
+            uf = np.asarray(jax.random.uniform(kf, (n,)))
+            drop = (~out) & (ud < p_dropout)
+            frac = np.where(drop, np.clip(uf, 1e-3, 1.0 - 1e-3), np.nan)
+        return out, frac

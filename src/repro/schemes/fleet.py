@@ -1,0 +1,932 @@
+"""Million-client fleets: struct-of-arrays populations, one jitted
+clients-sharded round, streamed aggregate reports.
+
+`PopulationScheme` (schemes/population.py) walks a Python list of
+`ClientSpec`s and emits a `ClientReport` per client — fine for tens of
+clients, a wall at 10^5-10^6. This module is the scale engine behind
+the SAME Scheme/Experiment boundary:
+
+* `ClientBatch` — the population as arrays: paradigm codes,
+  `local_epochs` (J), `n_samples`, `compute_s_per_step`, `snr_db`,
+  quantizer widths and per-client fault probabilities live in [N]
+  numpy arrays; the few UNIQUE `WirelessConfig`/`Radio` objects live
+  in small lookup tables indexed by `wcfg_id`/`radio_id`. Build from
+  real specs (`ClientBatch.from_specs`, parity fleets) or directly at
+  scale (`ClientBatch.synthetic`, no per-client Python objects).
+
+* `FleetScheme` — per-round sampling, deadline/straggler cuts,
+  `FaultPlan` outages and per-client Radio billing over the arrays.
+  The channel/dynamics RNG replays run as jitted programs whose
+  [clients, ...] draws are sharded over the `clients` mesh axis
+  (nn/sharding.py rule; the draw is a pure function of the key, so
+  results are bitwise identical at every shard count). All decision
+  arithmetic and billing reductions happen host-side in float64 with
+  the exact expression order of the Python loop, which is what makes
+  small fleets reproduce `PopulationScheme` bills BIT-FOR-BIT
+  (tests/test_fleet.py pins it).
+
+Two planes:
+
+* billing/dynamics plane (always, any N, any FL/SL/CL mix): the drawn
+  ARQ transmission counts, erasures and backoff are pure functions of
+  (key, shapes, link knobs) — never of the payload — so the whole
+  fleet's round bill is computed without training anything. FL groups
+  replay `fl_upload`'s stacked-send draw (`wire._packet_fades` on the
+  identical key split); SL clients replay `sl_cycle_drawn_diag`
+  vmapped over a [clients, steps] grid.
+
+* training plane (opt-in via `train=`, all-FL fleets up to
+  `train_cap`): additionally runs the real `fl_local_phase` /
+  `fl_upload` on the identical keys, reproducing the Python loop's
+  trajectory (and the PR 3/4 goldens for degenerate fleets) while the
+  billing still flows through the one replay path.
+
+Reports stream as AGGREGATES: `RoundReport.clients` stays empty and
+`RoundReport.metrics["fleet"]` carries count/sum/histogram/quantile
+summaries (plus an opt-in top-k per-client spill, `spill_top_k`) — so
+checkpoints hold O(1) state per round instead of O(N) report dicts.
+Per-client arrays for the LAST round stay inspectable via
+`FleetScheme.last_round_detail` (tests and benchmarks use it; it is
+not checkpointed). Billing rules: docs/ACCOUNTING.md §Fleet-at-scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import WirelessConfig
+from repro.core import wire as W
+from repro.nn import sharding as SH
+from repro.runtime.train_step import TrainState, init_train_state
+from repro.schemes.base import (BATCH, CFG, RoundReport, SchemeState,
+                                evaluate, step_flops, user_side_flops_sl)
+from repro.schemes.faults import FaultPlan
+from repro.schemes.federated import (draw_local_epochs, fl_local_phase,
+                                     fl_upload)
+from repro.schemes.population import (ClientSpec, ParticipationPolicy,
+                                      aggregate_weighted)
+from repro.schemes.radio import Delivery, Radio
+from repro.schemes.split import _wcfg_key, sl_bits_per_step
+
+# paradigm codes in ClientBatch.paradigm / status codes in the round
+# detail — the string names match PopulationScheme's ClientReport.status
+PARADIGMS = ("fl", "sl", "cl")
+STATUS_NAMES = ("ok", "sampled_out", "straggler", "erased",
+                "dropped_midround")
+_OK, _SAMPLED_OUT, _STRAGGLER, _ERASED, _DROPPED = range(5)
+
+
+# --------------------------------------------------------------- batch
+@dataclasses.dataclass(frozen=True)
+class ClientBatch:
+    """A population as struct-of-arrays ([N] each) plus small lookup
+    tables for the unique channel configs. The arrays are the ONLY
+    per-client state — no per-client Python objects ride the round."""
+    paradigm: np.ndarray            # [N] int8 codes into PARADIGMS
+    local_epochs: np.ndarray        # [N] int32 (J for FL)
+    n_samples: np.ndarray           # [N] int64 shard sizes (0 = share)
+    compute_s_per_step: np.ndarray  # [N] float64 device compute class
+    wcfg_id: np.ndarray             # [N] int32 into `wcfgs`
+    radio_id: np.ndarray            # [N] int32 into `radios`
+    wcfgs: tuple                    # unique WirelessConfig table
+    radios: tuple                   # unique Radio table (eq-deduped)
+    # per-client fault-plan state; None = use the FaultPlan's scalars
+    p_outage: Optional[np.ndarray] = None    # [N] float64
+    p_dropout: Optional[np.ndarray] = None   # [N] float64
+    names: Optional[tuple] = None            # per-client labels
+    shards: Optional[tuple] = None           # explicit (x, y) overrides
+    specs: Optional[tuple] = None            # kept for parity fleets
+
+    @property
+    def n(self) -> int:
+        return int(self.paradigm.shape[0])
+
+    def __len__(self) -> int:
+        return self.n
+
+    @property
+    def snr_db(self) -> np.ndarray:
+        """[N] float64 per-client link budget (from the radio table)."""
+        return np.asarray([r.snr_db for r in self.radios],
+                          np.float64)[self.radio_id]
+
+    @property
+    def quant_bits(self) -> np.ndarray:
+        """[N] int32 per-client quantizer width."""
+        return np.asarray([r.quant_bits for r in self.radios],
+                          np.int32)[self.radio_id]
+
+    @classmethod
+    def from_specs(cls, specs: Sequence[ClientSpec]) -> "ClientBatch":
+        """Columnarize a ClientSpec population (parity path): unique
+        WirelessConfigs/Radios dedupe into the tables, everything else
+        into arrays. Radio dedup is by equality — two specs whose
+        configs build equal Radios land in the same radio_id, exactly
+        the grouping key `PopulationScheme` uses."""
+        specs = tuple(specs)
+        if not specs:
+            raise ValueError("ClientBatch.from_specs needs >= 1 spec")
+        n = len(specs)
+        paradigm = np.empty(n, np.int8)
+        local_epochs = np.empty(n, np.int32)
+        n_samples = np.empty(n, np.int64)
+        compute = np.empty(n, np.float64)
+        wcfg_id = np.empty(n, np.int32)
+        radio_id = np.empty(n, np.int32)
+        wcfgs: list = []
+        wmap: dict = {}
+        radios: list = []
+        rmap: dict = {}
+        for i, s in enumerate(specs):
+            if s.paradigm not in PARADIGMS:
+                raise ValueError(f"unknown paradigm {s.paradigm!r}")
+            paradigm[i] = PARADIGMS.index(s.paradigm)
+            local_epochs[i] = s.local_epochs
+            n_samples[i] = s.n_samples
+            compute[i] = s.compute_s_per_step
+            wk = _wcfg_key(s.wcfg)
+            if wk not in wmap:
+                wmap[wk] = len(wcfgs)
+                wcfgs.append(s.wcfg)
+            wcfg_id[i] = wmap[wk]
+            r = s.radio
+            if r not in rmap:
+                rmap[r] = len(radios)
+                radios.append(r)
+            radio_id[i] = rmap[r]
+        return cls(paradigm, local_epochs, n_samples, compute, wcfg_id,
+                   radio_id, tuple(wcfgs), tuple(radios),
+                   names=tuple(s.name for s in specs),
+                   shards=tuple(s.shard for s in specs), specs=specs)
+
+    @classmethod
+    def synthetic(cls, n: int, seed: int = 0,
+                  snr_classes: Sequence[float] = (4.0, 8.0, 12.0, 20.0),
+                  quant_bits: int = 8, local_epochs: int = 1,
+                  n_samples: int = BATCH,
+                  compute_s_range: tuple = (0.0, 0.0),
+                  sl_frac: float = 0.0, fading: bool = True,
+                  arq_max_tx: int = 0, arq_backoff_s: float = 0.0,
+                  ge_p_gb: float = 0.0,
+                  p_outage: float = 0.0,
+                  p_dropout: float = 0.0) -> "ClientBatch":
+        """An n-client synthetic fleet with NO per-client Python
+        objects: a few discrete link classes (one Radio per SNR class x
+        paradigm), continuous per-client compute heterogeneity, and
+        `n_samples` samples per client taken at face value (the billing
+        plane never materializes shards, so no corpus is needed)."""
+        if n < 1:
+            raise ValueError(f"synthetic fleet needs n >= 1, got {n}")
+        if n_samples < BATCH:
+            raise ValueError(f"n_samples must be >= one batch ({BATCH})")
+        rng = np.random.default_rng(seed)
+        n_sl = int(round(n * float(sl_frac)))
+        paradigm = np.zeros(n, np.int8)
+        if n_sl:
+            paradigm[rng.choice(n, n_sl, replace=False)] = 1
+        cls_idx = rng.integers(0, len(snr_classes), n)
+        lo, hi = compute_s_range
+        compute = (np.full(n, float(lo)) if hi <= lo
+                   else rng.uniform(lo, hi, n))
+        wcfgs: list = []
+        radios: list = []
+        wcfg_id = np.empty(n, np.int32)
+        for ci, snr in enumerate(snr_classes):
+            for mode in ("fl", "sl"):
+                wcfgs.append(WirelessConfig(
+                    mode=mode, snr_db=float(snr),
+                    quant_bits=(16 if mode == "sl" else quant_bits),
+                    fading=fading, arq_max_tx=arq_max_tx,
+                    arq_backoff_s=arq_backoff_s, ge_p_gb=ge_p_gb))
+                radios.append(Radio.from_wcfg(wcfgs[-1]))
+        wcfg_id = (cls_idx * 2 + paradigm.astype(np.int64)).astype(np.int32)
+        pf = float(p_outage)
+        pd = float(p_dropout)
+        return cls(paradigm, np.full(n, int(local_epochs), np.int32),
+                   np.full(n, int(n_samples), np.int64), compute,
+                   wcfg_id, wcfg_id.copy(), tuple(wcfgs), tuple(radios),
+                   p_outage=(np.full(n, pf) if pf > 0 else None),
+                   p_dropout=(np.full(n, pd) if pd > 0 else None))
+
+
+# ------------------------------------------------- jitted draw replays
+def _mesh_key():
+    """The active mesh (thread-local, nn/sharding.py). It keys the jit
+    caches below: `Mesh` is hashable, and re-tracing per mesh is what
+    keeps the sharding constraints honest when the mesh changes."""
+    return SH._CTX.mesh
+
+
+@functools.lru_cache(maxsize=512)
+def _fl_draw_exe(knobs, n: int, n_packets: int, mesh):
+    """Jitted replay of one FL group's stacked-upload fade draw:
+    key -> ([n, P] int32 n_tx, [n, P] bool erased), the identical
+    `split` + `wire._packet_fades` stream `Radio.send_stacked` consumes
+    inside `fl_upload`. Shape-specialized per active-count (threefry
+    draws do NOT slice-align across shapes), cached so steady-state
+    participation compiles once; the [clients, packets] draw is sharded
+    over the `clients` mesh axis when a mesh is active."""
+    fading, attempts, min_f2, max_tx, p_gb, p_bg = knobs
+
+    def draw(k_send):
+        kf, _ = jax.random.split(k_send)
+        _, n_tx, erased = W._packet_fades(kf, n, n_packets, fading,
+                                          attempts, min_f2, max_tx,
+                                          p_gb, p_bg)
+        return n_tx, erased
+
+    if mesh is None:
+        return jax.jit(draw)
+    shd = SH.named_sharding((n, n_packets), ("clients", None), mesh)
+    return jax.jit(draw, out_shardings=(shd, shd))
+
+
+@functools.lru_cache(maxsize=512)
+def _sl_draw_exe(knobs, n_steps: int, m: int, mesh):
+    """Jitted replay of `split.sl_cycle_drawn_diag` for a whole cohort
+    of SL clients sharing (link knobs, steps-per-round): ([m, 2] raw
+    cycle keys, [m] start counters) -> per-client (n_tx i32, n_erased
+    i32, backoff f32) sums. The inner per-step key folds and sums are
+    the loop's exactly — vmapping over clients changes neither — so
+    each client's triple is bitwise the scalar call's."""
+    fading, attempts, min_f2, max_tx, p_gb, p_bg = knobs
+    kw = dict(fading=fading, perfect=False, arq_attempts=attempts,
+              arq_min_f2=min_f2, arq_max_tx=max_tx, ge_p_gb=p_gb,
+              ge_p_bg=p_bg)
+
+    def per_client(key, start):
+        def one(s):
+            ck = jax.random.fold_in(jax.random.fold_in(key, s), 0)
+            up = W.drawn_tree_diag(ck, 1, **kw)
+            down = W.drawn_tree_diag(jax.random.fold_in(ck, 1), 1, **kw)
+            return up[0] + down[0], up[1] + down[1], up[2] + down[2]
+
+        tx, er, bo = jax.vmap(one)(start + jnp.arange(n_steps))
+        return tx.sum(), er.sum(), bo.sum()
+
+    def draw(keys, starts):
+        return jax.vmap(per_client)(keys, starts)
+
+    if mesh is None:
+        return jax.jit(draw)
+    shd = SH.named_sharding((m,), ("clients",), mesh)
+    return jax.jit(draw, out_shardings=(shd, shd, shd))
+
+
+@functools.lru_cache(maxsize=128)
+def _key_fan_exe(m: int):
+    """key, [m] consts -> [m] folded raw keys (vmapped fold_in — bitwise
+    the per-element eager fold, without m Python dispatches)."""
+    return jax.jit(jax.vmap(jax.random.fold_in, in_axes=(None, 0)))
+
+
+# --------------------------------------------------------------- state
+@dataclasses.dataclass
+class _FleetState:
+    """Per-round fleet state (rides SchemeState.train): the aggregated
+    global model, the training plane's stacked per-group TrainStates
+    ([] on the billing plane), and the cumulative step counters as
+    arrays — O(1) + O(N ints) state, never O(N) report objects."""
+    glob: dict                      # {"model": tree}
+    groups: list                    # training plane: stacked TrainState
+    client_steps: np.ndarray        # [N] int64 cumulative optimizer steps
+    sl_steps: np.ndarray            # [n_sl] int64 cumulative SL steps
+
+
+jax.tree_util.register_dataclass(
+    _FleetState,
+    data_fields=["glob", "groups", "client_steps", "sl_steps"],
+    meta_fields=[])
+
+
+def _summary(arr: np.ndarray, bins: int) -> dict:
+    """JSON-safe streamed summary of one [N] metric: count/sum/moments,
+    quantiles, histogram. Plain python floats/ints/lists only, so the
+    dict survives a checkpoint JSON round-trip bit-for-bit."""
+    a = np.asarray(arr, np.float64)
+    if a.size == 0:
+        return {"count": 0, "sum": 0.0}
+    qs = np.quantile(a, [0.5, 0.9, 0.99])
+    counts, edges = np.histogram(a, bins=bins)
+    return {"count": int(a.size), "sum": float(a.sum()),
+            "mean": float(a.mean()), "min": float(a.min()),
+            "max": float(a.max()), "p50": float(qs[0]),
+            "p90": float(qs[1]), "p99": float(qs[2]),
+            "hist_counts": [int(c) for c in counts],
+            "hist_edges": [float(e) for e in edges]}
+
+
+def _seq_sum(arr: np.ndarray) -> float:
+    """Sequential left-fold sum in index order — the exact reduction
+    `sum(r.x for r in reports)` performs in the Python loop, so fleet
+    totals match PopulationScheme totals bitwise (np.sum pairwise-adds
+    and can differ in the last ulp)."""
+    return float(sum(arr.tolist()))
+
+
+# -------------------------------------------------------------- scheme
+class FleetScheme:
+    """`ClientBatch` fleets behind the standard Scheme protocol —
+    `Experiment` drives it unchanged. See the module docstring for the
+    two planes and the parity contract with `PopulationScheme`."""
+    mode = "fleet"
+
+    def __init__(self, wcfg=None, batch: Optional[ClientBatch] = None,
+                 capture: bool = False,
+                 policy: Optional[ParticipationPolicy] = None,
+                 deadline_s: Optional[float] = None,
+                 deadline_jitter_sigma: float = 0.0,
+                 quorum: float = 0.0,
+                 fault_plan: Optional[FaultPlan] = None,
+                 train: str = "auto", train_cap: int = 32,
+                 spill_top_k: int = 0, hist_bins: int = 8):
+        if batch is None or batch.n == 0:
+            raise ValueError("FleetScheme needs a non-empty ClientBatch")
+        if capture:
+            raise ValueError("privacy capture records per-client "
+                             "observations — use PopulationScheme for "
+                             "capture fleets")
+        self.wcfg = wcfg or WirelessConfig(mode="fl")
+        self.batch = batch
+        for cfg in (self.wcfg,) + batch.wcfgs:
+            if getattr(cfg, "aggregate", "mean") != "mean":
+                raise ValueError(
+                    "fleet aggregation is sample-weighted FedAvg; "
+                    "aggregate='median' is not supported")
+        self.policy = policy or ParticipationPolicy.full()
+        self.policy.validate(batch.n)
+        self.deadline_s = deadline_s
+        if deadline_jitter_sigma < 0.0:
+            raise ValueError("deadline_jitter_sigma must be >= 0, got "
+                             f"{deadline_jitter_sigma}")
+        if deadline_jitter_sigma > 0.0 and deadline_s is None:
+            raise ValueError("deadline_jitter_sigma needs a deadline_s "
+                             "to act on")
+        self.deadline_jitter_sigma = float(deadline_jitter_sigma)
+        if not 0.0 <= quorum <= 1.0:
+            raise ValueError(f"quorum must be in [0, 1], got {quorum}")
+        self.quorum = float(quorum)
+        self.fault_plan = fault_plan
+        # per-client fault probabilities: batch arrays win, else the
+        # plan's scalars broadcast (bitwise `FaultPlan.events` then)
+        pl_out = fault_plan.p_outage if fault_plan else 0.0
+        pl_drop = fault_plan.p_dropout if fault_plan else 0.0
+        self._p_out = (np.asarray(batch.p_outage, np.float64)
+                       if batch.p_outage is not None
+                       else np.full(batch.n, float(pl_out)))
+        self._p_drop = (np.asarray(batch.p_dropout, np.float64)
+                        if batch.p_dropout is not None
+                        else np.full(batch.n, float(pl_drop)))
+        if (batch.p_outage is not None or batch.p_dropout is not None) \
+                and fault_plan is None:
+            # per-client probabilities still need a seed stream
+            self.fault_plan = fault_plan = FaultPlan()
+        self._plan_on = fault_plan is not None and (
+            bool(np.any(self._p_out > 0.0))
+            or bool(np.any(self._p_drop > 0.0)))
+        self._faults_on = (self.quorum > 0.0 or self._plan_on
+                           or any(r.arq_max_tx > 0 for r in batch.radios))
+        self.spill_top_k = int(spill_top_k)
+        self.hist_bins = int(hist_bins)
+        self.radio = Radio.from_wcfg(self.wcfg)
+        self.captures: dict = {}
+
+        self._fl_idx = np.flatnonzero(batch.paradigm == 0)
+        self._sl_idx = np.flatnonzero(batch.paradigm == 1)
+        self._cl_idx = np.flatnonzero(batch.paradigm == 2)
+        sl_cfs = {batch.wcfgs[batch.wcfg_id[i]].compress_factor
+                  for i in self._sl_idx}
+        if len(sl_cfs) > 1:
+            raise ValueError("SL clients must share compress_factor "
+                             f"(one codec shape), got {sorted(sl_cfs)}")
+        if train not in ("auto", "on", "off"):
+            raise ValueError(f"train must be auto|on|off, got {train!r}")
+        all_fl = self._sl_idx.size == 0 and self._cl_idx.size == 0
+        if train == "on" and not (all_fl and batch.n <= train_cap):
+            raise ValueError(
+                "the training plane is all-FL fleets up to train_cap="
+                f"{train_cap} (got n={batch.n}); larger or mixed fleets "
+                "run the billing/dynamics plane")
+        self.train_on = (train == "on"
+                         or (train == "auto" and all_fl
+                             and batch.n <= train_cap))
+        if self._cl_idx.size and batch.specs is None:
+            raise ValueError("CL members upload a real corpus at init — "
+                             "build the batch via ClientBatch.from_specs")
+        # same schedule conventions as PopulationScheme
+        self.epochs_per_cycle = int(batch.local_epochs.max())
+        self.bits_normalizer = (float(batch.n)
+                                if self._sl_idx.size == 0
+                                and self._cl_idx.size == 0 else 1.0)
+        # per-client link coefficient arrays off the radio tables
+        rt = batch.radios
+        rid = batch.radio_id
+        self._rate = np.asarray([r.rate_bps() for r in rt],
+                                np.float64)[rid]
+        self._tx_power = np.asarray([r.tx_power_w for r in rt],
+                                    np.float64)[rid]
+        self._exp_tx = np.asarray([r.expected_tx() for r in rt],
+                                  np.float64)[rid]
+        self._qbits = np.asarray([r.quant_bits for r in rt],
+                                 np.float64)[rid]
+        self._arq_max = np.asarray([r.arq_max_tx for r in rt],
+                                   np.float64)[rid]
+        self._arq_backoff = np.asarray([r.arq_backoff_s for r in rt],
+                                       np.float64)[rid]
+        # per-step SL payload (both legs) at each client's quantizer
+        self._sl_step_bits = np.zeros(batch.n, np.float64)
+        for i in self._sl_idx:
+            wc = batch.wcfgs[batch.wcfg_id[i]]
+            self._sl_step_bits[i] = sl_bits_per_step(
+                wc, rt[rid[i]].quant_bits)
+        self._key_ctx = None
+        self._spe: Optional[np.ndarray] = None
+        self.last_round_detail: Optional[dict] = None
+        self._final_client_steps = np.zeros(batch.n, np.int64)
+
+    # ------------------------------------------------------------ setup
+    def _shard_lens(self, n_corpus: int) -> np.ndarray:
+        """Analytic per-client shard sizes, mirroring
+        `PopulationScheme._shards_for`'s assignment rule (explicit
+        shard wins; then n_samples; n_samples=0 splits the remainder).
+        The billing plane needs only the SIZES — no shard arrays are
+        ever materialized at scale."""
+        b = self.batch
+        explicit = np.zeros(b.n, bool)
+        lens = np.asarray(b.n_samples, np.int64).copy()
+        if b.shards is not None:
+            for i, sh in enumerate(b.shards):
+                if sh is not None:
+                    explicit[i] = True
+                    lens[i] = len(sh[0])
+        free = ~explicit
+        claimed = int(lens[free].sum())
+        n_default = int((free & (lens == 0)).sum())
+        default = max((n_corpus - claimed) // n_default, 0) \
+            if n_default else 0
+        lens[free & (lens == 0)] = default
+        if np.any(lens < BATCH):
+            i = int(np.argmin(lens))
+            raise ValueError(f"client {i} shard has {int(lens[i])} "
+                             f"samples < one batch ({BATCH})")
+        return lens
+
+    def _materialize_shards(self, xtr, ytr):
+        """Real per-client shards (training plane / CL uploads only) —
+        the loop's sequential-slice assignment, identically."""
+        b = self.batch
+        out, cursor = [], 0
+        lens = self._shard_lens(len(xtr))
+        for i in range(b.n):
+            sh = b.shards[i] if b.shards is not None else None
+            if sh is not None:
+                out.append((np.asarray(sh[0]), np.asarray(sh[1])))
+                continue
+            n = int(lens[i])
+            if cursor + n > len(xtr):
+                raise ValueError(f"client shards exceed the corpus "
+                                 f"({cursor + n} > {len(xtr)})")
+            out.append((xtr[cursor:cursor + n], ytr[cursor:cursor + n]))
+            cursor += n
+        return out
+
+    def init(self, seed: int, xtr, ytr):
+        xtr, ytr = np.asarray(xtr), np.asarray(ytr)
+        b = self.batch
+        lens = self._shard_lens(len(xtr))
+        self._spe = lens // BATCH
+        self._steps_round = (b.local_epochs.astype(np.int64)
+                             * self._spe).astype(np.int64)
+        self._sizes = lens.astype(np.float64)
+        self._weights = self._sizes / self._sizes.sum()
+
+        fl_full = init_train_state(jax.random.PRNGKey(seed), CFG, None,
+                                   "sgd")
+        model = fl_full.trainable["model"]
+        leaves = jax.tree.leaves(model)
+        self._model_elems = sum(int(l.size) for l in leaves)
+        self._leaf_sizes = np.asarray([int(l.size) for l in leaves],
+                                      np.float64)
+        self._n_packets = len(leaves)
+
+        # expected round payload / deadline terms, loop expression order
+        is_fl = b.paradigm == 0
+        is_sl = b.paradigm == 1
+        is_cl = b.paradigm == 2
+        steps = self._steps_round.astype(np.float64)
+        bits_est = np.zeros(b.n, np.float64)
+        bits_est[is_fl] = (float(self._model_elems)
+                           * self._qbits[is_fl]) * self._exp_tx[is_fl]
+        bits_est[is_sl] = (steps[is_sl] * self._sl_step_bits[is_sl]) \
+            * self._exp_tx[is_sl]
+        self._bits_est = bits_est
+        comp = steps * b.compute_s_per_step
+        comp[is_cl] = 0.0
+        comm = np.zeros(b.n, np.float64)
+        rb = ~is_cl
+        comm[rb] = bits_est[rb] / self._rate[rb]
+        self._est_comp, self._est_comm = comp, comm
+        self._est_round_s = comp + comm
+
+        # FL groups by (radio_id, steps-per-round), first-appearance
+        # order over the fl indices — the loop's grouping key exactly
+        groups: list = []
+        by_key: dict = {}
+        for i in self._fl_idx.tolist():
+            gk = (int(b.radio_id[i]), int(self._steps_round[i]))
+            if gk not in by_key:
+                by_key[gk] = len(groups)
+                groups.append([])
+            groups[by_key[gk]].append(i)
+        self._groups = [(b.radios[b.radio_id[m[0]]],
+                         np.asarray(m, np.int64)) for m in groups]
+
+        # SL replay cohorts by (draw knobs, steps-per-round)
+        self._sl_pos = {int(i): si for si, i in
+                        enumerate(self._sl_idx.tolist())}
+        cohorts: dict = {}
+        for si, i in enumerate(self._sl_idx.tolist()):
+            r = b.radios[b.radio_id[i]]
+            ff = W.fault_free(r.fading, r.perfect, r.arq_attempts,
+                              r.arq_min_f2, r.arq_max_tx, r.ge_p_gb)
+            knobs = None if ff else (r.fading, r.arq_attempts,
+                                     r.arq_min_f2, r.arq_max_tx,
+                                     r.ge_p_gb, r.ge_p_bg)
+            ck = (knobs, int(self._steps_round[i]))
+            cohorts.setdefault(ck, []).append(si)
+        self._sl_cohorts = [(k[0], k[1], np.asarray(v, np.int64))
+                            for k, v in cohorts.items()]
+
+        # SL per-client cycle base keys: PRNGKey(seed+2) for si=0,
+        # fold_in(base, 201+si) beyond — the loop's stream, fanned out
+        n_sl = self._sl_idx.size
+        if n_sl:
+            base = jax.random.PRNGKey(seed + 2)
+            if n_sl == 1:
+                self._sl_keys = np.asarray(base)[None]
+            else:
+                rest = _key_fan_exe(n_sl - 1)(
+                    base, jnp.arange(1, n_sl) + 201)
+                self._sl_keys = np.concatenate(
+                    [np.asarray(base)[None], np.asarray(rest)], axis=0)
+        else:
+            self._sl_keys = np.zeros((0, 2), np.uint32)
+
+        shards = None
+        init_dlv = None
+        if self.train_on or self._cl_idx.size:
+            shards = self._materialize_shards(xtr, ytr)
+        if self._cl_idx.size:
+            # CL raw-corpus uploads, the loop's PRNGKey(seed+7) stream
+            k7 = jax.random.PRNGKey(seed + 7)
+            bits = energy = n_tx = 0.0
+            for ci, i in enumerate(self._cl_idx.tolist()):
+                radio = b.radios[b.radio_id[i]]
+                kc = k7 if ci == 0 else jax.random.fold_in(k7, 500 + ci)
+                xs, ys = shards[i]
+                dlv = radio.send_tokens(kc, jnp.asarray(xs),
+                                        CFG.vocab_size, labels=ys)
+                shards[i] = (np.asarray(dlv.payload), np.asarray(ys))
+                bits += dlv.bits
+                energy += dlv.energy_j
+                n_tx += dlv.n_tx
+            init_dlv = Delivery(None, bits, energy, n_tx)
+
+        group_states = []
+        if self.train_on:
+            group_states = [
+                jax.tree.map(lambda p, m=mem: jnp.broadcast_to(
+                    p, (len(m),) + p.shape), fl_full)
+                for _, mem in self._groups]
+        glob = {"model": model}
+        fs = _FleetState(glob, group_states,
+                         np.zeros(b.n, np.int64),
+                         np.zeros(n_sl, np.int64))
+        data = shards if self.train_on else None
+        return SchemeState(train=fs, data=data), init_dlv
+
+    def cycle_batches(self, state, rng, cycle):
+        """Training plane: the loop's per-client draws, identically
+        (all-FL, so `draw_local_epochs` per client in population
+        order). Billing plane: no data and NO rng consumed — the data
+        stream is independent of billing by construction."""
+        if not self.train_on:
+            return None
+        out = []
+        for i in range(self.batch.n):
+            xu, yu = state.data[i]
+            toks, labs = draw_local_epochs(
+                xu, yu, int(self.batch.local_epochs[i]), rng)
+            out.append({"tokens": toks, "labels": labs})
+        return out
+
+    def round_key(self, seed: int, cycle: int):
+        self._key_ctx = (seed, cycle)
+        return jax.random.fold_in(jax.random.PRNGKey(seed + 3), cycle)
+
+    # -------------------------------------------------- fleet dynamics
+    def _round_estimates(self, seed: int, cycle: int) -> np.ndarray:
+        """[N] float64 round-time estimates; the loop's lognormal
+        compute jitter on the identical key stream when enabled (the
+        f32 multiplier is widened to f64 exactly as `float(mult[i])`
+        does scalar-wise)."""
+        if self.deadline_s is None or self.deadline_jitter_sigma == 0.0:
+            return self._est_round_s.copy()
+        jk = jax.random.fold_in(jax.random.fold_in(
+            jax.random.PRNGKey(seed + 5), cycle), 909)
+        z = np.asarray(jax.random.normal(jk, (self.batch.n,)))
+        mult = np.exp(self.deadline_jitter_sigma * z)
+        return self._est_comp * mult.astype(np.float64) + self._est_comm
+
+    def _participants(self, seed: int, cycle: int):
+        """Vectorized `PopulationScheme._participants`: policy sample ->
+        deadline stragglers (radio-bearing paradigms only) -> FaultPlan
+        outages/mid-round dropouts on the survivors. Same key streams,
+        same priority, same gates on whether RNG is drawn at all."""
+        n = self.batch.n
+        status = np.zeros(n, np.int8)
+        drop_frac = np.full(n, np.nan)
+        if self.policy.kind == "full":
+            part = np.ones(n, bool)
+        else:
+            pk = jax.random.fold_in(jax.random.PRNGKey(seed + 5), cycle)
+            part = np.asarray(self.policy.active(pk, n)).copy()
+            status[~part] = _SAMPLED_OUT
+        est = self._round_estimates(seed, cycle)
+        if self.deadline_s is not None:
+            lag = part & (self.batch.paradigm != 2) \
+                & (est > self.deadline_s)
+            part &= ~lag
+            status[lag] = _STRAGGLER
+        if self._plan_on:
+            out, frac = self.fault_plan.events_arrays(
+                cycle, self._p_out, self._p_drop)
+            out = out & part
+            part &= ~out
+            status[out] = _ERASED
+            drop = part & ~np.isnan(frac)
+            part &= ~drop
+            status[drop] = _DROPPED
+            drop_frac[drop] = frac[drop]
+        return part, status, est, drop_frac
+
+    # ------------------------------------------------------------ round
+    def round(self, state, batch, key, lr):
+        if self._key_ctx is None:
+            raise RuntimeError("call round_key(seed, cycle) before "
+                               "round() (Experiment does this)")
+        seed, cycle = self._key_ctx
+        fs: _FleetState = state.train
+        b = self.batch
+        n = b.n
+        mesh = _mesh_key()
+        weights = self._weights
+        part, status, est, drop_frac = self._participants(seed, cycle)
+
+        bits = np.zeros(n, np.float64)
+        n_tx = np.zeros(n, np.float64)
+        energy = np.zeros(n, np.float64)
+        erased_b = np.zeros(n, np.float64)
+        steps_arr = np.zeros(n, np.int64)
+        loss = np.zeros(n, np.float64)
+        contributed = np.zeros(n, bool)
+        outage_s = 0.0
+        models: dict = {}           # training plane: client -> tree
+        new_groups: list = []
+
+        # --- FL groups: replay the stacked-upload draw per group (the
+        # training plane ALSO runs the real local phase + upload on the
+        # same keys; billing flows through the one replay path either
+        # way). Group order and the 101+gi key folds are the loop's.
+        for gi, (radio, members) in enumerate(self._groups):
+            gk = key if gi == 0 else jax.random.fold_in(key, 101 + gi)
+            act = part[members]
+            sel = np.flatnonzero(act)
+            if sel.size == 0:
+                if self.train_on:
+                    new_groups.append(fs.groups[gi])
+                continue
+            mem = members[sel]
+            n_a = int(mem.size)
+            if self.train_on:
+                whole = n_a == members.size
+                gstate = fs.groups[gi] if whole else jax.tree.map(
+                    lambda a: a[np.asarray(sel)], fs.groups[gi])
+                gb = {"tokens": np.stack([batch[i]["tokens"]
+                                          for i in mem.tolist()]),
+                      "labels": np.stack([batch[i]["labels"]
+                                          for i in mem.tolist()])}
+                states, gmetrics = fl_local_phase(gstate, gb, gk, lr)
+                dlv = fl_upload(radio, gk, states.trainable["model"])
+                losses = np.asarray(gmetrics["loss"])       # [n_a, J]
+                loss[mem] = losses.mean(axis=1)
+                new_groups.append(states if whole else jax.tree.map(
+                    lambda old, upd: old.at[np.asarray(sel)].set(upd),
+                    fs.groups[gi], states))
+            if W.fault_free(radio.fading, radio.perfect,
+                            radio.arq_attempts, radio.arq_min_f2,
+                            radio.arq_max_tx, radio.ge_p_gb):
+                ntx = np.ones((n_a, self._n_packets), np.int64)
+                er = np.zeros((n_a, self._n_packets), bool)
+            else:
+                knobs = (radio.fading, radio.arq_attempts,
+                         radio.arq_min_f2, radio.arq_max_tx,
+                         radio.ge_p_gb, radio.ge_p_bg)
+                fn = _fl_draw_exe(knobs, n_a, self._n_packets, mesh)
+                ntx_j, er_j = fn(jax.random.fold_in(gk, 999))
+                ntx, er = np.asarray(ntx_j), np.asarray(er_j)
+            # `Radio._deliver`'s reductions, as arrays (same expression
+            # order; Radio.bill_counts is the scalar-Delivery seam)
+            ntx64 = ntx.astype(np.float64)
+            width = float(radio.wire_width())
+            ub = width * (self._leaf_sizes * ntx64).sum(axis=1)
+            bits[mem] = ub
+            n_tx[mem] = ntx64.sum(axis=1)
+            energy[mem] = ub * radio.tx_power_w / radio.rate_bps()
+            outage_s += W.backoff_s(ntx64, radio.arq_backoff_s)
+            if radio.arq_max_tx > 0:
+                ue = er.any(axis=1)
+                erased_b[mem] = width * (self._leaf_sizes * ntx64
+                                         * er).sum(axis=1)
+            else:
+                ue = np.zeros(n_a, bool)
+            status[mem[ue]] = _ERASED       # trained, upload lost
+            contributed[mem[~ue]] = True
+            steps_arr[mem] = self._steps_round[mem]
+            if self.train_on:
+                for u, i in enumerate(mem.tolist()):
+                    if not ue[u]:
+                        models[i] = jax.tree.map(
+                            lambda p, u=u: p[u], dlv.payload)
+
+        # --- SL cohorts: vmapped drawn-diag replay per (knobs, steps)
+        sl_contrib: list = []
+        if self._sl_idx.size:
+            sl_steps_np = np.asarray(fs.sl_steps, np.int64)
+            sl_bo = np.zeros(n, np.float64)
+            for knobs, n_steps, cohort_si in self._sl_cohorts:
+                idx = self._sl_idx[cohort_si]
+                act = part[idx]
+                if not act.any() or n_steps <= 0:
+                    continue
+                si_act = cohort_si[act]
+                i_act = idx[act]
+                m = int(i_act.size)
+                if knobs is None:       # fault-free: (2 tx/step, 0, 0)
+                    tx = np.full(m, 2.0 * n_steps)
+                    er = np.zeros(m)
+                    bo = np.zeros(m)
+                else:
+                    fn = _sl_draw_exe(knobs, int(n_steps), m, mesh)
+                    keys = jnp.asarray(self._sl_keys[si_act])
+                    starts = jnp.asarray(sl_steps_np[si_act]
+                                         .astype(np.int32))
+                    tx_j, er_j, bo_j = fn(keys, starts)
+                    tx = np.asarray(tx_j).astype(np.float64)
+                    er = np.asarray(er_j).astype(np.float64)
+                    bo = np.asarray(bo_j).astype(np.float64)
+                leg = self._sl_step_bits[i_act] / 2.0
+                bits[i_act] = tx * leg
+                n_tx[i_act] = tx
+                energy[i_act] = bits[i_act] * self._tx_power[i_act] \
+                    / self._rate[i_act]
+                erased_b[i_act] = (er * self._arq_max[i_act]) * leg
+                # backoff seconds accumulate per client in si order
+                # below (loop adds bo * arq_backoff_s per SL client)
+                sl_bo[i_act] = bo * self._arq_backoff[i_act]
+                contributed[i_act] = True
+                steps_arr[i_act] = self._steps_round[i_act]
+                sl_contrib.extend(si_act.tolist())
+            # sequential si-order accumulation, matching the loop
+            sl_part = self._sl_idx[part[self._sl_idx]]
+            for v in sl_bo[sl_part].tolist():
+                outage_s += v
+            new_sl_steps = sl_steps_np.copy()
+            sl_act_mask = part[self._sl_idx]
+            new_sl_steps[sl_act_mask] += \
+                self._steps_round[self._sl_idx][sl_act_mask]
+        else:
+            new_sl_steps = np.asarray(fs.sl_steps, np.int64)
+
+        # --- CL members: radio-silent server-side epochs
+        cl_act = self._cl_idx[part[self._cl_idx]] \
+            if self._cl_idx.size else np.zeros(0, np.int64)
+        contributed[cl_act] = True
+        steps_arr[cl_act] = self._steps_round[cl_act]
+
+        # --- non-participants: zero bills for sampled-out/stragglers;
+        # FaultPlan casualties bill attempted-but-erased payload
+        np_mask = ~part
+        pe = np_mask & (status == _ERASED)
+        bits[pe] = self._bits_est[pe]
+        erased_b[pe] = bits[pe]
+        dr = np_mask & (status == _DROPPED)
+        bits[dr] = drop_frac[dr] * self._bits_est[dr]
+        energy[dr] = bits[dr] * self._tx_power[dr] / self._rate[dr]
+        erased_b[dr] = bits[dr]
+
+        # --- quorum + weights (loop arithmetic: f64, same renorm rule)
+        trained_idx = np.flatnonzero(contributed)
+        need = max(1, math.ceil(self.quorum * n))
+        quorum_met = trained_idx.size >= need
+        renorm = 1.0 if trained_idx.size == n else (
+            float(weights[trained_idx].sum()) if trained_idx.size
+            else 1.0)
+        w_arr = np.zeros(n, np.float64)
+        if quorum_met:
+            w_arr[trained_idx] = weights[trained_idx] / renorm
+
+        # --- training plane: the loop's weighted FedAvg + re-anchor
+        glob = fs.glob
+        if self.train_on:
+            broadcast = fs.glob["model"]
+            if quorum_met and trained_idx.size:
+                agg = aggregate_weighted(
+                    [models[i] for i in trained_idx.tolist()],
+                    weights[trained_idx])
+            else:
+                agg = broadcast
+            new_groups = [
+                TrainState(dict(s.trainable, model=jax.tree.map(
+                    lambda p, m=mem: jnp.broadcast_to(
+                        p, (len(m),) + p.shape), agg)),
+                    s.opt_state, s.step)
+                for (_, mem), s in zip(self._groups, new_groups)]
+            glob = {"model": agg}
+
+        client_steps = np.asarray(fs.client_steps, np.int64) + steps_arr
+        self._final_client_steps = client_steps
+        total_steps = int(steps_arr.sum())
+        new_fs = _FleetState(glob, new_groups, client_steps,
+                             new_sl_steps)
+        new = SchemeState(new_fs, state.data,
+                          state.steps + total_steps,
+                          state.epoch + self.epochs_per_cycle)
+
+        status_counts = {STATUS_NAMES[c]: int((status == c).sum())
+                         for c in range(len(STATUS_NAMES))
+                         if int((status == c).sum())}
+        metrics = {"n_active": int(trained_idx.size),
+                   "n_sampled_out": int((status == _SAMPLED_OUT).sum()),
+                   "n_stragglers": int((status == _STRAGGLER).sum())}
+        if self._faults_on:
+            metrics.update(
+                n_erased=int((status == _ERASED).sum()),
+                n_dropped_midround=int((status == _DROPPED).sum()),
+                quorum_met=bool(quorum_met))
+        fleet = {"status_counts": status_counts,
+                 "bits": _summary(bits, self.hist_bins),
+                 "energy_j": _summary(energy, self.hist_bins),
+                 "est_round_s": _summary(est, self.hist_bins)}
+        if self.spill_top_k > 0:
+            k = min(self.spill_top_k, n)
+            top = np.argsort(bits, kind="stable")[::-1][:k]
+            fleet["spill"] = {
+                "client": [int(i) for i in top],
+                "bits": [float(bits[i]) for i in top],
+                "status": [STATUS_NAMES[status[i]] for i in top]}
+        metrics["fleet"] = fleet
+
+        self.last_round_detail = {
+            "part": part, "status": status,
+            "status_names": [STATUS_NAMES[c] for c in status],
+            "bits": bits, "n_tx": n_tx, "energy_j": energy,
+            "erased_bits": erased_b, "steps": steps_arr, "loss": loss,
+            "weight": w_arr, "est_round_s": est,
+            "drop_frac": drop_frac}
+        return new, RoundReport(
+            loss=_seq_sum(loss * w_arr),
+            steps=total_steps,
+            bits=_seq_sum(bits),
+            n_tx=_seq_sum(n_tx),
+            energy_j=_seq_sum(energy),
+            metrics=metrics,
+            clients=(),
+            erased_bits=_seq_sum(erased_b),
+            outage_s=float(outage_s))
+
+    # ------------------------------------------------------------- eval
+    def evaluate(self, state, xte, yte) -> float:
+        return evaluate(state.train.glob["model"], xte, yte)[0]
+
+    def flops(self, steps_total: int):
+        """Per-paradigm accounting off the cumulative step arrays (CL
+        epochs run server-side; SL splits user/server at the cut)."""
+        b = self.batch
+        steps = self._final_client_steps.astype(np.float64)
+        user = float(step_flops("cl")) * float(steps[b.paradigm == 0]
+                                               .sum())
+        server = float(step_flops("cl")) * float(steps[b.paradigm == 2]
+                                                 .sum())
+        for i in self._sl_idx.tolist():
+            wc = b.wcfgs[b.wcfg_id[i]]
+            u = user_side_flops_sl(wc.compress_factor)
+            user += u * steps[i]
+            server += (step_flops("sl", _wcfg_key(wc)) - u) * steps[i]
+        return user, server

@@ -222,6 +222,21 @@ class ClientSpec:
                    compute_s_per_step)
 
 
+def aggregate_weighted(trees, weights):
+    """Sample-count-weighted FedAvg of per-client trees — THE mixed
+    aggregation rule (docs/ACCOUNTING.md). Equal weights collapse to
+    jnp.mean, bitwise the pure-FL FedAvg; unequal weights renormalize
+    and tensordot in f32. Shared by `PopulationScheme` and the scale
+    engine (`schemes/fleet.py`), so the two populations cannot drift."""
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
+    if np.all(weights == weights[0]):
+        return jax.tree.map(lambda s: jnp.mean(s, axis=0), stacked)
+    w = jnp.asarray(weights, jnp.float32) / float(np.sum(weights))
+    return jax.tree.map(
+        lambda s: jnp.tensordot(w, s.astype(jnp.float32), axes=1)
+        .astype(s.dtype), stacked)
+
+
 @dataclasses.dataclass(frozen=True)
 class _Group:
     """FL clients sharing (radio, steps-per-round): one vmapped local
@@ -603,15 +618,9 @@ class PopulationScheme:
 
     # ------------------------------------------------------------- round
     def _aggregate(self, trees, weights):
-        """Sample-count-weighted FedAvg of per-client trees. Equal
-        weights collapse to jnp.mean — bitwise the pure-FL FedAvg."""
-        stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *trees)
-        if np.all(weights == weights[0]):
-            return jax.tree.map(lambda s: jnp.mean(s, axis=0), stacked)
-        w = jnp.asarray(weights, jnp.float32) / float(np.sum(weights))
-        return jax.tree.map(
-            lambda s: jnp.tensordot(w, s.astype(jnp.float32), axes=1)
-            .astype(s.dtype), stacked)
+        """Sample-count-weighted FedAvg (module-level
+        `aggregate_weighted` — shared with the fleet engine)."""
+        return aggregate_weighted(trees, weights)
 
     def _sl_capture_cb(self, si: int):
         """Observation hook for one SL client's cycle: what the server

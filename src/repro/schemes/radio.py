@@ -156,6 +156,16 @@ class Radio:
         """Comm energy of `bits` on this link: bits * P / E[C]."""
         return float(bits) * self.tx_power_w / self.rate_bps()
 
+    def bill_counts(self, n_tx, sizes, erased=None) -> Delivery:
+        """Batched `Delivery` reduction WITHOUT a payload: bill a
+        (stacked) send from its drawn per-(user, packet) transmission
+        counts and erasure mask — the exact reduction `send_stacked`
+        applies to its own diagnostics, exposed so a replay engine
+        (`schemes/fleet.py`) or a test can turn `wire.drawn_stacked_tx`
+        counts into the identical per-user bits / n_tx / energy /
+        erased_bits split a real transmission would have billed."""
+        return self._deliver(None, n_tx, sizes, erased)
+
     def _impl(self) -> str:
         return "kernel" if (self.use_kernel and not self.perfect) \
             else "packed"

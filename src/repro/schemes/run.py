@@ -56,6 +56,16 @@ def build_scheme(wcfg=None, capture: bool = False, clients=None,
     `deadline_jitter_sigma`; the scaled schemes' `steps_per_cycle`,
     `optimizer`)."""
     if clients is not None:
+        from repro.schemes.fleet import ClientBatch, FleetScheme
+        engine = kwargs.pop("engine", "auto")
+        if isinstance(clients, ClientBatch):
+            return FleetScheme(wcfg, clients, capture=capture, **kwargs)
+        if engine == "fleet":
+            return FleetScheme(wcfg, ClientBatch.from_specs(clients),
+                               capture=capture, **kwargs)
+        if engine not in ("auto", "loop"):
+            raise ValueError(f"unknown fleet engine {engine!r} "
+                             "(auto|loop|fleet)")
         return PopulationScheme(wcfg, clients, capture=capture, **kwargs)
     mode = wcfg.mode if wcfg is not None else "cl"
     if cfg is not None and cfg.family != "tiny":

@@ -158,12 +158,60 @@ def check_scaled_fl_scheme_pod():
     print("OK scaled_fl_scheme_pod")
 
 
+def check_fleet_pod():
+    """The fleet engine's billing round is INVARIANT to the clients-axis
+    device count: the same 16-client bounded-ARQ fleet billed on no
+    mesh and on 1/2/4/8-way `pod` meshes (the "clients" logical axis
+    shards over (pod, data)) produces bitwise-identical round totals
+    and per-client detail arrays — the sharded fade/erasure draws are a
+    placement, not a math change (cf. check_scaled_fl_scheme_pod)."""
+    from repro.nn import use_mesh
+    from repro.schemes import BATCH, ClientBatch, FleetScheme
+
+    def bill(mesh):
+        # one SNR class -> one 8-client FL group + one 8-client SL
+        # cohort, so the [clients, ...] draws actually shard
+        batch = ClientBatch.synthetic(16, seed=3, snr_classes=(6.0,),
+                                      sl_frac=0.5, arq_max_tx=2,
+                                      ge_p_gb=0.2, arq_backoff_s=0.01)
+        scheme = FleetScheme(None, batch, train="off")
+        dummy = jnp.zeros((BATCH, 4), jnp.int32)
+        with use_mesh(mesh):
+            state, _ = scheme.init(0, dummy, dummy[:, 0])
+            rng = np.random.default_rng(1)
+            reps = []
+            for cyc in range(2):
+                b = scheme.cycle_batches(state, rng, cyc)
+                key = scheme.round_key(0, cyc)
+                state, rep = scheme.round(state, b, key, 0.1)
+                reps.append(rep)
+        return reps, scheme.last_round_detail
+
+    ref_reps, ref_det = bill(None)
+    assert sum(r.erased_bits for r in ref_reps) > 0   # chaos fired
+    for k in (1, 2, 4, 8):
+        reps, det = bill(jax.make_mesh((k,), ("pod",)))
+        for c, (a, b) in enumerate(zip(ref_reps, reps)):
+            for f in ("bits", "n_tx", "energy_j", "erased_bits",
+                      "outage_s", "steps", "loss"):
+                assert getattr(a, f) == getattr(b, f), \
+                    f"{k}-shard cycle {c} {f}: {getattr(a, f)!r} " \
+                    f"!= {getattr(b, f)!r}"
+        for name in ("bits", "n_tx", "energy_j", "erased_bits",
+                     "status", "est_round_s", "weight"):
+            np.testing.assert_array_equal(
+                np.asarray(ref_det[name]), np.asarray(det[name]),
+                err_msg=f"{k}-shard detail {name}")
+    print("OK fleet_pod")
+
+
 CHECKS = {
     "decode_attention_dist": check_decode_attention_dist,
     "moe_ep": check_moe_ep,
     "train_step_sharded": check_train_step_sharded,
     "fl_pod_step": check_fl_pod_step,
     "scaled_fl_scheme_pod": check_scaled_fl_scheme_pod,
+    "fleet_pod": check_fleet_pod,
 }
 
 if __name__ == "__main__":

@@ -124,6 +124,131 @@ def test_erased_packets_deliver_zeros():
         np.testing.assert_array_equal(np.asarray(leaf), 0.0)
 
 
+@HS
+@given(seed=st.integers(0, 2 ** 16), arq=st.integers(0, 3))
+def test_bill_counts_matches_real_send(seed, arq):
+    """`Radio.bill_counts` (the replay seam the fleet engine leans on)
+    fed a real send's drawn diagnostics reproduces that send's bill
+    EXACTLY — bits, energy, n_tx, outage, and the erased split, per
+    user and total."""
+    radio = Radio(quant_bits=8, snr_db=6.0, arq_max_tx=arq,
+                  arq_min_f2=1.2, ge_p_gb=0.3 if arq else 0.0,
+                  ge_p_bg=0.4, arq_backoff_s=0.01)
+    tree = _tree(seed)
+    dlv = radio.send_stacked(jax.random.PRNGKey(seed), tree)
+    sizes = np.asarray([l.size // l.shape[0]
+                        for l in jax.tree.leaves(tree)], np.float64)
+    n_tx, erased = W.drawn_stacked_tx(
+        jax.random.PRNGKey(seed), 2, len(sizes), fading=radio.fading,
+        perfect=False, arq_attempts=radio.arq_attempts,
+        arq_min_f2=1.2, arq_max_tx=arq,
+        ge_p_gb=0.3 if arq else 0.0, ge_p_bg=0.4, with_erased=True)
+    billed = radio.bill_counts(n_tx, sizes, erased)
+    assert billed.payload is None
+    for f in ("bits", "energy_j", "n_tx", "erased_bits", "outage_s",
+              "user_bits", "user_n_tx", "user_erased",
+              "user_erased_bits"):
+        assert getattr(billed, f) == getattr(dlv, f), f
+
+
+# ---------------------------------------- fleet-engine streamed bills
+from repro.configs.base import WirelessConfig
+from repro.schemes import (BATCH, ClientBatch, ClientSpec, FleetScheme,
+                           ParticipationPolicy)
+
+_BASE = WirelessConfig(mode="fl", quant_bits=8)
+
+
+def _fleet_round(scheme, seed=0, cycles=1):
+    """Drive the billing plane directly (no Experiment, no corpus: the
+    synthetic/spec fleets here carry explicit n_samples, so the dummy
+    arrays are never read)."""
+    dummy = np.zeros((BATCH, 4), np.int32)
+    state, _ = scheme.init(seed, dummy, dummy[:, 0])
+    rng = np.random.default_rng(seed + 1)
+    rep = None
+    for cyc in range(cycles):
+        batch = scheme.cycle_batches(state, rng, cyc)
+        key = scheme.round_key(seed, cyc)
+        state, rep = scheme.round(state, batch, key, 0.1)
+    return rep
+
+
+@HS
+@given(seed=st.integers(0, 99), n=st.integers(2, 10),
+       arq=st.integers(0, 3), sl_frac=st.floats(0.0, 0.6))
+def test_fleet_streamed_bill_partitions(seed, n, arq, sl_frac):
+    """Streamed-aggregate closure on random fleet sizes / SNR spreads /
+    ARQ caps: per-client 0 <= erased <= bits, the attempted air time
+    partitions into delivered + erased with no remainder, the streamed
+    summary sum reassembles the RoundReport bill, and the report totals
+    ARE the sequential per-client sums (the loop-engine convention)."""
+    batch = ClientBatch.synthetic(
+        n, seed=seed, snr_classes=(2.0, 8.0, 20.0), sl_frac=sl_frac,
+        arq_max_tx=arq, ge_p_gb=0.3 if arq else 0.0)
+    scheme = FleetScheme(None, batch, train="off")
+    rep = _fleet_round(scheme, seed=seed)
+    det = scheme.last_round_detail
+    bits = np.asarray(det["bits"])
+    erased = np.asarray(det["erased_bits"])
+    assert np.all(erased >= 0.0) and np.all(erased <= bits)
+    assert rep.bits == float(sum(bits.tolist()))
+    assert rep.erased_bits == float(sum(erased.tolist()))
+    delivered = float(sum((bits - erased).tolist()))
+    assert delivered + rep.erased_bits == pytest.approx(rep.bits)
+    summary = rep.metrics["fleet"]["bits"]
+    assert summary["count"] == n
+    assert summary["sum"] == pytest.approx(rep.bits, rel=1e-12)
+    if arq == 0:
+        assert rep.erased_bits == 0.0   # unbounded ARQ never erases
+
+
+@HS
+@given(seed=st.integers(0, 99), n=st.integers(2, 8),
+       deadline=st.floats(1.0, 10.0))
+def test_fleet_straggler_rounds_bill_zero(seed, n, deadline):
+    """A fleet whose every client computes slower than the deadline:
+    all FL/SL clients straggle, and straggler rounds bill ZERO bits,
+    energy, transmissions, and steps."""
+    batch = ClientBatch.synthetic(n, seed=seed, sl_frac=0.4,
+                                  compute_s_range=(50.0, 100.0))
+    scheme = FleetScheme(None, batch, train="off", deadline_s=deadline)
+    rep = _fleet_round(scheme, seed=seed)
+    assert rep.metrics["n_stragglers"] == n
+    assert rep.bits == 0.0 and rep.energy_j == 0.0
+    assert rep.n_tx == 0.0 and rep.steps == 0
+    det = scheme.last_round_detail
+    assert all(s == "straggler" for s in det["status_names"])
+    assert np.all(np.asarray(det["weight"]) == 0.0)
+
+
+@HS
+@given(seed=st.integers(0, 99), n_fl=st.integers(1, 4),
+       n_sl=st.integers(0, 3), stride=st.integers(1, 3))
+def test_fleet_fedavg_weights_sum_to_one(seed, n_fl, n_sl, stride):
+    """Mixed-FedAvg weights on heterogeneous shard sizes under random
+    Bernoulli participation: whenever anyone trained, the contributed
+    weights renormalize to EXACTLY the participants' share — they sum
+    to 1 over contributors, 0 everywhere else."""
+    specs = [ClientSpec.fl(_BASE, n_samples=BATCH * (1 + (i * stride) % 3))
+             for i in range(n_fl)]
+    specs += [ClientSpec.sl(_BASE, quant_bits=16,
+                            n_samples=BATCH * (1 + (i * stride) % 2))
+              for i in range(n_sl)]
+    scheme = FleetScheme(None, ClientBatch.from_specs(specs),
+                         train="off",
+                         policy=ParticipationPolicy.bernoulli(0.7))
+    rep = _fleet_round(scheme, seed=seed)
+    det = scheme.last_round_detail
+    w = np.asarray(det["weight"])
+    assert np.all(w >= 0.0)
+    if rep.metrics["n_active"] > 0:
+        assert float(w.sum()) == pytest.approx(1.0)
+        assert np.all(w[~np.asarray(det["part"], bool)] == 0.0)
+    else:
+        assert np.all(w == 0.0)
+
+
 def test_unbounded_arq_never_erases():
     """arq_max_tx=0 keeps the legacy contract: retries until success
     (within arq_attempts), never an erasure, erased_bits identically 0."""

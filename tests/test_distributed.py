@@ -20,6 +20,7 @@ def run_check(name: str):
 
 
 @pytest.mark.parametrize("name", ["decode_attention_dist", "moe_ep",
-                                  "train_step_sharded", "fl_pod_step"])
+                                  "train_step_sharded", "fl_pod_step",
+                                  "fleet_pod"])
 def test_distributed(name):
     run_check(name)

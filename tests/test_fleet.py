@@ -1,0 +1,260 @@
+"""Fleet-engine parity: `FleetScheme` (struct-of-arrays, one jitted
+program per round) must reproduce `PopulationScheme` (the per-client
+Python loop) BIT-FOR-BIT on every fleet it can express — total bills
+(bits / erased_bits / energy_j / n_tx / outage_s / steps per round) AND
+the client-by-client decisions (status, weight, deadline estimate) that
+produced them, exposed via `FleetScheme.last_round_detail`.
+
+Degenerate fleets additionally pin against the PR 3/4 goldens: an
+all-FL fleet small enough for the training plane runs the identical
+vmapped local phase + stacked upload as FederatedScheme, so its
+trajectory must match golden_scheme_parity.json exactly (the same
+fixture tests/test_scheme_parity.py uses).
+
+Scale is covered by smoke, not parity: a 1e3-client synthetic batch
+(billing plane, no per-client Python objects) streams aggregate
+summaries whose counts/sums must reassemble the round totals.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import WirelessConfig
+from repro.schemes import (ClientBatch, ClientSpec, Experiment, FaultPlan,
+                           FleetScheme, ParticipationPolicy,
+                           PopulationScheme, build_scheme, corpus)
+
+N_TRAIN, N_TEST = 4096, 512
+BILL_FIELDS = ("bits", "n_tx", "energy_j", "erased_bits", "outage_s",
+               "steps")
+BASE = WirelessConfig(mode="fl", quant_bits=8)
+ARQ = WirelessConfig(mode="fl", quant_bits=8, arq_max_tx=3, ge_p_gb=0.2,
+                     arq_backoff_s=0.01, snr_db=4.0)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return corpus(N_TRAIN, N_TEST, 0)
+
+
+@pytest.fixture(scope="module")
+def golden():
+    path = os.path.join(os.path.dirname(__file__),
+                        "golden_scheme_parity.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _run(scheme, data, cycles=2, seed=0):
+    exp = Experiment(scheme, cycles=cycles, seed=seed, data=data)
+    exp.run()
+    return exp
+
+
+def _assert_engine_parity(specs, data, cycles=2, seed=0, **kw):
+    """Loop and fleet engines on the same specs: round totals equal
+    bit-for-bit, and the fleet's last-round per-client detail matches
+    the loop's ClientReports field-by-field."""
+    el = _run(PopulationScheme(None, specs, **kw), data, cycles, seed)
+    fleet = FleetScheme(None, ClientBatch.from_specs(specs), **kw)
+    ef = _run(fleet, data, cycles, seed)
+    for c, (rl, rf) in enumerate(zip(el.reports, ef.reports)):
+        for f in BILL_FIELDS:
+            assert getattr(rl, f) == getattr(rf, f), \
+                f"cycle {c} field {f}: loop={getattr(rl, f)!r} " \
+                f"fleet={getattr(rf, f)!r}"
+    det = fleet.last_round_detail
+    for i, cl in enumerate(el.reports[-1].clients):
+        assert cl.bits == det["bits"][i], f"client {i} bits"
+        assert cl.n_tx == det["n_tx"][i], f"client {i} n_tx"
+        assert cl.energy_j == det["energy_j"][i], f"client {i} energy"
+        assert cl.erased_bits == det["erased_bits"][i], \
+            f"client {i} erased"
+        assert cl.status == det["status_names"][i], f"client {i} status"
+        assert cl.weight == det["weight"][i], f"client {i} weight"
+        assert cl.est_round_s == det["est_round_s"][i], f"client {i} est"
+    return el, ef
+
+
+def _mixed_specs():
+    return [ClientSpec.fl(BASE, snr_db=20.0),
+            ClientSpec.fl(BASE, snr_db=6.0, quant_bits=4),
+            ClientSpec.sl(BASE, snr_db=12.0, quant_bits=16),
+            ClientSpec.sl(BASE, snr_db=20.0)]
+
+
+# -------------------------------------------- bit-for-bit bill parity
+def test_mixed_fleet_bills_bit_for_bit(data):
+    """2 FL + 2 SL at heterogeneous SNR/quant, full participation: per
+    the parity contract, every billing field matches the loop exactly
+    (the FL fade replay re-derives the loop's `split` +
+    `wire._packet_fades` stream, the SL replay its per-step draws)."""
+    _assert_engine_parity(_mixed_specs(), data)
+
+
+def test_fleet_dynamics_parity(data):
+    """Sampling + deadline jitter + a CL rider + a compute-bound
+    laggard: sampled_out / straggler decisions (and the zero bills that
+    follow) are identical client-by-client."""
+    specs = _mixed_specs() + [
+        ClientSpec.cl(BASE, snr_db=18.0),
+        ClientSpec.fl(BASE, snr_db=20.0, compute_s_per_step=100.0)]
+    el, _ = _assert_engine_parity(
+        specs, data, cycles=3,
+        policy=ParticipationPolicy.uniform(4),
+        deadline_s=50.0, deadline_jitter_sigma=0.5)
+    seen = {c.status for r in el.reports for c in r.clients}
+    assert "sampled_out" in seen and "straggler" in seen
+
+
+def test_faulty_arq_quorum_parity(data):
+    """The hardest composite: bounded ARQ + Gilbert-Elliott erasures +
+    backoff outage + Bernoulli participation + quorum + a FaultPlan
+    injecting outages and mid-round dropouts. Wire erasures, fault
+    decisions, quorum renormalization, and the fractional
+    dropped-midround bills all match the loop bit-for-bit."""
+    specs = [ClientSpec.fl(ARQ, snr_db=4.0),
+             ClientSpec.fl(ARQ, snr_db=4.0),
+             ClientSpec.fl(ARQ, snr_db=8.0, arq_min_f2=1.5),
+             ClientSpec.sl(ARQ, quant_bits=16, arq_min_f2=1.5),
+             ClientSpec.sl(ARQ, quant_bits=16, arq_min_f2=1.5,
+                           local_epochs=2),
+             ClientSpec.cl(ARQ)]
+    el, ef = _assert_engine_parity(
+        specs, data, cycles=4,
+        policy=ParticipationPolicy.bernoulli(0.8), quorum=0.3,
+        fault_plan=FaultPlan(seed=1, p_outage=0.25, p_dropout=0.25))
+    # the chaos actually fired: something was erased and billed as such
+    assert sum(r.erased_bits for r in el.reports) > 0
+    assert any("n_erased" in r.metrics for r in ef.reports)
+
+
+def test_weighted_fleet_parity(data):
+    """Heterogeneous shard sizes: FedAvg weights (and the quorum-less
+    renormalization) follow n_samples exactly as in the loop."""
+    specs = [ClientSpec.fl(BASE, n_samples=512),
+             ClientSpec.fl(BASE, n_samples=1024),
+             ClientSpec.sl(BASE, quant_bits=16, n_samples=1536),
+             ClientSpec.cl(BASE)]
+    _, ef = _assert_engine_parity(specs, data)
+    det = ef.scheme.last_round_detail
+    part = np.asarray(det["part"], bool)
+    assert float(np.asarray(det["weight"])[part].sum()) == \
+        pytest.approx(1.0)
+
+
+def test_sixteen_client_fleet_parity(data):
+    """The largest parity-pinned size the issue names: 16 mixed clients
+    (incl. an ARQ pocket) under sampling, still bit-for-bit."""
+    (xtr, ytr), _ = data
+    shard = (xtr[:512], ytr[:512])   # shared explicit shard: 16 x 512
+    specs = []
+    for i in range(16):
+        wc = ARQ if i % 5 == 0 else BASE
+        mk = (ClientSpec.sl if i % 3 == 2 else ClientSpec.fl)
+        specs.append(mk(wc, snr_db=4.0 + (i % 4) * 5.0, shard=shard,
+                        compute_s_per_step=float(i % 3)))
+    _assert_engine_parity(specs, data, cycles=2,
+                          policy=ParticipationPolicy.uniform(10),
+                          deadline_s=1e9)
+
+
+# ------------------------------------- degenerate training-plane pins
+def test_allfl_training_plane_matches_loop(data):
+    """All-FL fleet small enough for the training plane: trajectory
+    (loss per round), bills, and the FINAL MODEL are bitwise the
+    loop's — the engine runs the identical vmapped local phase,
+    stacked upload, and aggregation."""
+    specs = [ClientSpec.fl(BASE, snr_db=20.0) for _ in range(3)]
+    fleet = FleetScheme(None, ClientBatch.from_specs(specs))
+    assert fleet.train_on
+    el = _run(PopulationScheme(None, specs), data, cycles=3)
+    ef = _run(fleet, data, cycles=3)
+    for rl, rf in zip(el.reports, ef.reports):
+        assert rl.loss == rf.loss and rl.bits == rf.bits
+    gl = el.final_state.train.global_trainable["model"]
+    gf = ef.final_state.train.glob["model"]
+    for a, b in zip(jax.tree.leaves(gl), jax.tree.leaves(gf)):
+        assert bool(jnp.array_equal(a, b))
+
+
+def test_fleet_all_fl_matches_federated_golden(golden):
+    """Degenerate-fleet golden pin (PR 3's discipline, PR 4's fixture):
+    an all-FL FleetScheme reproduces the FederatedScheme golden
+    trajectory — payload bits bit-for-bit, accuracy exact, loss within
+    float32 reduction-order tolerance."""
+    wcfg = WirelessConfig(mode="fl", quant_bits=8)
+    specs = [ClientSpec.fl(wcfg) for _ in range(wcfg.n_users)]
+    scheme = build_scheme(wcfg, clients=specs, engine="fleet")
+    assert isinstance(scheme, FleetScheme) and scheme.train_on
+    exp = Experiment(scheme, cycles=2, seed=0, n_train=3072, n_test=512)
+    res = exp.run()
+    want = golden["fl_q8"]
+    assert res.total_bits == want["total_bits"]          # bit-for-bit
+    np.testing.assert_array_equal(res.accuracy, want["accuracy"])
+    np.testing.assert_allclose(res.loss, want["loss"], rtol=1e-5)
+
+
+# -------------------------------------------------- engine selection
+def test_build_scheme_engine_selection():
+    specs = [ClientSpec.fl(BASE), ClientSpec.sl(BASE)]
+    assert isinstance(build_scheme(BASE, clients=specs),
+                      PopulationScheme)
+    assert isinstance(build_scheme(BASE, clients=specs, engine="loop"),
+                      PopulationScheme)
+    assert isinstance(build_scheme(BASE, clients=specs, engine="fleet"),
+                      FleetScheme)
+    batch = ClientBatch.from_specs(specs)
+    assert isinstance(build_scheme(BASE, clients=batch), FleetScheme)
+    with pytest.raises(ValueError, match="engine"):
+        build_scheme(BASE, clients=specs, engine="bogus")
+
+
+# ------------------------------------------------ streamed aggregates
+def test_synthetic_fleet_streams_aggregates(data):
+    """A 1e3-client synthetic batch: no per-client reports (clients is
+    empty), but the streamed summaries must reassemble the totals —
+    summary counts partition n, the bits summary's sum matches the
+    RoundReport bill up to summation order, and the opt-in top-k spill
+    is sorted and consistent with the detail arrays."""
+    batch = ClientBatch.synthetic(1000, seed=0, arq_max_tx=2,
+                                  ge_p_gb=0.1, sl_frac=0.3,
+                                  compute_s_range=(0.0, 2.0),
+                                  p_outage=0.05, p_dropout=0.05)
+    scheme = FleetScheme(None, batch,
+                         policy=ParticipationPolicy.bernoulli(0.5),
+                         deadline_s=1e9, spill_top_k=5)
+    exp = _run(scheme, data, cycles=2)
+    for rep in exp.reports:
+        assert rep.clients == ()
+        fl = rep.metrics["fleet"]
+        assert sum(fl["status_counts"].values()) == 1000
+        assert fl["bits"]["count"] == 1000
+        assert fl["bits"]["sum"] == pytest.approx(rep.bits, rel=1e-12)
+        assert sum(fl["bits"]["hist_counts"]) == 1000
+        # metrics must stay JSON-safe (resume snapshots round-trip them)
+        json.dumps(rep.metrics)
+    det = scheme.last_round_detail
+    spill = exp.reports[-1].metrics["fleet"]["spill"]
+    assert spill["bits"] == sorted(spill["bits"], reverse=True)
+    for ci, b, s in zip(spill["client"], spill["bits"], spill["status"]):
+        assert det["bits"][ci] == b
+        assert det["status_names"][ci] == s
+    # faults fired somewhere in a 1e3-client round
+    assert any(r.metrics.get("n_erased", 0) > 0 for r in exp.reports)
+
+
+def test_synthetic_batch_validations():
+    with pytest.raises(ValueError, match="n >= 1"):
+        ClientBatch.synthetic(0)
+    with pytest.raises(ValueError, match="batch"):
+        ClientBatch.synthetic(4, n_samples=8)
+    with pytest.raises(ValueError, match="capture"):
+        FleetScheme(None, ClientBatch.synthetic(4), capture=True)
+    with pytest.raises(ValueError, match="train"):
+        FleetScheme(None, ClientBatch.synthetic(4, sl_frac=0.5),
+                    train="on")

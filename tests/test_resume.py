@@ -39,6 +39,21 @@ def _fleet_faulty():
                                              p_dropout=0.3))
 
 
+def _fleet_engine_faulty():
+    """The same faulty fleet on the struct-of-arrays engine: its state
+    (glob params + per-group stacks + step arrays) snapshots as a
+    pytree and its streamed `metrics["fleet"]` summaries are JSON-safe,
+    so kill-and-resume must be bit-for-bit like every other scheme."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    clients = [ClientSpec.fl(base, name="f0"),
+               ClientSpec.fl(base, snr_db=10.0, name="f1"),
+               ClientSpec.sl(base, name="s0")]
+    return build_scheme(base, clients=clients, engine="fleet",
+                        quorum=0.34,
+                        fault_plan=FaultPlan(seed=0, p_outage=0.3,
+                                             p_dropout=0.3))
+
+
 def _sl_faulty():
     return build_scheme(WirelessConfig(
         mode="sl", quant_bits=8, arq_max_tx=2, arq_min_f2=0.7))
@@ -50,6 +65,7 @@ def _cl():
 
 
 MAKERS = {"fl-faulty": _fl_faulty, "fleet-faulty": _fleet_faulty,
+          "fleet-engine-faulty": _fleet_engine_faulty,
           "sl-faulty": _sl_faulty, "cl": _cl}
 
 
