@@ -1,17 +1,27 @@
-"""Serving benchmark: continuous vs static batching on the semantic
-link, tokens/s and latency percentiles vs concurrent users
-(BENCH_serve.json).
+"""Serving benchmark: continuous vs static batching AND chunked vs
+token-by-token prefill on the semantic link — tokens/s, request-latency
+and TTFT percentiles vs concurrent users, plus the paged-KV capacity
+factor (BENCH_serve.json).
 
 The paper serves one user at a time; this benchmark measures the
 engine that serves MANY. For each user count a mixed-length
-`RequestTrace` (same seed => same requests for both schedulers) runs
-through `ServeEngine` twice — `continuous` (admit the moment a slot
-frees) and `static` (barrier: re-admit only when the whole batch
-drains) — on a fading bounded-ARQ radio, recording decode cycles,
-tokens per cycle and per wall-second, p50/p99 request latency in
-cycles, and the exact Delivery bill (bits / erased bits / energy).
-The headline record is `speedup_cycles` > 1 at every width: in-flight
-admission beats the barrier wherever output lengths are mixed.
+`RequestTrace` (same seed => same requests for every scheduler) runs
+through `ServeEngine` on a fading bounded-ARQ radio:
+
+* `continuous` vs `static` — in-flight admission vs the barrier
+  (`speedup_cycles` > 1 at every width wherever lengths are mixed).
+* `prefill=chunked` vs `prefill=token` — bucketed chunk admission vs
+  one prompt token per cycle. Generated tokens and radio bills are
+  BIT-IDENTICAL (admission is pure scheduling); time-to-first-token
+  p50/p99 — in decode cycles AND wall seconds — must improve at every
+  width, most dramatically on the long-prompt mixed case where a
+  token-mode prompt pins its slot for P cycles.
+* paged KV capacity — the `longprompt` case replays on the reduced
+  transformer with a dense cache and with the shared page pool at the
+  same tokens: `capacity_factor` = dense reserved KV columns
+  (n_slots * max_seq_len) over the pool's peak in-flight columns
+  (peak_pages * page_size) — >=2x fewer resident columns for the same
+  trace, same tokens, same bill.
 
     PYTHONPATH=src python -m benchmarks.run --only serve
 """
@@ -30,6 +40,51 @@ from repro.serve import ServeEngine, make_trace
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
+CHUNK = 16
+
+
+def _case_dict(rep) -> dict:
+    d = rep.to_dict()
+    d["tokens_per_cycle"] = d["generated_tokens"] / max(d["cycles"], 1)
+    # billing invariant, per run: every attempted bit is either
+    # delivered or erased
+    assert abs(d["delivered_bits"] + d["erased_bits"] - d["bits"]) < 1e-6
+    return d
+
+
+def _paged_capacity(seed: int) -> dict:
+    """Dense vs paged KV on the reduced transformer: one long-prompt
+    request drives max_seq_len while short requests churn — the dense
+    layout reserves n_slots * S columns for the whole run; the pool
+    holds only the tokens actually in flight."""
+    from repro.serve import Request, RequestTrace
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    params = init_params(jax.random.PRNGKey(seed), M.param_specs(cfg))
+    page = 16
+    reqs = (Request(0, 0, 96, 8),) + tuple(
+        Request(rid, 0, 4 + rid % 5, 2 + rid % 4)
+        for rid in range(1, 10))
+    trace = RequestTrace(31, reqs)
+    n_slots = 4
+    dense = ServeEngine(cfg, params, n_slots=n_slots, kv="dense",
+                        chunk_size=CHUNK).serve(trace)
+    paged = ServeEngine(cfg, params, n_slots=n_slots, kv="paged",
+                        page_size=page, chunk_size=CHUNK).serve(trace)
+    assert [r.tokens for r in paged.results] == \
+           [r.tokens for r in dense.results]
+    assert paged.bits == dense.bits
+    S = trace.max_seq_len()
+    dense_cols = n_slots * S
+    paged_cols = paged.peak_pages * page
+    return {
+        "arch": cfg.name, "n_slots": n_slots, "page_size": page,
+        "max_seq_len": S, "dense_reserved_cols": dense_cols,
+        "paged_peak_cols": paged_cols,
+        "peak_pages": paged.peak_pages, "n_pages": paged.n_pages,
+        "capacity_factor": dense_cols / max(paged_cols, 1),
+        "tokens_bit_identical": True,
+    }
+
 
 def run(full: bool = False, seed: int = 0) -> dict:
     cfg = get_arch("paper-tinylstm")
@@ -39,32 +94,43 @@ def run(full: bool = False, seed: int = 0) -> dict:
     # more users than slots, else there is only one batch and nothing
     # for the barrier to lose
     user_counts = (16, 32, 64, 128) if full else (16, 32)
-    engine = ServeEngine(cfg, params, n_slots=n_slots, radio=radio)
+    engines = {pf: ServeEngine(cfg, params, n_slots=n_slots, radio=radio,
+                               prefill=pf, chunk_size=CHUNK)
+               for pf in ("chunked", "token")}
 
     out = {"arch": cfg.name, "n_slots": n_slots, "snr_db": radio.snr_db,
-           "arq_max_tx": radio.arq_max_tx, "cases": {}}
-    for users in user_counts:
-        # mixed output lengths, everyone queued up at cycle 0: the
-        # adversarial case for a barrier scheduler
-        trace = make_trace(seed + users, users, prompt_lens=(4, 16),
+           "arq_max_tx": radio.arq_max_tx, "chunk_size": CHUNK,
+           "cases": {}}
+    specs = [(f"users{u}", u, (4, 16)) for u in user_counts]
+    # the long-prompt mix: token-mode admission pins a slot for up to
+    # 96 cycles before its first token — the adversarial TTFT case
+    specs.append(("longprompt16", 16, (8, 96)))
+    for name, users, plens in specs:
+        trace = make_trace(seed + users + (97 if "long" in name else 0),
+                           users, prompt_lens=plens,
                            new_tokens=(1, 12), mean_gap=0.0)
         case = {}
         for mode in ("continuous", "static"):
-            engine.serve(trace, mode)           # warm the jit caches
-            rep = engine.serve(trace, mode)     # measured run
-            d = rep.to_dict()
-            d["tokens_per_cycle"] = (d["generated_tokens"]
-                                     / max(d["cycles"], 1))
-            # billing invariant, per run: every attempted bit is either
-            # delivered or erased
-            assert abs(d["delivered_bits"] + d["erased_bits"]
-                       - d["bits"]) < 1e-6
-            case[mode] = d
+            engines["chunked"].serve(trace, mode)   # warm the jit caches
+            case[mode] = _case_dict(engines["chunked"].serve(trace, mode))
         case["speedup_cycles"] = (case["static"]["cycles"]
                                   / max(case["continuous"]["cycles"], 1))
         # same trace, same radio draws: the bill is schedule-invariant
         assert case["continuous"]["bits"] == case["static"]["bits"]
-        out["cases"][f"users{users}"] = case
+
+        engines["token"].serve(trace)               # warm
+        tok = _case_dict(engines["token"].serve(trace))
+        case["prefill_token"] = tok
+        chk = case["continuous"]                    # chunked continuous
+        # admission plane is pure scheduling: bills bit-for-bit
+        assert tok["bits"] == chk["bits"]
+        assert tok["erased_bits"] == chk["erased_bits"]
+        case["ttft_speedup_p99_cycles"] = (tok["p99_ttft_cycles"]
+                                           / max(chk["p99_ttft_cycles"], 1))
+        case["ttft_speedup_p50_cycles"] = (tok["p50_ttft_cycles"]
+                                           / max(chk["p50_ttft_cycles"], 1))
+        out["cases"][name] = case
+    out["paged_kv"] = _paged_capacity(seed)
     return out
 
 
@@ -75,7 +141,7 @@ def main(full: bool = False) -> list[str]:
         json.dump(res, f, indent=1)
     rows = []
     for case, rec in res["cases"].items():
-        for mode in ("continuous", "static"):
+        for mode in ("continuous", "static", "prefill_token"):
             d = rec[mode]
             rows.append(f"serve,{case}/{mode},cycles,{d['cycles']}")
             rows.append(f"serve,{case}/{mode},tokens_per_cycle,"
@@ -86,10 +152,22 @@ def main(full: bool = False) -> list[str]:
                         f"{d['p50_latency_cycles']:.0f}")
             rows.append(f"serve,{case}/{mode},p99_latency_cycles,"
                         f"{d['p99_latency_cycles']:.0f}")
+            rows.append(f"serve,{case}/{mode},p50_ttft_cycles,"
+                        f"{d['p50_ttft_cycles']:.0f}")
+            rows.append(f"serve,{case}/{mode},p99_ttft_cycles,"
+                        f"{d['p99_ttft_cycles']:.0f}")
+            rows.append(f"serve,{case}/{mode},p99_ttft_s,"
+                        f"{d['p99_ttft_s']:.4f}")
             rows.append(f"serve,{case}/{mode},erased_bits,"
                         f"{d['erased_bits']:.0f}")
         rows.append(f"serve,{case},speedup_cycles,"
                     f"{rec['speedup_cycles']:.2f}")
+        rows.append(f"serve,{case},ttft_speedup_p99_cycles,"
+                    f"{rec['ttft_speedup_p99_cycles']:.2f}")
+    pk = res["paged_kv"]
+    rows.append(f"serve,paged_kv,capacity_factor,"
+                f"{pk['capacity_factor']:.2f}")
+    rows.append(f"serve,paged_kv,peak_pages,{pk['peak_pages']}")
     return rows
 
 

@@ -21,10 +21,14 @@
 # sweeps FaultPlan outages x quorum on a bounded-ARQ fleet, kills each
 # case at the midpoint, resumes from the crash-consistent snapshot,
 # and fails unless every resumed run is bit-for-bit. The serving smoke
-# (benchmarks/serve.py) runs continuous vs static batching on a
-# bounded-ARQ link and fails unless in-flight admission wins at every
-# width on a schedule-invariant, exactly-split (delivered + erased)
-# radio bill.
+# (benchmarks/serve.py) runs continuous vs static batching AND chunked
+# vs token-by-token prefill on a bounded-ARQ link and fails unless
+# in-flight admission wins at every width, chunked prefill cuts TTFT
+# p99 at every width, and the paged KV pool holds >=2x fewer resident
+# columns than the dense reservation — all on a schedule-invariant,
+# exactly-split (delivered + erased) radio bill. A second serve
+# aot-warmup gate requires the persistent compile cache to collapse a
+# warm process's prefill-bucket compile wall to <20% of the cold one.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -169,32 +173,65 @@ ok = ok and cc["warm_compile_s"] < 0.5 * cc["cold_compile_s"]
 sys.exit(0 if ok else 1)
 EOF
 
-echo "=== serving smoke (continuous vs static batching, BENCH_serve.json) ==="
+echo "=== serving smoke (continuous vs static + chunked vs token prefill, BENCH_serve.json) ==="
 python -m benchmarks.run --only serve
 python - <<'EOF'
 import json, sys
 res = json.load(open("benchmarks/results/BENCH_serve.json"))
 ok = True
 for case, rec in res["cases"].items():
-    c, s = rec["continuous"], rec["static"]
+    c, s, t = rec["continuous"], rec["static"], rec["prefill_token"]
     print(f"serve {case}: continuous {c['cycles']} cycles "
           f"({c['tokens_per_cycle']:.2f} tok/cyc, p99 "
           f"{c['p99_latency_cycles']:.0f}) vs static {s['cycles']} "
           f"({s['tokens_per_cycle']:.2f} tok/cyc, p99 "
           f"{s['p99_latency_cycles']:.0f}) -> "
-          f"{rec['speedup_cycles']:.2f}x | {c['bits']:.0f} bits "
-          f"({c['erased_bits']:.0f} erased)")
-    # the tentpole claim: in-flight admission beats the barrier at
-    # mixed lengths, on the SAME schedule-invariant radio bill
+          f"{rec['speedup_cycles']:.2f}x | ttft p99 chunked "
+          f"{c['p99_ttft_cycles']:.0f} vs token {t['p99_ttft_cycles']:.0f} "
+          f"cycles ({rec['ttft_speedup_p99_cycles']:.1f}x) | "
+          f"{c['bits']:.0f} bits ({c['erased_bits']:.0f} erased)")
+    # the tentpole claims: in-flight admission beats the barrier at
+    # mixed lengths, and chunked prefill beats token-by-token TTFT at
+    # EVERY width — both on the SAME schedule-invariant radio bill
     ok = ok and rec["speedup_cycles"] > 1.0
-    ok = ok and c["bits"] == s["bits"]
-    for d in (c, s):
+    ok = ok and c["bits"] == s["bits"] == t["bits"]
+    ok = ok and c["erased_bits"] == t["erased_bits"]
+    ok = ok and c["p99_ttft_cycles"] < t["p99_ttft_cycles"]
+    ok = ok and c["p50_ttft_cycles"] <= t["p50_ttft_cycles"]
+    for d in (c, s, t):
         ok = ok and abs(d["delivered_bits"] + d["erased_bits"]
                         - d["bits"]) < 1e-6
 # the bounded-ARQ link actually erased something somewhere
 ok = ok and any(rec["continuous"]["erased_bits"] > 0
                 for rec in res["cases"].values())
+# paged KV: same tokens in >=2x fewer resident KV columns than the
+# dense per-slot reservation on the long-prompt mix
+pk = res["paged_kv"]
+print(f"serve paged_kv: dense {pk['dense_reserved_cols']} cols vs "
+      f"paged peak {pk['paged_peak_cols']} -> "
+      f"{pk['capacity_factor']:.2f}x (tokens bit-identical: "
+      f"{pk['tokens_bit_identical']})")
+ok = ok and pk["capacity_factor"] >= 2.0 and pk["tokens_bit_identical"]
 sys.exit(0 if ok else 1)
+EOF
+
+echo "=== serve aot-warmup compile-cache gate (2nd run <20% of 1st) ==="
+# decode step + every prefill bucket AOT-compile before admission; the
+# persistent cache must collapse the second process's compile wall
+CACHE_DIR=$(mktemp -d)
+SERVE_ARGS="--arch qwen1.5-0.5b --reduced --batch 4 --prompt-len 48 \
+    --new-tokens 4 --aot-warmup"
+V1=$(REPRO_JAX_CACHE_DIR="$CACHE_DIR" python -m repro.launch.serve \
+    $SERVE_ARGS | grep -o 'aot_warmup_compile_wall_s=[0-9.]*' | cut -d= -f2)
+V2=$(REPRO_JAX_CACHE_DIR="$CACHE_DIR" python -m repro.launch.serve \
+    $SERVE_ARGS | grep -o 'aot_warmup_compile_wall_s=[0-9.]*' | cut -d= -f2)
+rm -rf "$CACHE_DIR"
+python - "$V1" "$V2" <<'EOF'
+import sys
+cold, warm = float(sys.argv[1]), float(sys.argv[2])
+print(f"serve aot compile wall: cold {cold:.3f}s -> cache-warm "
+      f"{warm:.3f}s ({warm / max(cold, 1e-9):.1%})")
+sys.exit(0 if warm < 0.2 * cold else 1)
 EOF
 
 echo "=== robustness chaos smoke (outage x quorum sweep + kill-and-resume, BENCH_robustness.json) ==="

@@ -8,7 +8,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_attention.kernel import decode_attention
+from repro.kernels.decode_attention.kernel import (decode_attention,
+                                                  paged_decode_attention)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
@@ -33,4 +34,31 @@ def gqa_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
 
     out = decode_attention(qg, k_cache, v_cache, length, window=window,
                            scale=1.0 / (hd ** 0.5), interpret=interpret)
+    return out[:, :, :G, :hd].reshape(B, H, hd)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def gqa_decode_paged(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                     tables: jax.Array, length: jax.Array, window: int = 0,
+                     interpret: bool = True) -> jax.Array:
+    """q [B, H, hd]; pools [n_pages, Hkv, page, hd]; `tables` [B, n_lp]
+    per-slot page tables; `length` scalar or per-row [B] valid-prefix
+    counts. Returns [B, H, hd] fp32."""
+    B, H, hd = q.shape
+    Hkv = k_pool.shape[1]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, hd)
+
+    gp = (-G) % 8
+    dp = (-hd) % 128
+    if gp:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, gp), (0, 0)))
+    if dp:
+        qg = jnp.pad(qg, ((0, 0), (0, 0), (0, 0), (0, dp)))
+        k_pool = jnp.pad(k_pool, ((0, 0), (0, 0), (0, 0), (0, dp)))
+        v_pool = jnp.pad(v_pool, ((0, 0), (0, 0), (0, 0), (0, dp)))
+
+    out = paged_decode_attention(qg, k_pool, v_pool, tables, length,
+                                 window=window, scale=1.0 / (hd ** 0.5),
+                                 interpret=interpret)
     return out[:, :, :G, :hd].reshape(B, H, hd)

@@ -1,0 +1,4 @@
+from repro.kernels.prefill_attention.ops import gqa_prefill, gqa_prefill_paged
+from repro.kernels.prefill_attention.kernel import (paged_prefill_attention,
+                                                    prefill_attention)
+from repro.kernels.prefill_attention.ref import prefill_attention_ref

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle: models/layers.prefill_attention_jnp reshaped to the
+kernel's [B, Hkv, C*G, hd] chunk-major query-row layout. `start` is the
+per-row [B] global position of chunk token 0 (the serving engine's
+staggered admission depths)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import prefill_attention_jnp
+
+
+def prefill_attention_ref(q, k, v, start, g: int, window: int = 0):
+    B, Hkv, CG, hd = q.shape
+    C = CG // g
+    # [B, Hkv, C*G, hd] -> [B, C, Hkv*G, hd]
+    qc = q.reshape(B, Hkv, C, g, hd).transpose(0, 2, 1, 3, 4)
+    qc = qc.reshape(B, C, Hkv * g, hd)
+    out = prefill_attention_jnp(qc, k, v, start, window=window)
+    out = out.reshape(B, C, Hkv, g, hd).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, Hkv, CG, hd).astype(jnp.float32)

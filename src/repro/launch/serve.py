@@ -59,14 +59,32 @@ def parse_args(argv=None):
     ap.add_argument("--arq-max-tx", type=int, default=0,
                     help=">0: bounded ARQ — exhausted uplinks are "
                          "erased and the request abandoned")
+    ap.add_argument("--prefill", default="chunked",
+                    choices=["chunked", "token"],
+                    help="admission plane: bucketed prompt chunks (one "
+                         "launch per chunk) or the token-by-token path; "
+                         "tokens and bills are bit-identical either way")
+    ap.add_argument("--kv", default="paged", choices=["paged", "dense"],
+                    help="slot KV layout: shared page pool (capacity "
+                         "bounded by tokens in flight) or dense "
+                         "per-slot [B, S] cache")
+    ap.add_argument("--chunk-size", type=int, default=32,
+                    help="max prompt tokens absorbed per cycle "
+                         "(chunked prefill)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="paged-KV page length in tokens")
+    ap.add_argument("--page-budget", type=int, default=0,
+                    help=">0: cap the shared page pool at this many "
+                         "pages (0 = dense-parity capacity)")
     ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--greedy", action="store_true")
     ap.add_argument("--mesh", default="none", choices=["none", "test"])
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--aot-warmup", action="store_true",
-                    help="compile the decode step before admitting "
-                         "requests and print aot_warmup_compile_wall_s= "
-                         "(near-zero on a warm persistent cache)")
+                    help="compile the decode step AND every prefill "
+                         "bucket before admitting requests and print "
+                         "aot_warmup_compile_wall_s= (near-zero on a "
+                         "warm persistent cache)")
     ap.add_argument("--no-compile-cache", action="store_true",
                     help="skip the persistent XLA compile cache "
                          "(launch/compile_cache.py)")
@@ -194,7 +212,10 @@ def main(argv=None) -> dict:
                              M.param_specs(cfg))
         engine = ServeEngine(cfg, params, n_slots=args.batch, radio=radio,
                              temperature=args.temperature,
-                             greedy=args.greedy)
+                             greedy=args.greedy, prefill=args.prefill,
+                             kv=args.kv, chunk_size=args.chunk_size,
+                             page_size=args.page_size,
+                             page_budget=args.page_budget)
         if args.aot_warmup:
             wall = engine.warmup_compile(trace.max_seq_len())
             print(f"aot_warmup_compile_wall_s={wall:.3f}", flush=True)
@@ -206,9 +227,14 @@ def main(argv=None) -> dict:
           f"{d['generated_tokens']} tokens "
           f"({d['tokens_per_s']:.1f} tok/s) | statuses {d['statuses']}")
     print(f"latency p50 {d['p50_latency_cycles']:.0f} / "
-          f"p99 {d['p99_latency_cycles']:.0f} cycles | radio "
-          f"{d['bits']:.0f} bits ({d['erased_bits']:.0f} erased), "
+          f"p99 {d['p99_latency_cycles']:.0f} cycles | ttft p50 "
+          f"{d['p50_ttft_cycles']:.0f} / p99 {d['p99_ttft_cycles']:.0f} "
+          f"cycles | radio {d['bits']:.0f} bits "
+          f"({d['erased_bits']:.0f} erased), "
           f"{d['energy_j'] * 1e3:.3f} mJ")
+    if d["kv"] == "paged":
+        print(f"paged kv: {d['peak_pages']}/{d['n_pages']} peak pages "
+              f"({args.page_size} tokens each)")
     assert abs(d["delivered_bits"] + d["erased_bits"] - d["bits"]) < 1e-6
     return {"generated": gen_matrix(report, args.new_tokens),
             "report": d, "results": report.results}

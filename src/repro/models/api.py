@@ -24,18 +24,21 @@ class ModelApi:
     cache_shapes: Optional[Callable] = None
     init_cache: Optional[Callable] = None
     decode_step: Optional[Callable] = None
+    # vectorized whole-chunk prefill (serving admission); families
+    # without one fall back to runtime/serve_step.py's exact scan
+    prefill_step: Optional[Callable] = None
 
 
 _FAMILIES = {
     "dense": ModelApi(transformer.model_specs, transformer.forward,
                       transformer.init_cache_shapes, transformer.init_cache,
-                      transformer.decode_step),
+                      transformer.decode_step, transformer.prefill_step),
     "moe": ModelApi(transformer.model_specs, transformer.forward,
                     transformer.init_cache_shapes, transformer.init_cache,
-                    transformer.decode_step),
+                    transformer.decode_step, transformer.prefill_step),
     "vlm": ModelApi(transformer.model_specs, transformer.forward,
                     transformer.init_cache_shapes, transformer.init_cache,
-                    transformer.decode_step),
+                    transformer.decode_step, transformer.prefill_step),
     "ssm": ModelApi(xlstm.model_specs, xlstm.forward,
                     xlstm.cache_shapes, xlstm.init_cache, xlstm.decode_step),
     "hybrid": ModelApi(hybrid.model_specs, hybrid.forward,

@@ -221,6 +221,133 @@ def decode_attention_jnp(q, k_cache, v_cache, length, window: int = 0,
     return out.reshape(B, H, hd)
 
 
+def prefill_attention_jnp(q, k_cache, v_cache, start, window: int = 0):
+    """Chunk GQA attention against a cache. q [B,C,H,hd] — a C-token
+    prompt chunk per row; caches [B,Hkv,S,hd] already holding the
+    chunk's own K/V columns; `start` = global position of chunk token 0,
+    a scalar or per-row [B] vector (staggered admissions). Query c of
+    row b attends cache positions <= start[b] + c, optionally
+    sliding-window limited — the multi-query generalisation of
+    `decode_attention_jnp` (C=1, start=length-1 coincide bitwise)."""
+    B, Hkv, S, hd = k_cache.shape
+    C, H = q.shape[1], q.shape[2]
+    G = H // Hkv
+    qf = q.reshape(B, C, Hkv, G, hd)
+    logits = jnp.einsum("bchgd,bhsd->bchgs", qf, k_cache.astype(qf.dtype))
+    logits = logits.astype(jnp.float32) / math.sqrt(hd)
+    qpos = jnp.asarray(start).reshape(-1, 1) + jnp.arange(C)[None]  # [B|1,C]
+    pos = jnp.arange(S)
+    valid = pos[None, None, :] <= qpos[..., None]                   # [B,C,S]
+    if window:
+        valid &= pos[None, None, :] > qpos[..., None] - window
+    logits = jnp.where(valid[:, :, None, None, :], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bchgs,bhsd->bchgd", w.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, C, H, hd)
+
+
+# ---------------------------------------------------------------- paged KV
+def paged_view(pool, tables):
+    """Gather a slot-major dense view [B, Hkv, n_lp*page, hd] out of a
+    shared page pool [n_pages, Hkv, page, hd] via per-slot page tables
+    [B, n_lp]: logical column c of row b lives at
+    pool[tables[b, c // page], :, c % page]. Placeholder table entries
+    surface whatever the pool holds there — always masked downstream by
+    the valid-prefix length, so they contribute exact zeros."""
+    B, n_lp = tables.shape
+    n_pages, Hkv, page, hd = pool.shape
+    v = pool[tables]                                  # [B, n_lp, Hkv, page, hd]
+    return v.transpose(0, 2, 1, 3, 4).reshape(B, Hkv, n_lp * page, hd)
+
+
+def paged_insert(pool, tables, cols, vals, keep):
+    """Scatter vals [B, C, Hkv, hd] into the pool at each slot's logical
+    columns `cols` [B, C]; positions with keep=False route out of
+    bounds and are dropped. The pool has no batch axis — slots share
+    it — so per-row masking (inactive slots, padded chunk tails) must
+    happen here at the write, not by a post-hoc batch select."""
+    n_pages, Hkv, page, hd = pool.shape
+    phys = jnp.take_along_axis(tables, cols // page, axis=1)    # [B, C]
+    phys = jnp.where(keep, phys, n_pages)                       # OOB -> drop
+    off = cols % page
+    return pool.at[phys, :, off, :].set(vals.astype(pool.dtype),
+                                        mode="drop")
+
+
+def _serve_kernel_route() -> bool:
+    use_kernel = _os.environ.get("REPRO_SERVE_KERNEL", "auto")
+    on_tpu = jax.default_backend() == "tpu"
+    return use_kernel == "1" or (use_kernel == "auto" and on_tpu)
+
+
+def decode_attention_slots_paged(q, k_pool, v_pool, tables, lengths,
+                                 window: int = 0):
+    """Per-slot flash-decode over the shared page pool: q [B,H,hd],
+    pools [n_pages,Hkv,page,hd], `tables` [B,n_lp], `lengths` [B].
+    Kernel route streams pool pages straight off the scalar-prefetched
+    page table; the jnp fallback gathers a dense per-slot view first —
+    both are bit-equivalent to dense decode on the valid prefix."""
+    on_tpu = jax.default_backend() == "tpu"
+    if _serve_kernel_route():
+        from repro.kernels.decode_attention.ops import gqa_decode_paged
+        return gqa_decode_paged(q, k_pool, v_pool, tables, lengths,
+                                window=window,
+                                interpret=not on_tpu).astype(q.dtype)
+    return decode_attention_jnp(q, paged_view(k_pool, tables),
+                                paged_view(v_pool, tables), lengths,
+                                window=window).astype(q.dtype)
+
+
+def attention_prefill_slots(p, x, cfg, cache_k, cache_v, start, n_valid,
+                            window=0, pages=None):
+    """Fused chunk prefill: x [B,C,d] — C prompt tokens per slot
+    starting at per-row cache position `start` [B]; chunk positions
+    >= n_valid[b] are padded tail and masked out of the KV insert. One
+    bulk K/V column write + one chunk-vs-cache attention launch replace
+    C decode steps. `pages` = {"tables": [B,n_lp], "page_size": int,
+    "active": [B] bool or None} switches the cache to the shared page
+    pool. Returns (out [B,C,d], new_k, new_v)."""
+    B, C, _ = x.shape
+    hd = cfg.hd
+    positions = start[:, None] + jnp.arange(C)[None]        # [B, C]
+    q, k, v = _qkv(p, x, cfg, positions)                    # [B,C,H|Hkv,hd]
+    valid = jnp.arange(C)[None, :] < n_valid[:, None]       # [B, C]
+    on_tpu = jax.default_backend() == "tpu"
+    if pages is not None:
+        keep = valid
+        if pages.get("active") is not None:
+            keep &= pages["active"][:, None]
+        cache_k = paged_insert(cache_k, pages["tables"], positions, k, keep)
+        cache_v = paged_insert(cache_v, pages["tables"], positions, v, keep)
+        if _serve_kernel_route():
+            from repro.kernels.prefill_attention.ops import gqa_prefill_paged
+            out = gqa_prefill_paged(q, cache_k, cache_v, pages["tables"],
+                                    start, window=window,
+                                    interpret=not on_tpu)
+        else:
+            out = prefill_attention_jnp(q, paged_view(cache_k, pages["tables"]),
+                                        paged_view(cache_v, pages["tables"]),
+                                        start, window=window)
+    else:
+        S = cache_k.shape[2]
+        rows = jnp.arange(B)[:, None]
+        cols = jnp.where(valid, positions, S)               # OOB -> drop
+        cache_k = cache_k.at[rows, :, cols, :].set(
+            k.astype(cache_k.dtype), mode="drop")
+        cache_v = cache_v.at[rows, :, cols, :].set(
+            v.astype(cache_v.dtype), mode="drop")
+        if _serve_kernel_route():
+            from repro.kernels.prefill_attention.ops import gqa_prefill
+            out = gqa_prefill(q, cache_k, cache_v, start, window=window,
+                              interpret=not on_tpu)
+        else:
+            out = prefill_attention_jnp(q, cache_k, cache_v, start,
+                                        window=window)
+    out = out.reshape(B, C, cfg.n_heads * hd).astype(x.dtype)
+    return constrain(linear(p["wo"], out), "batch", "seq",
+                     "act_embed"), cache_k, cache_v
+
+
 def attention_train(p, x, cfg, positions=None, causal=True, window=0):
     B, S, _ = x.shape
     if positions is None:
@@ -302,32 +429,46 @@ def decode_attention_slots(q, k_cache, v_cache, lengths, window: int = 0):
                                 window=window).astype(q.dtype)
 
 
-def attention_decode_slots(p, x, cfg, cache_k, cache_v, indices, window=0):
+def attention_decode_slots(p, x, cfg, cache_k, cache_v, indices, window=0,
+                           pages=None):
     """Slot-axis decode: x [B,1,d], `indices` [B] — each row writes its
     k/v at its own cache position and attends its own prefix. The
     continuous-batching analogue of `attention_decode`; rows are fully
     independent, so admitting a new request into a freed slot never
-    perturbs its neighbours."""
+    perturbs its neighbours. With `pages` = {"tables", "page_size",
+    "active"} the caches are the shared page pool [n_pages,Hkv,page,hd]
+    and writes land through each slot's page table (inactive rows'
+    writes are dropped — the pool has no batch axis to select over)."""
     B = x.shape[0]
     hd = cfg.hd
     positions = indices[:, None]                           # [B,1]
     q, k, v = _qkv(p, x, cfg, positions)
-    S = cache_k.shape[2]
-    hit = jnp.arange(S)[None, :] == indices[:, None]       # [B,S]
-    cache_k = jnp.where(hit[:, None, :, None],
-                        k.transpose(0, 2, 1, 3).astype(cache_k.dtype),
-                        cache_k)
-    cache_v = jnp.where(hit[:, None, :, None],
-                        v.transpose(0, 2, 1, 3).astype(cache_v.dtype),
-                        cache_v)
-    out = decode_attention_slots(q[:, 0], cache_k, cache_v, indices + 1,
-                                 window)
+    if pages is not None:
+        keep = jnp.ones((B, 1), bool) if pages.get("active") is None \
+            else pages["active"][:, None]
+        cache_k = paged_insert(cache_k, pages["tables"], positions, k, keep)
+        cache_v = paged_insert(cache_v, pages["tables"], positions, v, keep)
+        out = decode_attention_slots_paged(q[:, 0], cache_k, cache_v,
+                                           pages["tables"], indices + 1,
+                                           window)
+    else:
+        S = cache_k.shape[2]
+        hit = jnp.arange(S)[None, :] == indices[:, None]   # [B,S]
+        cache_k = jnp.where(hit[:, None, :, None],
+                            k.transpose(0, 2, 1, 3).astype(cache_k.dtype),
+                            cache_k)
+        cache_v = jnp.where(hit[:, None, :, None],
+                            v.transpose(0, 2, 1, 3).astype(cache_v.dtype),
+                            cache_v)
+        out = decode_attention_slots(q[:, 0], cache_k, cache_v, indices + 1,
+                                     window)
     out = out.reshape(B, 1, cfg.n_heads * hd).astype(x.dtype)
     return constrain(linear(p["wo"], out), "batch", "seq",
                      "act_embed"), cache_k, cache_v
 
 
-def attention_decode(p, x, cfg, cache_k, cache_v, index, window=0):
+def attention_decode(p, x, cfg, cache_k, cache_v, index, window=0,
+                     pages=None):
     """x [B,1,d]; cache [B,Hkv,S,hd]; index = scalar write position, or
     a per-slot [B] vector (dispatches to `attention_decode_slots`; the
     scalar path stays bitwise the legacy decode).
@@ -336,7 +477,7 @@ def attention_decode(p, x, cfg, cache_k, cache_v, index, window=0):
 
     if jnp.asarray(index).ndim:
         return attention_decode_slots(p, x, cfg, cache_k, cache_v, index,
-                                      window)
+                                      window, pages=pages)
     B = x.shape[0]
     hd = cfg.hd
     positions = jnp.broadcast_to(index[None, None], (B, 1))

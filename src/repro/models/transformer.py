@@ -67,9 +67,32 @@ def apply_block(lp: dict, x: jax.Array, cfg, positions=None, causal=True,
     return constrain(x, "batch", "seq", "act_embed"), aux
 
 
-def apply_block_decode(lp: dict, x, cfg, ck, cv, index, window=0):
+def apply_block_decode(lp: dict, x, cfg, ck, cv, index, window=0,
+                       pages=None):
     h = L.apply_norm(lp["ln_attn"], x, cfg.norm)
-    attn, ck, cv = L.attention_decode(lp["attn"], h, cfg, ck, cv, index, window)
+    attn, ck, cv = L.attention_decode(lp["attn"], h, cfg, ck, cv, index,
+                                      window, pages=pages)
+    if cfg.parallel_block:
+        m = (apply_moe(lp["moe"], h, cfg)[0] if cfg.is_moe
+             else L.apply_mlp(lp["mlp"], h))
+        x = x + attn + m
+    else:
+        x = x + attn
+        h = L.apply_norm(lp["ln_mlp"], x, cfg.norm)
+        m = (apply_moe(lp["moe"], h, cfg)[0] if cfg.is_moe
+             else L.apply_mlp(lp["mlp"], h))
+        x = x + m
+    return x, ck, cv
+
+
+def apply_block_prefill(lp: dict, x, cfg, ck, cv, start, n_valid, window=0,
+                        pages=None):
+    """Chunk analogue of `apply_block_decode`: x [B,C,d] prompt chunks at
+    per-row positions start[b]..start[b]+C-1, chunk tails >= n_valid[b]
+    masked out of the KV insert."""
+    h = L.apply_norm(lp["ln_attn"], x, cfg.norm)
+    attn, ck, cv = L.attention_prefill_slots(lp["attn"], h, cfg, ck, cv,
+                                             start, n_valid, window, pages)
     if cfg.parallel_block:
         m = (apply_moe(lp["moe"], h, cfg)[0] if cfg.is_moe
              else L.apply_mlp(lp["mlp"], h))
@@ -130,10 +153,32 @@ def init_cache(cfg, batch_size: int, seq_len: int) -> dict:
             init_cache_shapes(cfg, batch_size, seq_len).items()}
 
 
+def paged_cache_shapes(cfg, n_pages: int, page_size: int):
+    """Paged KV layout: fixed-size pages from one shared pool — NO batch
+    axis; slots map logical columns onto pool pages via per-slot page
+    tables (serve/paging.py owns allocation). Capacity is bounded by
+    total tokens in flight (n_pages * page_size), not B * seq_len."""
+    shape = (cfg.n_layers, n_pages, cfg.n_kv_heads, page_size, cfg.hd)
+    axes = ("layers", None, "kv_heads", None, None)
+    return {
+        "k": (shape, axes, cfg.dtype),
+        "v": (shape, axes, cfg.dtype),
+    }
+
+
+def init_paged_cache(cfg, n_pages: int, page_size: int) -> dict:
+    return {name: jnp.zeros(shape, dtype)
+            for name, (shape, axes, dtype) in
+            paged_cache_shapes(cfg, n_pages, page_size).items()}
+
+
 def decode_step(params: dict, cache: dict, token: jax.Array, index: jax.Array,
-                cfg, window: int = 0) -> tuple:
-    """token [B,1] int32; index scalar int32 (current position).
-    Returns (logits [B,1,V], new_cache).
+                cfg, window: int = 0, pages=None) -> tuple:
+    """token [B,1] int32; index scalar int32 (current position) or a
+    per-slot [B] vector. Returns (logits [B,1,V], new_cache). With
+    `pages` = {"tables": [B,n_lp], "page_size": int, "active": [B] bool
+    or None} the cache leaves are the shared page pool from
+    `init_paged_cache` and writes route through each slot's page table.
 
     The stacked [L, ...] caches ride the scan CARRY and are updated
     in place with dynamic_update_slice — scanning them as xs/ys makes
@@ -146,7 +191,8 @@ def decode_step(params: dict, cache: dict, token: jax.Array, index: jax.Array,
         lp, l = lp_l
         ck = jax.lax.dynamic_index_in_dim(ks, l, 0, keepdims=False)
         cv = jax.lax.dynamic_index_in_dim(vs, l, 0, keepdims=False)
-        x, ck, cv = apply_block_decode(lp, x, cfg, ck, cv, index, window)
+        x, ck, cv = apply_block_decode(lp, x, cfg, ck, cv, index, window,
+                                       pages=pages)
         ks = jax.lax.dynamic_update_index_in_dim(ks, ck.astype(ks.dtype), l, 0)
         vs = jax.lax.dynamic_update_index_in_dim(vs, cv.astype(vs.dtype), l, 0)
         return (x, ks, vs), None
@@ -157,3 +203,38 @@ def decode_step(params: dict, cache: dict, token: jax.Array, index: jax.Array,
     x = L.apply_norm(params["ln_f"], x, cfg.norm)
     logits = L.unembed(params["embed"], x)
     return logits, {"k": ks, "v": vs}
+
+
+def prefill_step(params: dict, cache: dict, tokens: jax.Array,
+                 start: jax.Array, n_valid: jax.Array, cfg,
+                 window: int = 0, pages=None) -> tuple:
+    """Fused chunk prefill: tokens [B,C] — one prompt chunk per slot,
+    row b's chunk starting at cache position start[b] with n_valid[b]
+    real tokens (the rest padded tail, masked out of the KV insert; a
+    row with n_valid=0 is untouched). One launch writes the chunk's KV
+    columns in bulk and attends the whole chunk, instead of C decode
+    steps. Returns (last_logits [B,V] fp32 — the logits of each row's
+    LAST valid chunk token, exactly what sampling the first generated
+    token needs — and new_cache)."""
+    B, C = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens, cfg.dtype)
+
+    def body(carry, lp_l):
+        x, ks, vs = carry
+        lp, l = lp_l
+        ck = jax.lax.dynamic_index_in_dim(ks, l, 0, keepdims=False)
+        cv = jax.lax.dynamic_index_in_dim(vs, l, 0, keepdims=False)
+        x, ck, cv = apply_block_prefill(lp, x, cfg, ck, cv, start, n_valid,
+                                        window, pages=pages)
+        ks = jax.lax.dynamic_update_index_in_dim(ks, ck.astype(ks.dtype), l, 0)
+        vs = jax.lax.dynamic_update_index_in_dim(vs, cv.astype(vs.dtype), l, 0)
+        return (x, ks, vs), None
+
+    (x, ks, vs), _ = jax.lax.scan(
+        body, (x, cache["k"], cache["v"]),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    x = L.apply_norm(params["ln_f"], x, cfg.norm)
+    last = jnp.clip(n_valid - 1, 0, C - 1)
+    xl = jnp.take_along_axis(x, last[:, None, None], axis=1)   # [B,1,d]
+    logits = L.unembed(params["embed"], xl)
+    return logits[:, 0].astype(jnp.float32), {"k": ks, "v": vs}

@@ -1,10 +1,32 @@
-"""Decode (serving) step: ONE new token against a seq_len KV/state cache."""
+"""Decode (serving) steps: ONE new token — or one bucketed prompt CHUNK —
+against a seq_len KV/state cache, dense or paged.
+
+The chunked-prefill contract: `make_prefill_step(...)` returns
+    prefill(params, cache, tokens [B,C], start [B], n_valid [B])
+        -> (last_logits [B,V] fp32, new_cache)
+where row b consumes chunk tokens 0..n_valid[b]-1 at cache positions
+start[b].. and rows with n_valid=0 are untouched. Two implementations:
+
+  * "scan"  — replays the family's OWN decode_step position-by-position
+    inside one lax.scan, masking cache updates per row. Same primitive
+    sequence as the token-by-token admission path, so cache contents and
+    last-token logits are BIT-IDENTICAL to it by construction, on any
+    backend, for every SLOT_FAMILY (including the paper classifier's
+    O(1) streaming cache — its conv tap buffer / pending pool / LSTM h,c
+    admit via this one batched scan).
+  * "fused" — the family's vectorized prefill_step (transformer
+    families): bulk KV column insert + one flash-prefill kernel launch
+    per chunk. The TPU hot path; float-tolerance (not bitwise) vs scan.
+
+"auto" resolves to fused on TPU when the family has one, scan elsewhere.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import api as M
+from repro.models import transformer
 from repro.runtime.train_step import window_for
 
 
@@ -27,3 +49,142 @@ def cache_specs(cfg, shape_cfg):
     sds = {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, ax, dt) in shapes.items()}
     axes = {k: ax for k, (sh, ax, dt) in shapes.items()}
     return sds, axes
+
+
+# ------------------------------------------------------------- paged KV
+def paged_cache_specs(cfg, n_pages: int, page_size: int):
+    """(ShapeDtypeStruct tree, logical-axes tree) for the shared-pool
+    paged cache (attention families only — recurrent O(1) caches have
+    nothing to page)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"paged KV unsupported for family {cfg.family!r}")
+    shapes = transformer.paged_cache_shapes(cfg, n_pages, page_size)
+    sds = {k: jax.ShapeDtypeStruct(sh, dt) for k, (sh, ax, dt) in shapes.items()}
+    axes = {k: ax for k, (sh, ax, dt) in shapes.items()}
+    return sds, axes
+
+
+def make_paged_decode_step(cfg, shape_cfg, page_size: int):
+    """Decode against the shared page pool. `tables` [B, n_lp] per-slot
+    page tables; `active` [B] bool — inactive rows' pool writes are
+    DROPPED in-graph (the pool has no batch axis for the engine to
+    select over)."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"paged KV unsupported for family {cfg.family!r}")
+    model = M.get_model(cfg)
+    window = window_for(cfg, shape_cfg)
+
+    def decode_step(params, cache, token, index, tables, active):
+        pages = {"tables": tables, "page_size": page_size, "active": active}
+        logits, cache = model.decode_step(params, cache, token, index, cfg,
+                                          window, pages=pages)
+        return logits, cache
+
+    return decode_step
+
+
+# ------------------------------------------------------------- prefill
+def _resolve_prefill_impl(model, impl: str) -> str:
+    if impl == "auto":
+        impl = "fused" if (jax.default_backend() == "tpu"
+                           and model.prefill_step is not None) else "scan"
+    if impl == "fused" and model.prefill_step is None:
+        raise ValueError("family has no fused prefill_step")
+    if impl not in ("scan", "fused"):
+        raise ValueError(f"unknown prefill impl {impl!r}")
+    return impl
+
+
+def _batch_mask(mask, new, old, axes):
+    """Per-leaf batch-row select (the cache leaf's own axes name where
+    its batch dim sits)."""
+    i = axes.index("batch")
+    shape = [1] * new.ndim
+    shape[i] = -1
+    return jnp.where(mask.reshape(shape), new, old)
+
+
+def _logit_width(cfg) -> int:
+    return 2 if cfg.family == "tiny" else cfg.vocab_size
+
+
+def make_prefill_step(cfg, shape_cfg, impl: str = "auto"):
+    """Chunked prefill over a DENSE per-slot cache."""
+    model = M.get_model(cfg)
+    window = window_for(cfg, shape_cfg)
+    impl = _resolve_prefill_impl(model, impl)
+    V = _logit_width(cfg)
+
+    if impl == "fused":
+        def prefill_fused(params, cache, tokens, start, n_valid):
+            return model.prefill_step(params, cache, tokens, start, n_valid,
+                                      cfg, window)
+        return prefill_fused
+
+    shapes = model.cache_shapes(cfg, shape_cfg.global_batch,
+                                shape_cfg.seq_len)
+    axes = {k: ax for k, (sh, ax, dt) in shapes.items()}
+
+    def prefill_scan(params, cache, tokens, start, n_valid):
+        B, C = tokens.shape
+
+        def body(carry, i):
+            cache, lg = carry
+            tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+            logits, new_cache = model.decode_step(params, cache, tok,
+                                                  start + i, cfg, window)
+            act = i < n_valid                                  # [B]
+            cache = {k: _batch_mask(act, new_cache[k], cache[k], axes[k])
+                     for k in new_cache}
+            lg = jnp.where((i == n_valid - 1)[:, None],
+                           logits[:, 0].astype(jnp.float32), lg)
+            return (cache, lg), None
+
+        (cache, lg), _ = jax.lax.scan(
+            body, (cache, jnp.zeros((B, V), jnp.float32)),
+            jnp.arange(C, dtype=jnp.int32))
+        return lg, cache
+
+    return prefill_scan
+
+
+def make_paged_prefill_step(cfg, shape_cfg, page_size: int,
+                            impl: str = "auto"):
+    """Chunked prefill over the shared page pool; the step additionally
+    takes `tables` [B, n_lp]. Row masking happens at the pool write
+    (dropped scatters), not by batch select."""
+    if cfg.family not in ("dense", "moe", "vlm"):
+        raise ValueError(f"paged KV unsupported for family {cfg.family!r}")
+    model = M.get_model(cfg)
+    window = window_for(cfg, shape_cfg)
+    impl = _resolve_prefill_impl(model, impl)
+    V = _logit_width(cfg)
+
+    if impl == "fused":
+        def prefill_fused(params, cache, tokens, start, n_valid, tables):
+            pages = {"tables": tables, "page_size": page_size,
+                     "active": None}
+            return model.prefill_step(params, cache, tokens, start, n_valid,
+                                      cfg, window, pages=pages)
+        return prefill_fused
+
+    def prefill_scan(params, cache, tokens, start, n_valid, tables):
+        B, C = tokens.shape
+
+        def body(carry, i):
+            cache, lg = carry
+            tok = jax.lax.dynamic_slice_in_dim(tokens, i, 1, axis=1)
+            pages = {"tables": tables, "page_size": page_size,
+                     "active": i < n_valid}
+            logits, cache = model.decode_step(params, cache, tok, start + i,
+                                              cfg, window, pages=pages)
+            lg = jnp.where((i == n_valid - 1)[:, None],
+                           logits[:, 0].astype(jnp.float32), lg)
+            return (cache, lg), None
+
+        (cache, lg), _ = jax.lax.scan(
+            body, (cache, jnp.zeros((B, V), jnp.float32)),
+            jnp.arange(C, dtype=jnp.int32))
+        return lg, cache
+
+    return prefill_scan

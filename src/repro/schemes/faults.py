@@ -30,6 +30,8 @@ Semantics (enforced by schemes/population.py):
 from __future__ import annotations
 
 import dataclasses
+import json
+import os
 
 import jax
 import numpy as np
@@ -45,14 +47,66 @@ class FaultPlan:
     p_dropout: per-(cycle, client) probability of a mid-round dropout
                (only clients that escaped outage can drop mid-round);
                the dropped fraction of the upload is itself uniform.
+    log:       recorded outage trace (`from_log`). When non-empty the
+               plan REPLAYS it — events come from the log, no RNG is
+               touched, and the probabilities are ignored. Stored as a
+               sorted tuple of (cycle, client, event, frac) tuples so
+               the plan stays frozen + hashable.
     """
     seed: int = 0
     p_outage: float = 0.0
     p_dropout: float = 0.0
+    log: tuple = ()
 
     @property
     def active(self) -> bool:
-        return self.p_outage > 0.0 or self.p_dropout > 0.0
+        return bool(self.log) or self.p_outage > 0.0 or self.p_dropout > 0.0
+
+    @classmethod
+    def from_log(cls, source, seed: int = 0) -> "FaultPlan":
+        """Build a replay plan from a RECORDED outage trace instead of
+        Bernoulli draws: a JSON list of per-cycle client events, each
+        `{"cycle": int, "client": int, "event": "outage" | "dropout",
+        "frac": float}` (frac only for dropouts — the fraction of the
+        upload sent before dying, clipped to (0, 1) like the drawn
+        path). `source` may be a path to such a JSON file, the JSON
+        text itself, or an already-parsed iterable of event dicts.
+        Replay is bit-deterministic by construction: the same log gives
+        the identical event sequence every run, on any seed — see
+        docs/ACCOUNTING.md §Faults."""
+        if isinstance(source, (str, os.PathLike)):
+            s = os.fspath(source)
+            if os.path.exists(s):
+                with open(s) as f:
+                    events = json.load(f)
+            else:
+                events = json.loads(s)
+        else:
+            events = list(source)
+        log = []
+        for e in events:
+            kind = e["event"]
+            if kind not in ("outage", "dropout"):
+                raise ValueError(f"unknown fault event {kind!r}")
+            frac = float(e.get("frac", 0.0))
+            if kind == "dropout" and not 0.0 < frac < 1.0:
+                raise ValueError(
+                    f"dropout frac must be in (0, 1), got {frac}")
+            log.append((int(e["cycle"]), int(e["client"]), kind, frac))
+        return cls(seed=seed, log=tuple(sorted(log)))
+
+    def _replay(self, cycle: int, n: int):
+        out = np.zeros(n, bool)
+        frac = np.full(n, np.nan)
+        for c, client, kind, f in self.log:
+            if c != cycle or not 0 <= client < n:
+                continue
+            if kind == "outage":
+                out[client] = True
+            else:
+                frac[client] = np.clip(f, 1e-3, 1.0 - 1e-3)
+        frac = np.where(out, np.nan, frac)   # outage wins, as when drawn
+        return out, frac
 
     def events(self, cycle: int, n: int):
         """-> (outage [n] bool, drop_frac [n] float64) for one cycle.
@@ -63,7 +117,11 @@ class FaultPlan:
         touching any RNG (bitwise-neutral default)."""
         out = np.zeros(n, bool)
         frac = np.full(n, np.nan)
-        if not self.active or n == 0:
+        if n == 0:
+            return out, frac
+        if self.log:
+            return self._replay(cycle, n)
+        if not self.active:
             return out, frac
         key = jax.random.fold_in(
             jax.random.PRNGKey(self.seed + _PLAN_FOLD_SEED), cycle)
@@ -91,8 +149,11 @@ class FaultPlan:
         n = int(p_outage.shape[0])
         out = np.zeros(n, bool)
         frac = np.full(n, np.nan)
-        if n == 0 or not (np.any(p_outage > 0.0)
-                          or np.any(p_dropout > 0.0)):
+        if n == 0:
+            return out, frac
+        if self.log:
+            return self._replay(cycle, n)
+        if not (np.any(p_outage > 0.0) or np.any(p_dropout > 0.0)):
             return out, frac
         key = jax.random.fold_in(
             jax.random.PRNGKey(self.seed + _PLAN_FOLD_SEED), cycle)

@@ -10,6 +10,43 @@ between requests (`mode="continuous"`). `mode="static"` is the
 classical baseline: a batch is admitted only when EVERY slot is free,
 so the whole batch drains at the pace of its slowest member.
 
+Two admission planes (`prefill=`):
+
+* "chunked" (default) — an admitted prompt enters through bucketed
+  prefill chunks (runtime/serve_step.make_prefill_step): up to
+  `chunk_size` prompt tokens per cycle in ONE launch, chunk shapes
+  bucketed to powers of two (serve/paging.prefill_buckets) so distinct
+  prompt lengths share executables. Time-to-first-token is
+  ceil(P/chunk_size) cycles instead of P. The default "scan"
+  implementation replays the family's own decode_step inside one
+  lax.scan, so cache contents and first-token logits are BIT-IDENTICAL
+  to the token path — including the paper classifier's O(1) streaming
+  cache (conv taps / pending pool / LSTM h,c admit via that one batched
+  scan); `REPRO_PREFILL_IMPL=fused` (auto on TPU) switches attention
+  families to the vectorized bulk-insert + flash-prefill-kernel path.
+* "token" — the PR-7 path, kept bitwise: the prompt feeds through the
+  per-slot decode step one token per cycle.
+
+Two KV layouts (`kv=`):
+
+* "paged" (default) — slot KV lives in fixed-size pages from one
+  shared pool (serve/paging.PagePool; models/transformer paged cache);
+  a request reserves ceil((P+N-1)/page_size) pages at admission and
+  frees them at completion, so memory is bounded by TOKENS IN FLIGHT,
+  not n_slots * max_len, and one long_500k-shaped request can't starve
+  short ones of cache. `page_budget` caps the pool (default: parity
+  with dense, n_slots * ceil(S/page_size) pages). The paper tiny
+  classifier's cache is O(1) recurrent state — nothing to page — so
+  `kv="paged"` silently degrades to dense for it.
+* "dense" — per-slot [B, Hkv, S, hd] cache, kept bitwise.
+
+Billing is INDEPENDENT of both switches by construction: prompt tokens
+ride the user's uplink via `Radio.send_tokens` on the same fold-4242
+ARQ stream before the first chunk runs, every radio draw is keyed only
+by (rid, leg, attempt), and sampling keys only by (rid, 9, t) — so
+bills and generated tokens are bit-for-bit across prefill/kv modes
+(docs/ACCOUNTING.md §Serving).
+
 Engine invariants (pinned by tests/test_serve.py):
 
 * Deterministic replay — same (trace.seed, trace) => same generated
@@ -20,7 +57,8 @@ Engine invariants (pinned by tests/test_serve.py):
   `max_link_tries` sends and is then ABANDONED (billed, never served);
   the batch and every other slot are untouched.
 * Slot hygiene — a freed slot's cache is zeroed before the next
-  admission, so no stale KV / recurrent state leaks across users.
+  admission (dense: batch-row zero; paged: its pages are zeroed when
+  reallocated), so no stale KV / recurrent state leaks across users.
 
 RNG streams (all under `PRNGKey(trace.seed + 13)`, disjoint from every
 training stream — docs/ACCOUNTING.md §RNG): per request rid,
@@ -32,6 +70,7 @@ attempt a `fold_in(fold_in(kreq, 1), a)`; downlink attempt a
 from __future__ import annotations
 
 import dataclasses
+import os as _os
 import time
 from functools import partial
 from typing import Optional, Tuple
@@ -42,12 +81,20 @@ import numpy as np
 
 from repro.configs.base import ShapeConfig
 from repro.models import api as M
-from repro.runtime.serve_step import make_decode_step
+from repro.models import transformer as _tfm
+from repro.runtime.serve_step import (make_decode_step,
+                                      make_paged_decode_step,
+                                      make_paged_prefill_step,
+                                      make_prefill_step)
 from repro.schemes.radio import Radio
+from repro.serve.paging import (PagePool, bucket_for, pages_needed,
+                                prefill_buckets)
 from repro.serve.trace import RequestTrace
 
 #: families whose decode path accepts a per-slot [B] index vector
 SLOT_FAMILIES = ("dense", "moe", "vlm", "tiny")
+#: families whose KV cache can live in the shared page pool
+PAGED_FAMILIES = ("dense", "moe", "vlm")
 #: the serving RNG stream offset (docs/ACCOUNTING.md §RNG)
 SERVE_STREAM = 13
 
@@ -63,6 +110,9 @@ class RequestResult:
     admit_cycle: int = -1
     complete_cycle: int = -1
     latency_cycles: int = -1     # completion - arrival + 1 (queue incl.)
+    first_token_cycle: int = -1
+    ttft_cycles: int = -1        # first token - arrival + 1 (queue incl.)
+    ttft_s: float = -1.0         # admission -> first token, wall seconds
     uplink_bits: float = 0.0
     downlink_bits: float = 0.0
     bits: float = 0.0
@@ -80,6 +130,10 @@ class ServeReport:
     results: Tuple[RequestResult, ...]
     cycles: int
     wall_s: float
+    prefill: str = "token"
+    kv: str = "dense"
+    n_pages: int = 0             # paged: pool size (0 for dense)
+    peak_pages: int = 0          # paged: high-water pages in use
 
     @property
     def generated_tokens(self) -> int:
@@ -111,12 +165,27 @@ class ServeReport:
             return float("nan")
         return float(lat[min(len(lat) - 1, int(q * len(lat)))])
 
+    def ttfts_cycles(self):
+        return sorted(r.ttft_cycles for r in self.results
+                      if r.ttft_cycles >= 0)
+
+    def ttfts_s(self):
+        return sorted(r.ttft_s for r in self.results if r.ttft_s >= 0)
+
+    def ttft_quantile(self, q: float, unit: str = "cycles") -> float:
+        vals = self.ttfts_cycles() if unit == "cycles" else self.ttfts_s()
+        if not vals:
+            return float("nan")
+        return float(vals[min(len(vals) - 1, int(q * len(vals)))])
+
     def tokens_per_s(self) -> float:
         return self.generated_tokens / max(self.wall_s, 1e-9)
 
     def to_dict(self) -> dict:
         return {
             "mode": self.mode, "n_slots": self.n_slots,
+            "prefill": self.prefill, "kv": self.kv,
+            "n_pages": self.n_pages, "peak_pages": self.peak_pages,
             "cycles": self.cycles, "wall_s": self.wall_s,
             "generated_tokens": self.generated_tokens,
             "tokens_per_s": self.tokens_per_s(),
@@ -125,6 +194,10 @@ class ServeReport:
             "energy_j": self.energy_j,
             "p50_latency_cycles": self.latency_quantile(0.50),
             "p99_latency_cycles": self.latency_quantile(0.99),
+            "p50_ttft_cycles": self.ttft_quantile(0.50),
+            "p99_ttft_cycles": self.ttft_quantile(0.99),
+            "p50_ttft_s": self.ttft_quantile(0.50, "s"),
+            "p99_ttft_s": self.ttft_quantile(0.99, "s"),
             "statuses": {s: sum(1 for r in self.results if r.status == s)
                          for s in sorted({r.status for r in self.results})},
         }
@@ -137,17 +210,33 @@ class ServeEngine:
     fault model, bandwidth, power); each request's own `snr_db`
     overrides the budget per user, exactly like training fleets
     (`Radio.from_wcfg(..., snr_db=...)`). `None` = ideal noiseless
-    links — still billed (a perfect link is noiseless, not free)."""
+    links — still billed (a perfect link is noiseless, not free).
+
+    `prefill`/`kv` pick the admission plane and the KV layout (module
+    docstring); `chunk_size` bounds prompt tokens absorbed per cycle,
+    `page_size` is the paged-KV page length in tokens, `page_budget`
+    caps the shared pool (0 = dense-parity capacity)."""
 
     def __init__(self, cfg, params, *, n_slots: int = 8,
                  radio: Optional[Radio] = None, temperature: float = 1.0,
-                 greedy: bool = False, max_link_tries: int = 2):
+                 greedy: bool = False, max_link_tries: int = 2,
+                 prefill: str = "chunked", kv: str = "paged",
+                 chunk_size: int = 32, page_size: int = 16,
+                 page_budget: int = 0):
         if cfg.family not in SLOT_FAMILIES:
             raise ValueError(
                 f"family {cfg.family!r} has no per-slot decode path; "
                 f"serving supports {SLOT_FAMILIES}")
         if n_slots < 1:
             raise ValueError("n_slots must be >= 1")
+        if prefill not in ("chunked", "token"):
+            raise ValueError(f"unknown prefill mode {prefill!r}")
+        if kv not in ("paged", "dense"):
+            raise ValueError(f"unknown kv layout {kv!r}")
+        if chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        if page_size < 1:
+            raise ValueError("page_size must be >= 1")
         self.cfg = cfg
         self.params = params
         self.n_slots = int(n_slots)
@@ -156,66 +245,173 @@ class ServeEngine:
         self.temperature = float(temperature)
         self.greedy = bool(greedy)
         self.max_link_tries = max(1, int(max_link_tries))
+        self.prefill = prefill
+        # recurrent O(1) caches have nothing to page — degrade to dense
+        self.kv = kv if cfg.family in PAGED_FAMILIES else "dense"
+        self.chunk_size = int(chunk_size)
+        self.page_size = int(page_size)
+        self.page_budget = int(page_budget)
         self.out_vocab = 2 if cfg.family == "tiny" else cfg.vocab_size
         self._model = M.get_model(cfg)
-        self._compiled = {}      # max_len -> (step_sample, reset_slot)
+        self._compiled = {}      # max_len -> dict of jitted entry points
 
     # ------------------------------------------------------------ jitted
     def _build(self, S: int):
         if S in self._compiled:
             return self._compiled[S]
         cfg, B = self.cfg, self.n_slots
-        step = make_decode_step(cfg, ShapeConfig("serve", S, B, "decode"))
-        axes = {k: ax for k, (sh, ax, dt) in
-                self._model.cache_shapes(cfg, B, S).items()}
+        sc = ShapeConfig("serve", S, B, "decode")
+        paged = self.kv == "paged"
+        impl = _os.environ.get("REPRO_PREFILL_IMPL", "auto")
+        out = {"buckets": prefill_buckets(self.chunk_size)}
 
-        @partial(jax.jit, static_argnames=("greedy",))
-        def step_sample(params, cache, tokens, idx, keys, temperature,
-                        greedy):
-            logits, cache = step(params, cache, tokens, idx)
-            lg = logits[:, 0].astype(jnp.float32)
+        def sample(lg, keys, temperature, greedy):
             if greedy:
-                nxt = jnp.argmax(lg, axis=-1)
-            else:
-                nxt = jax.vmap(jax.random.categorical)(
-                    keys, lg / jnp.maximum(temperature, 1e-6))
-            return nxt.astype(jnp.int32), cache
+                return jnp.argmax(lg, axis=-1)
+            return jax.vmap(jax.random.categorical)(
+                keys, lg / jnp.maximum(temperature, 1e-6))
 
-        @jax.jit
-        def reset_slot(cache, b):
-            def zero(leaf, ax):
+        if paged:
+            n_lp = -(-S // self.page_size)
+            n_pages = self.page_budget or B * n_lp
+            out["n_lp"], out["n_pages"] = n_lp, int(n_pages)
+            pstep = make_paged_decode_step(cfg, sc, self.page_size)
+
+            @partial(jax.jit, static_argnames=("greedy",))
+            def step_sample(params, cache, tokens, idx, keys, tables,
+                            active, temperature, greedy):
+                logits, cache = pstep(params, cache, tokens, idx, tables,
+                                      active)
+                lg = logits[:, 0].astype(jnp.float32)
+                nxt = sample(lg, keys, temperature, greedy)
+                return nxt.astype(jnp.int32), cache
+
+            @jax.jit
+            def zero_pages(cache, pids):
+                return {k: v.at[:, pids].set(jnp.zeros((), v.dtype),
+                                             mode="drop")
+                        for k, v in cache.items()}
+
+            out["decode"] = step_sample
+            out["zero_pages"] = zero_pages
+
+            if self.prefill == "chunked":
+                pf = make_paged_prefill_step(cfg, sc, self.page_size, impl)
+
+                @partial(jax.jit, static_argnames=("greedy",))
+                def prefill_sample(params, cache, tokens, start, n_valid,
+                                   tables, keys, temperature, greedy):
+                    lg, cache = pf(params, cache, tokens, start, n_valid,
+                                   tables)
+                    nxt = sample(lg, keys, temperature, greedy)
+                    return nxt.astype(jnp.int32), cache
+
+                out["prefill_sample"] = prefill_sample
+        else:
+            step = make_decode_step(cfg, sc)
+            axes = {k: ax for k, (sh, ax, dt) in
+                    self._model.cache_shapes(cfg, B, S).items()}
+
+            def batch_select(mask, new, old, ax):
                 i = list(ax).index("batch")
-                mask = (jnp.arange(leaf.shape[i]) == b).reshape(
-                    [leaf.shape[i] if d == i else 1
-                     for d in range(leaf.ndim)])
-                return jnp.where(mask, jnp.zeros((), leaf.dtype), leaf)
-            return {k: zero(v, axes[k]) for k, v in cache.items()}
+                m = mask.reshape([-1 if d == i else 1
+                                  for d in range(new.ndim)])
+                return jnp.where(m, new, old)
 
-        self._compiled[S] = (step_sample, reset_slot)
-        return self._compiled[S]
+            @partial(jax.jit, static_argnames=("greedy",))
+            def step_sample(params, cache, tokens, idx, keys, active,
+                            temperature, greedy):
+                logits, new_cache = step(params, cache, tokens, idx)
+                cache = {k: batch_select(active, new_cache[k], cache[k],
+                                         axes[k]) for k in new_cache}
+                lg = logits[:, 0].astype(jnp.float32)
+                nxt = sample(lg, keys, temperature, greedy)
+                return nxt.astype(jnp.int32), cache
+
+            @jax.jit
+            def reset_slot(cache, b):
+                def zero(leaf, ax):
+                    i = list(ax).index("batch")
+                    mask = (jnp.arange(leaf.shape[i]) == b).reshape(
+                        [leaf.shape[i] if d == i else 1
+                         for d in range(leaf.ndim)])
+                    return jnp.where(mask, jnp.zeros((), leaf.dtype), leaf)
+                return {k: zero(v, axes[k]) for k, v in cache.items()}
+
+            out["decode"] = step_sample
+            out["reset"] = reset_slot
+
+            if self.prefill == "chunked":
+                pf = make_prefill_step(cfg, sc, impl)
+
+                @partial(jax.jit, static_argnames=("greedy",))
+                def prefill_sample(params, cache, tokens, start, n_valid,
+                                   keys, temperature, greedy):
+                    lg, cache = pf(params, cache, tokens, start, n_valid)
+                    nxt = sample(lg, keys, temperature, greedy)
+                    return nxt.astype(jnp.int32), cache
+
+                out["prefill_sample"] = prefill_sample
+
+        self._compiled[S] = out
+        return out
 
     def warmup_compile(self, max_seq_len: int) -> float:
-        """AOT-compile the batched decode-sample step for `max_seq_len`
-        (what `serve.py --aot-warmup` calls before admitting requests);
-        returns the compile wall seconds. With the persistent compile
-        cache enabled (launch/compile_cache.py) later processes
-        deserialize here instead of recompiling."""
+        """AOT-compile every jitted entry point the serve loop will hit
+        for `max_seq_len`: the batched decode-sample step AND (chunked
+        mode) one prefill-sample executable per power-of-two bucket.
+        Returns the COMPILE wall seconds — tracing/lowering is done
+        first and excluded, because it is paid by every process while
+        the persistent compile cache (launch/compile_cache.py) only
+        short-circuits XLA compilation: on a warm cache the returned
+        wall collapses to deserialization time."""
         S = max(8, int(max_seq_len))
-        step_sample, _ = self._build(S)
-        B = self.n_slots
+        built = self._build(S)
+        cfg, B = self.cfg, self.n_slots
+        paged = self.kv == "paged"
         params_sds = jax.tree.map(
             lambda a: jax.ShapeDtypeStruct(jnp.shape(a), a.dtype),
             self.params)
-        cache_sds = jax.eval_shape(
-            lambda: self._model.init_cache(self.cfg, B, S))
+        if paged:
+            cache_sds = jax.eval_shape(
+                lambda: _tfm.init_paged_cache(cfg, built["n_pages"],
+                                              self.page_size))
+        else:
+            cache_sds = jax.eval_shape(
+                lambda: self._model.init_cache(cfg, B, S))
+        i32 = jnp.int32
+        tok = jax.ShapeDtypeStruct((B, 1), i32)
+        idx = jax.ShapeDtypeStruct((B,), i32)
+        keys = jax.ShapeDtypeStruct((B, 2), jnp.uint32)
+        act = jax.ShapeDtypeStruct((B,), jnp.bool_)
+        temp = jax.ShapeDtypeStruct((), jnp.float32)
+        lowered = []
+        if paged:
+            tbl = jax.ShapeDtypeStruct((B, built["n_lp"]), i32)
+            lowered.append(built["decode"].lower(
+                params_sds, cache_sds, tok, idx, keys, tbl, act, temp,
+                greedy=self.greedy))
+            lowered.append(built["zero_pages"].lower(
+                cache_sds, jax.ShapeDtypeStruct((built["n_lp"],), i32)))
+        else:
+            lowered.append(built["decode"].lower(
+                params_sds, cache_sds, tok, idx, keys, act, temp,
+                greedy=self.greedy))
+        if "prefill_sample" in built:
+            for C in built["buckets"]:
+                toks = jax.ShapeDtypeStruct((B, C), i32)
+                nv = jax.ShapeDtypeStruct((B,), i32)
+                if paged:
+                    lowered.append(built["prefill_sample"].lower(
+                        params_sds, cache_sds, toks, idx, nv, tbl, keys,
+                        temp, greedy=self.greedy))
+                else:
+                    lowered.append(built["prefill_sample"].lower(
+                        params_sds, cache_sds, toks, idx, nv, keys,
+                        temp, greedy=self.greedy))
         t0 = time.perf_counter()
-        step_sample.lower(
-            params_sds, cache_sds,
-            jax.ShapeDtypeStruct((B, 1), jnp.int32),
-            jax.ShapeDtypeStruct((B,), jnp.int32),
-            jax.ShapeDtypeStruct((B, 2), jnp.uint32),
-            jax.ShapeDtypeStruct((), jnp.float32),
-            greedy=self.greedy).compile()
+        for low in lowered:
+            low.compile()
         return time.perf_counter() - t0
 
     # ------------------------------------------------------------- radio
@@ -255,14 +451,25 @@ class ServeEngine:
         cfg, B = self.cfg, self.n_slots
         reqs = trace.sorted()
         if not reqs:
-            return ServeReport(mode, B, (), 0, 0.0)
+            return ServeReport(mode, B, (), 0, 0.0, prefill=self.prefill,
+                               kv=self.kv)
         S = max(8, trace.max_seq_len())
-        step_sample, reset_slot = self._build(S)
+        built = self._build(S)
+        chunked = self.prefill == "chunked"
+        paged = self.kv == "paged"
         base = jax.random.PRNGKey(trace.seed + SERVE_STREAM)
 
         results = {}
         slots = [None] * B
-        cache = self._model.init_cache(cfg, B, S)
+        if paged:
+            n_lp, n_pages = built["n_lp"], built["n_pages"]
+            pool = PagePool(n_pages)
+            cache = _tfm.init_paged_cache(cfg, n_pages, self.page_size)
+            tables = np.zeros((B, n_lp), np.int32)
+        else:
+            pool = None
+            cache = self._model.init_cache(cfg, B, S)
+            tables = None
         qi, cycle = 0, 0
         t0 = time.time()
 
@@ -283,7 +490,17 @@ class ServeEngine:
             res.status = "serving"
             res.admit_cycle = cycle
             return {"r": r, "res": res, "kreq": kreq, "radio": radio,
-                    "prompt": rx, "pos": 0, "last": 0, "new": []}
+                    "prompt": rx, "pos": 0, "last": 0, "new": [],
+                    "admit_wall": time.time()}
+
+        def push_token(st, tok: int) -> None:
+            st["new"].append(tok)
+            st["last"] = tok
+            if len(st["new"]) == 1:
+                res = st["res"]
+                res.first_token_cycle = cycle
+                res.ttft_cycles = cycle - st["r"].arrival_cycle + 1
+                res.ttft_s = time.time() - st["admit_wall"]
 
         def complete(st) -> None:
             r, res = st["r"], st["res"]
@@ -295,19 +512,47 @@ class ServeEngine:
             res.tokens = tuple(int(t) for t in gen)
             res.complete_cycle = cycle
             res.latency_cycles = cycle - r.arrival_cycle + 1
+            if paged:
+                pool.free(st.pop("pgs"))
 
         while qi < len(reqs) or any(s is not None for s in slots):
             # ---- admission (continuous: any free slot; static: barrier)
             if not barrier or all(s is None for s in slots):
+                blocked = False          # paged: FIFO head-of-line wait
                 for b in range(B):
-                    if slots[b] is not None:
+                    if blocked or slots[b] is not None:
                         continue
                     while qi < len(reqs) \
                             and reqs[qi].arrival_cycle <= cycle:
-                        st = admit(reqs[qi])
+                        r = reqs[qi]
+                        if paged:
+                            need = pages_needed(r.prompt_len,
+                                                r.max_new_tokens,
+                                                self.page_size)
+                            if need > n_pages:
+                                raise ValueError(
+                                    f"request {r.rid} needs {need} pages "
+                                    f"but the pool has {n_pages}; raise "
+                                    f"page_budget")
+                            if not pool.can_alloc(need):
+                                blocked = True
+                                break
+                        st = admit(r)
                         qi += 1
                         if st is not None:
-                            cache = reset_slot(cache, jnp.int32(b))
+                            if paged:
+                                pids = pool.alloc(need)
+                                st["pgs"] = pids
+                                tables[b, :] = 0
+                                tables[b, :len(pids)] = pids
+                                cache = built["zero_pages"](
+                                    cache,
+                                    jnp.asarray(np.pad(
+                                        pids, (0, n_lp - len(pids)),
+                                        constant_values=n_pages),
+                                        jnp.int32))
+                            else:
+                                cache = built["reset"](cache, jnp.int32(b))
                             slots[b] = st
                             break
             if not any(s is not None for s in slots):
@@ -316,40 +561,101 @@ class ServeEngine:
                     continue
                 break
 
-            # ---- one batched decode cycle over the slot axis
-            toks = np.zeros((B, 1), np.int32)
-            idx = np.zeros(B, np.int32)
-            keys = np.zeros((B, 2), np.uint32)
-            for b, st in enumerate(slots):
-                if st is None:
-                    continue
-                P = st["r"].prompt_len
-                toks[b, 0] = st["prompt"][st["pos"]] if st["pos"] < P \
-                    else st["last"]
-                idx[b] = st["pos"]
-                t = st["pos"] - (P - 1)
-                if t >= 0 and not self.greedy:
-                    keys[b] = np.asarray(jax.random.fold_in(
-                        jax.random.fold_in(st["kreq"], 9), t))
-            nxt, cache = step_sample(self.params, cache,
-                                     jnp.asarray(toks), jnp.asarray(idx),
-                                     jnp.asarray(keys),
-                                     jnp.float32(self.temperature),
-                                     self.greedy)
-            nxt = np.asarray(nxt)
-            for b, st in enumerate(slots):
-                if st is None:
-                    continue
-                if st["pos"] >= st["r"].prompt_len - 1:
-                    tok = int(nxt[b])
-                    st["new"].append(tok)
-                    st["last"] = tok
-                st["pos"] += 1
-                if len(st["new"]) >= st["r"].max_new_tokens:
-                    complete(st)
-                    slots[b] = None
+            tables_j = jnp.asarray(tables) if paged else None
+            pre = [b for b, st in enumerate(slots)
+                   if st is not None and chunked
+                   and st["pos"] < st["r"].prompt_len]
+            dec = [b for b, st in enumerate(slots)
+                   if st is not None and not (chunked
+                                              and st["pos"] < st["r"].prompt_len)]
+
+            # ---- bucketed prefill chunks over the prefilling slots
+            if pre:
+                cmax = max(min(slots[b]["r"].prompt_len - slots[b]["pos"],
+                               self.chunk_size) for b in pre)
+                C = bucket_for(cmax, built["buckets"])
+                ptoks = np.zeros((B, C), np.int32)
+                pstart = np.zeros(B, np.int32)
+                pnv = np.zeros(B, np.int32)
+                pkeys = np.zeros((B, 2), np.uint32)
+                for b in pre:
+                    st = slots[b]
+                    c = min(st["r"].prompt_len - st["pos"], self.chunk_size)
+                    ptoks[b, :c] = st["prompt"][st["pos"]:st["pos"] + c]
+                    pstart[b] = st["pos"]
+                    pnv[b] = c
+                    if st["pos"] + c >= st["r"].prompt_len \
+                            and not self.greedy:
+                        pkeys[b] = np.asarray(jax.random.fold_in(
+                            jax.random.fold_in(st["kreq"], 9), 0))
+                if paged:
+                    nxtp, cache = built["prefill_sample"](
+                        self.params, cache, jnp.asarray(ptoks),
+                        jnp.asarray(pstart), jnp.asarray(pnv), tables_j,
+                        jnp.asarray(pkeys), jnp.float32(self.temperature),
+                        self.greedy)
+                else:
+                    nxtp, cache = built["prefill_sample"](
+                        self.params, cache, jnp.asarray(ptoks),
+                        jnp.asarray(pstart), jnp.asarray(pnv),
+                        jnp.asarray(pkeys), jnp.float32(self.temperature),
+                        self.greedy)
+                nxtp = np.asarray(nxtp)
+                for b in pre:
+                    st = slots[b]
+                    c = min(st["r"].prompt_len - st["pos"], self.chunk_size)
+                    st["pos"] += c
+                    if st["pos"] >= st["r"].prompt_len:
+                        push_token(st, int(nxtp[b]))
+                        if len(st["new"]) >= st["r"].max_new_tokens:
+                            complete(st)
+                            slots[b] = None
+
+            # ---- one batched decode cycle over the decoding slots
+            if dec:
+                toks = np.zeros((B, 1), np.int32)
+                idx = np.zeros(B, np.int32)
+                keys = np.zeros((B, 2), np.uint32)
+                active = np.zeros(B, bool)
+                for b in dec:
+                    st = slots[b]
+                    P = st["r"].prompt_len
+                    toks[b, 0] = st["prompt"][st["pos"]] if st["pos"] < P \
+                        else st["last"]
+                    idx[b] = st["pos"]
+                    active[b] = True
+                    t = st["pos"] - (P - 1)
+                    if t >= 0 and not self.greedy:
+                        keys[b] = np.asarray(jax.random.fold_in(
+                            jax.random.fold_in(st["kreq"], 9), t))
+                if paged:
+                    nxt, cache = built["decode"](
+                        self.params, cache, jnp.asarray(toks),
+                        jnp.asarray(idx), jnp.asarray(keys), tables_j,
+                        jnp.asarray(active), jnp.float32(self.temperature),
+                        self.greedy)
+                else:
+                    nxt, cache = built["decode"](
+                        self.params, cache, jnp.asarray(toks),
+                        jnp.asarray(idx), jnp.asarray(keys),
+                        jnp.asarray(active), jnp.float32(self.temperature),
+                        self.greedy)
+                nxt = np.asarray(nxt)
+                for b in dec:
+                    st = slots[b]
+                    if st is None:
+                        continue
+                    if st["pos"] >= st["r"].prompt_len - 1:
+                        push_token(st, int(nxt[b]))
+                    st["pos"] += 1
+                    if len(st["new"]) >= st["r"].max_new_tokens:
+                        complete(st)
+                        slots[b] = None
             cycle += 1
 
         wall = time.time() - t0
         ordered = tuple(results[r.rid] for r in reqs)
-        return ServeReport(mode, B, ordered, cycle, wall)
+        return ServeReport(mode, B, ordered, cycle, wall,
+                           prefill=self.prefill, kv=self.kv,
+                           n_pages=built.get("n_pages", 0) if paged else 0,
+                           peak_pages=pool.peak_pages if paged else 0)

@@ -3,6 +3,8 @@ outages, quorum-gated aggregation, FaultPlan chaos schedules, and the
 opt-in stochastic-rounding wire flag. Billing-algebra properties live
 in tests/test_billing.py; kill-and-resume parity in tests/test_resume.py.
 """
+import json
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -288,3 +290,81 @@ def test_stochastic_rounding_changes_payload_not_billing():
                               np.asarray(stoc.payload["w"]))
     assert near.bits == stoc.bits and near.n_tx == stoc.n_tx
     assert near.energy_j == stoc.energy_j
+
+
+# ------------------------------------------------- FaultPlan.from_log
+def test_fault_plan_from_log_replays_exactly(tmp_path):
+    """A recorded outage trace replays bit-deterministically: events
+    come from the log (path, JSON text, or parsed list — all equal),
+    no RNG is touched, the plan seed is irrelevant, and outage wins
+    over a same-cycle dropout exactly as in the drawn path."""
+    events = [{"cycle": 2, "client": 1, "event": "outage"},
+              {"cycle": 2, "client": 0, "event": "dropout", "frac": 0.4},
+              {"cycle": 2, "client": 1, "event": "dropout", "frac": 0.9},
+              {"cycle": 5, "client": 3, "event": "outage"}]
+    p = tmp_path / "outages.json"
+    p.write_text(json.dumps(events))
+    from_path = FaultPlan.from_log(str(p))
+    from_text = FaultPlan.from_log(json.dumps(events))
+    from_list = FaultPlan.from_log(events, seed=99)
+    assert from_path == from_text
+    assert from_path.active and hash(from_path) == hash(from_text)
+    for plan in (from_path, from_text, from_list):
+        for cycle in range(7):
+            out, frac = plan.events(cycle, 4)
+            out2, frac2 = plan.events_arrays(cycle, np.full(4, 0.7),
+                                             np.full(4, 0.7))
+            np.testing.assert_array_equal(out, out2)
+            np.testing.assert_array_equal(
+                np.isnan(frac), np.isnan(frac2))
+            np.testing.assert_array_equal(frac[~np.isnan(frac)],
+                                          frac2[~np.isnan(frac2)])
+            if cycle == 2:
+                assert out.tolist() == [False, True, False, False]
+                assert abs(frac[0] - 0.4) < 1e-12
+                assert np.isnan(frac[1])        # outage wins
+            elif cycle == 5:
+                assert out.tolist() == [False, False, False, True]
+            else:
+                assert not out.any() and np.isnan(frac).all()
+    # validation: malformed events are rejected up front
+    with pytest.raises(ValueError, match="frac"):
+        FaultPlan.from_log([{"cycle": 0, "client": 0,
+                             "event": "dropout", "frac": 1.0}])
+    with pytest.raises(ValueError, match="unknown fault event"):
+        FaultPlan.from_log([{"cycle": 0, "client": 0, "event": "x"}])
+
+
+def test_fault_plan_from_log_drives_population_deterministically():
+    """A replayed plan drives the fleet bit-deterministically run to
+    run, and its logged casualties bill exactly like drawn ones: the
+    named client's whole expected round payload is attempted-but-erased
+    while the unlogged clients train untouched."""
+    base = WirelessConfig(mode="fl", quant_bits=8)
+    log = [{"cycle": 0, "client": 0, "event": "outage"},
+           {"cycle": 0, "client": 2, "event": "dropout", "frac": 0.25}]
+    exps = []
+    for _ in range(2):
+        scheme = _fleet(base, fault_plan=FaultPlan.from_log(log),
+                        quorum=0.0)
+        exp = Experiment(scheme, cycles=2, seed=0,
+                         n_train=N_TRAIN, n_test=N_TEST)
+        exp.run()
+        exps.append(exp)
+    for ra, rb in zip(exps[0].reports, exps[1].reports):
+        assert [c.bits for c in ra.clients] == \
+               [c.bits for c in rb.clients]
+        assert [c.status for c in ra.clients] == \
+               [c.status for c in rb.clients]
+    rep0, rep1 = exps[0].reports
+    scheme = exps[0].scheme
+    assert rep0.clients[0].status == "erased"
+    assert rep0.clients[0].bits == scheme._round_bits_estimate(0)
+    assert rep0.clients[0].erased_bits == rep0.clients[0].bits > 0.0
+    assert rep0.clients[1].status not in ("erased", "dropped_midround")
+    assert rep0.clients[2].status == "dropped_midround"
+    assert rep0.clients[2].bits == pytest.approx(
+        0.25 * scheme._round_bits_estimate(2))
+    # cycle 1 is outside the log: nobody faults
+    assert all(c.status not in ("erased", "dropped_midround")
+               for c in rep1.clients)

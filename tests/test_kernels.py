@@ -284,3 +284,161 @@ def test_tpu_kernel_rng_rejects_interpret_and_missing_seed():
     with pytest.raises(ValueError, match="seed"):
         packed_wire_2d(x, rand, scale, p, 8, interpret=False,
                        rng_mode="tpu")
+
+
+# -------------------------------------------------------- prefill_attention
+def _prefill_fixture(seed, b=8, hkv=2, g=4, s=128, hd=64, c=16):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, c, hkv * g, hd), jnp.float32)
+    kc = jax.random.normal(kk, (b, hkv, s, hd), jnp.float32)
+    vc = jax.random.normal(kv, (b, hkv, s, hd), jnp.float32)
+    # staggered engine starts: every slot prefills at its own depth
+    start = jnp.array([0, 3, 16, 21, 40, 64, 96, 112], jnp.int32)[:b]
+    return q, kc, vc, start
+
+
+@pytest.mark.parametrize("c", [4, 8, 16, 32])
+def test_prefill_kernel_matches_jnp_at_engine_buckets(c):
+    """The serve engine's actual batched prefill call at every
+    power-of-two chunk bucket: flash-prefill kernel (interpret) == the
+    pure-jnp masked-softmax oracle, with per-slot staggered starts."""
+    from repro.kernels.prefill_attention import ops as pf_ops
+    from repro.models.layers import prefill_attention_jnp
+    q, kc, vc, start = _prefill_fixture(31, c=c)
+    out = pf_ops.gqa_prefill(q, kc, vc, start, interpret=True)
+    ref = prefill_attention_jnp(q, kc, vc, start)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("window", [0, 24])
+def test_prefill_kernel_layout_matches_ref(window):
+    """Kernel-layout entry point vs its own ref.py oracle, with and
+    without the sliding window."""
+    from repro.kernels.prefill_attention.kernel import prefill_attention
+    from repro.kernels.prefill_attention.ref import prefill_attention_ref
+    b, hkv, g, s, hd, c = 4, 2, 8, 128, 128, 8
+    key = jax.random.PRNGKey(3)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, hkv, c * g, hd), jnp.float32)
+    kc = jax.random.normal(kk, (b, hkv, s, hd), jnp.float32)
+    vc = jax.random.normal(kv, (b, hkv, s, hd), jnp.float32)
+    start = jnp.array([0, 5, 32, 77], jnp.int32)
+    out = prefill_attention(q, kc, vc, start, g, window=window,
+                            interpret=True)
+    ref = prefill_attention_ref(q, kc, vc, start, g, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_kernel_is_causal():
+    """Chunk token i must see cache columns <= start+i ONLY: poisoning
+    every column beyond each row's last chunk position — and the chunk's
+    own future columns — leaves the output unchanged."""
+    from repro.kernels.prefill_attention import ops as pf_ops
+    q, kc, vc, start = _prefill_fixture(17, c=8)
+    out1 = pf_ops.gqa_prefill(q, kc, vc, start, interpret=True)
+    kc2, vc2 = np.asarray(kc).copy(), np.asarray(vc).copy()
+    for b, st in enumerate(np.asarray(start)):
+        kc2[b, :, st + 8:] = 1e9
+        vc2[b, :, st + 8:] = -1e9
+    out2 = pf_ops.gqa_prefill(q, jnp.asarray(kc2), jnp.asarray(vc2),
+                              start, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2),
+                               rtol=1e-5, atol=1e-5)
+    # and token 0 of each chunk only sees columns <= start: poisoning
+    # column start+1 changes later tokens but never token 0
+    kc3, vc3 = np.asarray(kc).copy(), np.asarray(vc).copy()
+    for b, st in enumerate(np.asarray(start)):
+        kc3[b, :, st + 1:] = 1e9
+        vc3[b, :, st + 1:] = -1e9
+    out3 = pf_ops.gqa_prefill(q, jnp.asarray(kc3), jnp.asarray(vc3),
+                              start, interpret=True)
+    np.testing.assert_allclose(np.asarray(out1)[:, 0],
+                               np.asarray(out3)[:, 0],
+                               rtol=1e-5, atol=1e-5)
+
+
+def _paged_from_dense(kc, vc, page):
+    """Scatter a dense [B,Hkv,S,hd] cache into a shared pool with a
+    non-trivial (reversed per slot) page mapping."""
+    b, hkv, s, hd = kc.shape
+    n_lp = s // page
+    n_pages = b * n_lp
+    kp = np.zeros((n_pages, hkv, page, hd), np.float32)
+    vp = np.zeros((n_pages, hkv, page, hd), np.float32)
+    tables = np.zeros((b, n_lp), np.int32)
+    order = np.arange(n_pages).reshape(b, n_lp)[:, ::-1]
+    for bi in range(b):
+        for j in range(n_lp):
+            pid = order[bi, j]
+            tables[bi, j] = pid
+            kp[pid] = np.asarray(kc)[bi, :, j * page:(j + 1) * page]
+            vp[pid] = np.asarray(vc)[bi, :, j * page:(j + 1) * page]
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(tables)
+
+
+def test_paged_decode_kernel_matches_dense_jnp():
+    """Paged flash decode through per-slot page tables == dense jnp
+    attention over the gathered view, at per-slot lengths."""
+    from repro.models.layers import decode_attention_jnp, paged_view
+    key = jax.random.PRNGKey(23)
+    kq, kk, kv = jax.random.split(key, 3)
+    b, hkv, g, s, hd, page = 4, 2, 4, 64, 64, 16
+    q = jax.random.normal(kq, (b, hkv * g, hd), jnp.float32)
+    kc = jax.random.normal(kk, (b, hkv, s, hd), jnp.float32)
+    vc = jax.random.normal(kv, (b, hkv, s, hd), jnp.float32)
+    kp, vp, tables = _paged_from_dense(kc, vc, page)
+    lengths = jnp.array([1, 17, 40, 64], jnp.int32)
+    out = da_ops.gqa_decode_paged(q, kp, vp, tables, lengths,
+                                  interpret=True)
+    view_k = paged_view(kp, tables)
+    view_v = paged_view(vp, tables)
+    np.testing.assert_array_equal(np.asarray(view_k), np.asarray(kc))
+    ref = decode_attention_jnp(q, view_k, view_v, lengths)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_prefill_kernel_matches_dense_jnp():
+    """Paged flash prefill through page tables == the dense jnp prefill
+    oracle on the gathered view (staggered starts, chunk bucket 8)."""
+    from repro.kernels.prefill_attention import ops as pf_ops
+    from repro.models.layers import paged_view, prefill_attention_jnp
+    key = jax.random.PRNGKey(29)
+    kq, kk, kv = jax.random.split(key, 3)
+    b, hkv, g, s, hd, page, c = 4, 2, 4, 64, 64, 16, 8
+    q = jax.random.normal(kq, (b, c, hkv * g, hd), jnp.float32)
+    kc = jax.random.normal(kk, (b, hkv, s, hd), jnp.float32)
+    vc = jax.random.normal(kv, (b, hkv, s, hd), jnp.float32)
+    kp, vp, tables = _paged_from_dense(kc, vc, page)
+    start = jnp.array([0, 9, 24, 50], jnp.int32)
+    out = pf_ops.gqa_prefill_paged(q, kp, vp, tables, start,
+                                   interpret=True)
+    ref = prefill_attention_jnp(q, paged_view(kp, tables),
+                                paged_view(vp, tables), start)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_insert_drops_masked_rows():
+    """paged_insert routes [B,C] column writes through page tables and
+    DROPS rows with keep=False — the write-site masking the batchless
+    shared pool relies on (garbage from inactive slots must never
+    land)."""
+    from repro.models.layers import paged_insert, paged_view
+    hkv, page, n_lp, b, c = 2, 4, 3, 2, 4
+    pool = jnp.zeros((b * n_lp, hkv, page, 8), jnp.float32)
+    tables = jnp.asarray(np.arange(b * n_lp).reshape(b, n_lp), jnp.int32)
+    cols = jnp.asarray([[0, 1, 2, 3], [5, 6, 7, 8]], jnp.int32)
+    vals = jnp.ones((b, c, hkv, 8), jnp.float32)
+    keep = jnp.asarray([[True, True, False, True],
+                        [True, False, True, True]])
+    out = paged_insert(pool, tables, cols, vals, keep)
+    view = np.asarray(paged_view(out, tables))    # [B, Hkv, S, hd]
+    written = (np.abs(view).sum(axis=(1, 3)) > 0)
+    expect = np.zeros((b, n_lp * page), bool)
+    expect[0, [0, 1, 3]] = True
+    expect[1, [5, 7, 8]] = True
+    np.testing.assert_array_equal(written, expect)

@@ -150,7 +150,11 @@ def test_eight_concurrent_users_end_to_end():
     assert len(rep.results) == 12
     # all 8 slots were actually occupied at cycle 0 (12 arrivals, 8
     # slots): the run needs more cycles than any single request alone
-    assert rep.cycles > max(r.prompt_len + r.max_new_tokens for r in reqs)
+    # (a request takes ceil(P/chunk) prefill cycles + N decode cycles
+    # under the default chunked admission)
+    alone = max(-(-r.prompt_len // eng.chunk_size) + r.max_new_tokens
+                for r in reqs)
+    assert rep.cycles > alone
     for req, r in zip(reqs, rep.results):
         assert r.snr_db == req.snr_db
         assert len(r.tokens) == req.max_new_tokens
@@ -220,3 +224,235 @@ def test_transformer_engine_e2e():
                                 new_tokens=(2, 4)), "continuous")
     assert [r.tokens for r in rep.results] == \
            [r.tokens for r in rep2.results]
+
+
+# --------------------------------------- chunked prefill + paged KV
+MODES = [("token", "dense"), ("chunked", "dense"),
+         ("chunked", "paged"), ("token", "paged")]
+
+
+def _staggered_trace():
+    """Mixed trace exercising every prefill bucket: prompts shorter than
+    the bucket floor, longer than one chunk, arrivals staggered so
+    prefills and decodes share cycles."""
+    reqs = tuple(Request(rid=i, arrival_cycle=[0, 0, 1, 3, 7, 9][i],
+                         prompt_len=[40, 3, 17, 64, 5, 33][i],
+                         max_new_tokens=[6, 9, 4, 5, 8, 3][i],
+                         snr_db=[18.0, 6.0, 12.0, 25.0, 9.0, 15.0][i])
+                 for i in range(6))
+    return RequestTrace(seed=7, requests=reqs)
+
+
+def _bill_rows(rep):
+    return [(r.rid, r.status, r.bits, r.erased_bits, r.energy_j, r.n_tx,
+             r.uplink_bits, r.downlink_bits) for r in rep.results]
+
+
+@pytest.mark.parametrize("cfg", [TINY, QWEN],
+                         ids=["paper-tinylstm", "qwen1.5-0.5b-reduced"])
+def test_prefill_kv_modes_bitwise_equal(cfg):
+    """Every (prefill, kv) combination generates BIT-IDENTICAL tokens,
+    statuses, and radio bills on the same trace — chunked admission and
+    the paged pool are pure scheduling/layout changes (ISSUE 10's core
+    acceptance). The ARQ link is lossy so the bills are non-trivial."""
+    params = params_for(cfg)
+    trace = _staggered_trace()
+    radio = Radio(snr_db=10.0, fading=True, arq_max_tx=6, arq_attempts=2)
+    reps = {}
+    for pf, kv in MODES:
+        eng = ServeEngine(cfg, params, n_slots=3, radio=radio,
+                          temperature=0.8, prefill=pf, kv=kv,
+                          chunk_size=16, page_size=8)
+        reps[(pf, kv)] = eng.serve(trace)
+    ref = reps[("token", "dense")]
+    for mode, rep in reps.items():
+        assert [(r.rid, r.tokens) for r in rep.results] == \
+               [(r.rid, r.tokens) for r in ref.results], mode
+        assert _bill_rows(rep) == _bill_rows(ref), mode
+    # chunked admission finishes the same work in strictly fewer cycles
+    assert reps[("chunked", "paged")].cycles < ref.cycles
+    # paged degrades to dense for the O(1) recurrent classifier
+    expect_kv = "dense" if cfg.family == "tiny" else "paged"
+    assert reps[("chunked", "paged")].kv == expect_kv
+
+
+@pytest.mark.parametrize("cfg", [TINY, QWEN],
+                         ids=["paper-tinylstm", "qwen1.5-0.5b-reduced"])
+def test_prefill_scan_bitwise_matches_token_steps(cfg):
+    """Runtime-level pin of the bit-parity contract: make_prefill_step's
+    scan produces a cache AND last-valid-token logits bitwise equal to
+    feeding the same chunk through decode_step one position at a time
+    with the engine's per-row active masking (staggered starts and
+    ragged n_valid, so the masking genuinely matters)."""
+    from repro.configs.base import ShapeConfig
+    from repro.runtime.serve_step import make_prefill_step
+    model = M.get_model(cfg)
+    params = params_for(cfg)
+    B, S, C = 4, 32, 8
+    sc = ShapeConfig("serve", S, B, "decode")
+    tokens = jax.random.randint(jax.random.PRNGKey(5), (B, C), 1,
+                                cfg.vocab_size, jnp.int32)
+    start = jnp.array([0, 3, 9, 17], jnp.int32)
+    n_valid = jnp.array([8, 1, 0, 5], jnp.int32)
+    cache0 = model.init_cache(cfg, B, S)
+
+    prefill = jax.jit(make_prefill_step(cfg, sc))
+    lg_scan, cache_scan = prefill(params, cache0, tokens, start, n_valid)
+
+    shapes = model.cache_shapes(cfg, B, S)
+    axes = {k: ax for k, (sh, ax, dt) in shapes.items()}
+    V = 2 if cfg.family == "tiny" else cfg.vocab_size
+
+    # the token path exactly as the engine runs it: ONE jitted masked
+    # step (same primitive sequence as the scan body), driven from host
+    @jax.jit
+    def token_step(cache, tok, idx, sel):
+        logits, new_cache = model.decode_step(params, cache, tok, idx,
+                                              cfg, 0)
+        def pick(new, old, ax):
+            j = list(ax).index("batch")
+            m = sel.reshape([-1 if d == j else 1
+                             for d in range(new.ndim)])
+            return jnp.where(m, new, old)
+        cache = {k: pick(new_cache[k], cache[k], axes[k])
+                 for k in new_cache}
+        return logits[:, 0].astype(jnp.float32), cache
+
+    cache = cache0
+    lg = np.zeros((B, V), np.float32)
+    for i in range(C):
+        sel = jnp.asarray(i < np.asarray(n_valid))
+        row, cache = token_step(cache, tokens[:, i:i + 1],
+                                start + jnp.int32(i), sel)
+        take = i == np.asarray(n_valid) - 1
+        lg[take] = np.asarray(row)[take]
+    for k in cache:
+        np.testing.assert_array_equal(np.asarray(cache_scan[k]),
+                                      np.asarray(cache[k]), err_msg=k)
+    np.testing.assert_array_equal(np.asarray(lg_scan), lg)
+
+
+def test_paged_page_reuse_no_stale_cache():
+    """A tight page budget forces physical pages to be freed and handed
+    to later requests; a request served on RECYCLED pages generates the
+    same tokens as the same request served alone — zero-on-alloc leaves
+    nothing of the previous tenant behind."""
+    params = params_for(QWEN)
+    eng = ServeEngine(QWEN, params, n_slots=2, kv="paged", page_size=4,
+                      page_budget=6, chunk_size=8)
+    reqs = tuple(Request(rid, 0, 5 + rid % 4, 2 + rid % 3)
+                 for rid in range(6))
+    crowded = eng.serve(RequestTrace(11, reqs))
+    assert crowded.peak_pages <= 6          # the budget actually binds
+    assert len({r.rid for r in crowded.results}) == 6
+    for req in reqs:
+        alone = eng.serve(RequestTrace(11, (req,)))
+        got = next(r for r in crowded.results if r.rid == req.rid)
+        assert got.tokens == alone.results[0].tokens, req
+
+
+def test_paged_capacity_bounded_by_tokens_not_slots():
+    """The pool admits by TOKENS IN FLIGHT: a budget far below
+    n_slots * ceil(S/page) still serves the whole trace (admission
+    blocks FIFO until completions free pages), and a long request never
+    deadlocks the queue. Tokens stay bit-identical to the dense run."""
+    params = params_for(QWEN)
+    reqs = (Request(0, 0, 40, 8),) + tuple(
+        Request(rid, 0, 4, 3) for rid in range(1, 7))
+    trace = RequestTrace(13, reqs)
+    dense = ServeEngine(QWEN, params, n_slots=4, kv="dense",
+                        chunk_size=8).serve(trace)
+    # dense-parity capacity would be 4 * ceil(47/4) = 48 pages; 16 is
+    # enough for the long request (12 pages) plus one short at a time
+    paged = ServeEngine(QWEN, params, n_slots=4, kv="paged", page_size=4,
+                        page_budget=16, chunk_size=8).serve(trace)
+    assert [r.tokens for r in paged.results] == \
+           [r.tokens for r in dense.results]
+    assert all(r.status == "ok" for r in paged.results)
+    assert paged.peak_pages <= 16
+    assert paged.n_pages == 16
+
+
+def test_paged_rejects_never_fitting_request():
+    params = params_for(QWEN)
+    eng = ServeEngine(QWEN, params, n_slots=2, kv="paged", page_size=4,
+                      page_budget=3)
+    with pytest.raises(ValueError, match="pages"):
+        eng.serve(RequestTrace(1, (Request(0, 0, 30, 4),)))
+
+
+def test_chunked_ttft_beats_token_and_is_recorded():
+    """Long prompts: chunked admission reaches the first token in
+    ceil(P/chunk) cycles instead of P — TTFT must drop at the recorded
+    per-request level, and the report quantiles must be populated."""
+    params = params_for(TINY)
+    trace = RequestTrace(3, tuple(Request(rid, 0, 64, 4)
+                                  for rid in range(4)))
+    tok = ServeEngine(TINY, params, n_slots=4,
+                      prefill="token").serve(trace)
+    chk = ServeEngine(TINY, params, n_slots=4, prefill="chunked",
+                      chunk_size=16).serve(trace)
+    for r in chk.results + tok.results:
+        assert r.first_token_cycle >= 0
+        assert r.ttft_cycles >= 1 and r.ttft_s >= 0.0
+    assert chk.ttft_quantile(0.99) < tok.ttft_quantile(0.99)
+    assert chk.ttft_quantile(0.5) <= 64 // 16 + 1
+    assert [r.tokens for r in chk.results] == \
+           [r.tokens for r in tok.results]
+    d = chk.to_dict()
+    assert d["p50_ttft_cycles"] == chk.ttft_quantile(0.5)
+    assert d["p99_ttft_s"] >= 0.0
+
+
+@pytest.mark.parametrize("prefill", ["chunked", "token"])
+def test_replay_deterministic_and_billing_exact_per_prefill(prefill):
+    """Replay determinism and the exact-billing identity hold under
+    BOTH admission planes, on a harsh ARQ link with real abandonments —
+    and the two planes' bills agree request for request."""
+    params = params_for(TINY)
+    tr = make_trace(3, 12, prompt_lens=(3, 40), new_tokens=(2, 4),
+                    snr_dbs=(5.0,))
+    eng = ServeEngine(TINY, params, n_slots=4, radio=HARSH,
+                      max_link_tries=2, prefill=prefill)
+    a, b = eng.serve(tr), eng.serve(tr)
+    assert [r.tokens for r in a.results] == [r.tokens for r in b.results]
+    assert _bill_rows(a) == _bill_rows(b)
+    for r in a.results:
+        assert (r.bits - r.erased_bits) + r.erased_bits == r.bits
+        if r.status == "uplink_erased":
+            assert r.tokens == () and r.erased_bits > 0
+    other = ServeEngine(TINY, params, n_slots=4, radio=HARSH,
+                        max_link_tries=2,
+                        prefill="token" if prefill == "chunked"
+                        else "chunked")
+    assert _bill_rows(other.serve(tr)) == _bill_rows(a)
+
+
+def test_engine_validates_prefill_kv_flags():
+    params = params_for(TINY)
+    with pytest.raises(ValueError, match="prefill"):
+        ServeEngine(TINY, params, prefill="speculative")
+    with pytest.raises(ValueError, match="kv"):
+        ServeEngine(TINY, params, kv="compressed")
+
+
+def test_page_pool_deterministic_alloc_and_guards():
+    from repro.serve import PagePool, pages_needed, prefill_buckets, \
+        bucket_for
+    pool = PagePool(6)
+    a = pool.alloc(3)
+    assert a == [0, 1, 2] and pool.used_pages == 3
+    pool.free([1])
+    assert pool.alloc(2) == [1, 3]          # lowest free id first
+    assert pool.peak_pages == 4             # 3 held, -1 freed, +2 held
+    assert not pool.can_alloc(3)
+    with pytest.raises(RuntimeError, match="exhausted"):
+        pool.alloc(3)
+    with pytest.raises(RuntimeError, match="double free"):
+        pool.free([5])
+    assert pages_needed(5, 3, 4) == 2       # cols 0..6 -> 2 pages
+    assert pages_needed(1, 1, 4) == 1
+    assert prefill_buckets(32) == (4, 8, 16, 32)
+    assert prefill_buckets(20) == (4, 8, 16, 32)
+    assert prefill_buckets(1) == (1,)
+    assert bucket_for(5, (4, 8, 16)) == 8
